@@ -1,0 +1,37 @@
+"""Appendix A.1: impact of model loading times.
+
+When load time >> interactive TTFT SLO, over-provisioning (and therefore
+Chiron's mixed-instance multiplexing) is essential; when load time is
+small (<3B-parameter models), elastic scaling suffices and the global
+autoscaler's value shrinks while local batch adaptation stays useful.
+Sweep the instance load time and report over-provisioned GPU hours and
+SLO attainment at fixed burstiness. Also exercises auto-Theta (the paper's
+'Theta from historical arrival spikes')."""
+from benchmarks.common import Row, chiron, run_sim
+from repro.sim.cluster import SimCluster
+from repro.sim.simulator import default_perf_factory, simulate
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def run():
+    rows = []
+    for load in (2.0, 15.0, 60.0):
+        spec = WorkloadSpec(n_requests=4000, arrival_rate=80.0,
+                            process="gamma", cv=6.0, model="llama-8b",
+                            seed=12)
+        reqs = generate(spec)
+        ctrl = chiron("llama-8b", auto_theta=True, theta_refresh=20.0)
+        cluster = SimCluster(default_perf_factory(), max_chips=400,
+                             load_time=load)
+        import time as _t
+        t0 = _t.perf_counter()
+        res = simulate(reqs, ctrl, cluster, max_time=900, warm_start=1)
+        wall = (_t.perf_counter() - t0) * 1e6
+        rows.append(Row(
+            f"appendix_a1/load{load:g}s", wall,
+            slo_pct=round(100 * res.slo_attainment(), 1),
+            gpu_hours=round(res.gpu_hours(), 3),
+            peak_chips=res.peak_chips,
+            theta_final=round(ctrl.interactive_scaler.theta, 3),
+            p99_ttft_s=round(res.p99_ttft(), 2)))
+    return rows

@@ -1,0 +1,43 @@
+"""Beyond-paper: Chiron's local autoscaler across ALL assigned
+architectures (the paper evaluates Llama only).
+
+For each assigned architecture, run Algorithm 1 in closed loop against
+that architecture's perf model and report the converged batch size, its
+distance to the analytic optimum, and the serving character the
+controller discovered — e.g. attention-free mamba2 supports much larger
+batches at the same ITL SLO because its state is O(1) (DESIGN.md §5)."""
+import time
+
+from benchmarks.common import Row
+from repro.configs import ASSIGNED_ARCHS
+from repro.core.backpressure import LocalMetrics
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.sim.perf_model import PerfModel
+
+ITL_SLO = 0.2
+CTX = 1024.0
+
+
+def run():
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        pm = PerfModel(arch)
+        t0 = time.perf_counter()
+        s = LocalAutoscaler(itl_slo=ITL_SLO, init_batch=8, max_batch=8192)
+        for _ in range(80):
+            b = s.max_batch_size
+            s.update(LocalMetrics(pm.itl(b, CTX), pm.throughput(b, CTX),
+                                  ITL_SLO))
+        us = (time.perf_counter() - t0) * 1e6
+        tail = s.history[-8:]
+        conv = sum(tail) / len(tail)
+        opt = pm.optimal_batch(ITL_SLO, CTX, max_batch=8192)
+        rows.append(Row(
+            f"arch_sweep/{arch}", us,
+            chips=pm.chips,
+            converged_batch=round(conv),
+            optimal_batch=opt,
+            rel_err_pct=round(100 * abs(conv - opt) / max(opt, 1), 1),
+            itl_ms=round(pm.itl(int(conv), CTX) * 1e3, 1),
+            tok_per_s=round(pm.throughput(int(conv), CTX))))
+    return rows

@@ -1,0 +1,70 @@
+"""Shared benchmark helpers: run wrappers, tuned-Llumnix sweep, CSV rows."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.serving.request import RequestState, RequestType
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController, LlumnixController
+from repro.sim.metrics import RunResult
+from repro.sim.simulator import default_perf_factory, simulate
+from repro.sim.workload import WorkloadSpec, generate
+
+MAX_CHIPS = 400          # elastic-cloud cap (paper: 50 A100s; we budget
+                         # the v5e-chip equivalent)
+
+
+class Row:
+    """One CSV output row: name,us_per_call,derived."""
+
+    def __init__(self, name: str, us_per_call: float, **derived):
+        self.name = name
+        self.us = us_per_call
+        self.derived = derived
+
+    def print(self):
+        d = ";".join(f"{k}={v}" for k, v in self.derived.items())
+        print(f"{self.name},{self.us:.1f},{d}")
+
+
+def run_sim(spec: WorkloadSpec, controller, *, max_time=1800.0,
+            warm_start=2, max_chips=MAX_CHIPS, **kw) -> Tuple[RunResult, float]:
+    reqs = generate(spec)
+    cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
+    t0 = time.perf_counter()
+    res = simulate(reqs, controller, cluster, max_time=max_time,
+                   warm_start=warm_start, **kw)
+    wall = time.perf_counter() - t0
+    return res, wall
+
+
+def chiron(model="llama-8b", **kw) -> ChironController:
+    return ChironController(model=model, **kw)
+
+
+def llumnix(model="llama-8b", **kw) -> LlumnixController:
+    return LlumnixController(model=model, **kw)
+
+
+def llumnix_tuned(spec: WorkloadSpec, model="llama-8b",
+                  grid=None) -> LlumnixController:
+    """Per-workload parameter sweep (the paper's 'Llumnix (tuned)')."""
+    grid = grid or [
+        dict(low=0.2, high=0.6, static_batch=64),
+        dict(low=0.3, high=0.8, static_batch=128),
+        dict(low=0.4, high=0.9, static_batch=256),
+        dict(low=0.3, high=0.8, static_batch=320),
+    ]
+    best, best_key = None, None
+    for params in grid:
+        res, _ = run_sim(spec, llumnix(model, **params), max_time=1200)
+        key = (round(res.slo_attainment(), 3), res.request_throughput())
+        if best_key is None or key > best_key:
+            best_key, best = key, params
+    return llumnix(model, **best)
+
+
+def goodput(res: RunResult) -> float:
+    ok = sum(r.slo_met() for r in res.requests)
+    return ok / res.gpu_hours() if res.gpu_hours() > 0 else 0.0

@@ -1,0 +1,40 @@
+"""Fig. 10 (W_B): interactive + batch workload, batch-queue sweep with a
+fixed interactive arrival rate; Chiron vs Llumnix (untuned + tuned)."""
+from benchmarks.common import Row, chiron, llumnix, llumnix_tuned, run_sim
+from repro.serving.request import RequestType
+from repro.sim.workload import WorkloadSpec
+
+# interactive rate fixed (paper: 50 rps for 8B, 10 rps for 70B); batch
+# queue dumped at t=0, sweep its size
+SETUPS = {"llama-8b": (50.0, (5_000, 20_000, 60_000)),
+          "llama-70b": (10.0, (2_000, 8_000, 20_000))}
+
+
+def _spec(model, rate, qsize, seed=0):
+    return WorkloadSpec(n_requests=600, arrival_rate=rate,
+                        interactive_frac=1.0, batch_queue_size=qsize,
+                        batch_ttft_slo=1800.0, model=model, seed=seed)
+
+
+def run():
+    rows = []
+    for model, (rate, qsizes) in SETUPS.items():
+        for q in qsizes:
+            spec = _spec(model, rate, q)
+            ctrls = {
+                "chiron": chiron(model),
+                "llumnix": llumnix(model),
+                "llumnix_tuned": llumnix_tuned(
+                    _spec(model, rate, min(qsizes), seed=1), model),
+            }
+            for name, ctrl in ctrls.items():
+                res, wall = run_sim(spec, ctrl, max_time=2400)
+                rows.append(Row(
+                    f"fig10/{model}/q{q}/{name}", wall * 1e6,
+                    slo_pct=round(100 * res.slo_attainment(), 1),
+                    slo_batch_pct=round(
+                        100 * res.slo_attainment(RequestType.BATCH), 1),
+                    per_inst_tok_s=round(res.per_instance_throughput()),
+                    completed_pct=round(100 * res.completion_rate(), 1),
+                    gpu_hours=round(res.gpu_hours(), 3)))
+    return rows

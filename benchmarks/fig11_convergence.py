@@ -1,0 +1,56 @@
+"""Fig. 11 + Fig. 12: local-autoscaler batch-size convergence across
+serving-optimization configurations, and convergence time (8B vs 70B).
+
+The update interval is the instance's own step time (observe-and-adapt
+cadence), so the 70B converges ~slower in wall time than the 8B exactly as
+the paper reports."""
+import time
+
+from benchmarks.common import Row
+from repro.core.backpressure import LocalMetrics
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.sim.perf_model import PerfModel
+
+CONFIGS = {
+    "baseline": dict(),
+    "prefix_caching": dict(prefix_caching=True),
+    "spec_decode": dict(speculative_decoding=True),
+    "both": dict(prefix_caching=True, speculative_decoding=True),
+}
+
+
+def _converge(pm: PerfModel, itl_slo: float, max_updates=200):
+    s = LocalAutoscaler(itl_slo=itl_slo, init_batch=8, max_batch=4096)
+    wall = 0.0
+    conv_t = None
+    for i in range(max_updates):
+        b = s.max_batch_size
+        itl = pm.itl(b, 1024.0)
+        wall += max(itl, 1e-3) * 10       # update every ~10 decode steps
+        s.update(LocalMetrics(itl, pm.throughput(b, 1024.0), itl_slo))
+        if conv_t is None and s.converged(window=8, tol=0.15):
+            conv_t = wall
+    tail = s.history[-8:]
+    return sum(tail) / len(tail), conv_t or wall
+
+
+def run():
+    rows = []
+    for model in ("llama-8b", "llama-70b"):
+        for cfg_name, kw in CONFIGS.items():
+            pm = PerfModel(model, **kw)
+            t0 = time.perf_counter()
+            final_b, conv_t = _converge(pm, itl_slo=0.2)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(Row(f"fig11/{model}/{cfg_name}", us,
+                            converged_batch=round(final_b),
+                            convergence_s=round(conv_t, 1)))
+    # fig12 headline: convergence time ratio 70B/8B
+    b8 = PerfModel("llama-8b")
+    b70 = PerfModel("llama-70b")
+    _, t8 = _converge(b8, 0.2)
+    _, t70 = _converge(b70, 0.2)
+    rows.append(Row("fig12/convergence_ratio", 0.0,
+                    t_8b_s=round(t8, 1), t_70b_s=round(t70, 1),
+                    ratio=round(t70 / max(t8, 1e-9), 2)))
+    return rows

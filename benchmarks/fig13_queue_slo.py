@@ -1,0 +1,21 @@
+"""Fig. 13: queue size maintained for varying batch TTFT SLO — longer
+deadlines let Chiron hold bigger queues and multiplex more."""
+from benchmarks.common import Row, chiron, run_sim
+from repro.sim.workload import WorkloadSpec
+
+
+def run():
+    rows = []
+    for ttft in (600.0, 1800.0, 3600.0):
+        spec = WorkloadSpec(n_requests=600, arrival_rate=20.0,
+                            interactive_frac=1.0, batch_queue_size=15000,
+                            batch_ttft_slo=ttft, model="llama-8b", seed=6)
+        res, wall = run_sim(spec, chiron(), max_time=2400)
+        qmax = max((p.q_batch for p in res.timeline), default=0)
+        qmean = sum(p.q_batch for p in res.timeline) / max(len(res.timeline), 1)
+        rows.append(Row(f"fig13/ttft{ttft:g}", wall * 1e6,
+                        mean_queue=round(qmean),
+                        peak_queue=qmax,
+                        gpu_hours=round(res.gpu_hours(), 3),
+                        batch_done_pct=round(100 * res.completion_rate(), 1)))
+    return rows

@@ -1,0 +1,42 @@
+"""Fig. 14: queue waiting-time estimation accuracy (R^2) vs queue size."""
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core.waiting_time import OutputLengthModel, WaitingTimeEstimator
+from repro.sim.workload import OUTPUT_MU, OUTPUT_SIGMA
+
+
+def _r2(qsize: int, theta: float, trials: int = 200, seed: int = 0) -> float:
+    """R^2 of estimated vs actual waiting time across requests sitting at
+    random positions of a queue of size ``qsize`` (paper Fig. 14: with more
+    requests ahead, the CLT tightens the per-request estimate)."""
+    rng = np.random.default_rng(seed)
+    m = OutputLengthModel()
+    for x in rng.lognormal(OUTPUT_MU, OUTPUT_SIGMA, 500):
+        m.observe(int(min(x, 2048)))
+    est = WaitingTimeEstimator(output_model=m)
+    actual, pred = [], []
+    for _ in range(trials):
+        q = int(rng.integers(1, qsize + 1))     # requests ahead
+        outs = np.clip(rng.lognormal(OUTPUT_MU, OUTPUT_SIGMA, q),
+                       4, 2048).astype(int)
+        actual.append(outs.sum() / theta)
+        pred.append(est.waiting_time(q, theta))
+    actual = np.asarray(actual)
+    pred = np.asarray(pred)
+    ss_res = np.sum((actual - pred) ** 2)
+    ss_tot = np.sum((actual - actual.mean()) ** 2)
+    return float(1 - ss_res / ss_tot) if ss_tot > 0 else 1.0
+
+
+def run():
+    rows = []
+    for model, theta in (("llama-8b", 12000.0), ("llama-70b", 10000.0)):
+        for q in (10, 50, 200, 500, 2000):
+            t0 = time.perf_counter()
+            r2 = _r2(q, theta)
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append(Row(f"fig14/{model}/q{q}", us, r2=round(r2, 4)))
+    return rows

@@ -1,0 +1,42 @@
+"""Fig. 16 (table): ITL SLO sweep for Llama-70B — %SLOs met, throughput,
+GPUs required (relative to the tightest SLO)."""
+from benchmarks.common import Row, chiron, run_sim
+from repro.serving.request import INTERACTIVE_ITL_SLO, SLO
+from repro.sim.workload import WorkloadSpec, generate
+
+# The paper sweeps 0.1..100 s on A100s where high-batch ITL is ~100-200 ms.
+# Our v5e-16 instances decode ~10x faster (Fig. 3 bench), so the equivalent
+# sweep — from "ITL binds hard" to "never binds" — is scaled down 10x.
+SLOS = (0.01, 0.02, 0.05, 0.2, 2.0)
+
+
+def run():
+    rows = []
+    base_chips = None
+    for itl_slo in SLOS:
+        spec = WorkloadSpec(n_requests=800, arrival_rate=40.0,
+                            model="llama-70b", seed=2)
+        ctrl = chiron("llama-70b", itl_slo_interactive=itl_slo)
+        # patch request SLOs to the swept value
+        res, wall = run_sim_with_slo(spec, ctrl, itl_slo)
+        chips = max(res.peak_chips, 1)
+        if base_chips is None:
+            base_chips = chips
+        rows.append(Row(f"fig16/itl_slo_{itl_slo:g}", wall * 1e6,
+                        slo_pct=round(100 * res.slo_attainment(), 1),
+                        req_per_s=round(res.request_throughput(), 2),
+                        gpus_rel_pct=round(100 * chips / base_chips)))
+    return rows
+
+
+def run_sim_with_slo(spec, ctrl, itl_slo):
+    import time as _t
+    from repro.sim.cluster import SimCluster
+    from repro.sim.simulator import default_perf_factory, simulate
+    reqs = generate(spec)
+    for r in reqs:
+        r.slo = SLO(r.slo.ttft, itl_slo)
+    cluster = SimCluster(default_perf_factory(), max_chips=400)
+    t0 = _t.perf_counter()
+    res = simulate(reqs, ctrl, cluster, max_time=900, warm_start=2)
+    return res, _t.perf_counter() - t0

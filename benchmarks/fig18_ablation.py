@@ -1,0 +1,30 @@
+"""Fig. 18: ablation — full Chiron vs Local-only (utilization global) vs
+Global-only (static batch) vs Llumnix, on the mixed W_B workload."""
+from benchmarks.common import Row, chiron, llumnix, run_sim
+from repro.serving.request import RequestType
+from repro.sim.workload import WorkloadSpec
+
+
+def run():
+    rows = []
+    # sized so the warm-start capacity alone cannot make the batch deadline
+    # (forces the global level) and a static batch size leaves throughput
+    # on the table (exposes the local level)
+    spec_kw = dict(n_requests=600, arrival_rate=25.0, interactive_frac=1.0,
+                   batch_queue_size=20000, batch_ttft_slo=120.0,
+                   model="llama-8b", seed=4)
+    arms = {
+        "chiron_full": chiron(),
+        "chiron_local_only": chiron(global_enabled=False),
+        "chiron_global_only": chiron(local_enabled=False, static_batch=64),
+        "llumnix": llumnix(),
+    }
+    for name, ctrl in arms.items():
+        res, wall = run_sim(WorkloadSpec(**spec_kw), ctrl, max_time=1800)
+        rows.append(Row(f"fig18/{name}", wall * 1e6,
+                        slo_pct=round(100 * res.slo_attainment(), 1),
+                        batch_ttft_pct=round(
+                            100 * res.ttft_attainment(RequestType.BATCH), 1),
+                        per_inst_tok_s=round(res.per_instance_throughput()),
+                        gpu_hours=round(res.gpu_hours(), 3)))
+    return rows

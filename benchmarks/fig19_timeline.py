@@ -1,0 +1,41 @@
+"""Fig. 19 / Appendix A.2: GPUs over time — interactive stream, then a
+large batch dump; Chiron multiplexes + bulk-adds near deadline, Llumnix
+scales out immediately. Also emits the Fig. 2 (right) headline (GPU
+savings). Request-group hysteresis has its own microbench (fig6)."""
+from benchmarks.common import MAX_CHIPS, Row, chiron, llumnix, run_sim
+from repro.sim.workload import WorkloadSpec
+
+
+def _spec(seed=5):
+    return WorkloadSpec(n_requests=2000, arrival_rate=30.0,
+                        interactive_frac=1.0, batch_queue_size=30000,
+                        batch_ttft_slo=1800.0, model="llama-8b", seed=seed)
+
+
+def run():
+    rows = []
+    runs = {}
+    for name, ctrl in (("chiron", chiron()), ("llumnix", llumnix())):
+        res, wall = run_sim(_spec(), ctrl, max_time=2400)
+        runs[name] = res
+        # timeline: chips at 8 evenly spaced marks over the run
+        step = max(res.duration / 8, 1.0)
+        marks = {}
+        for p in res.timeline:
+            key = int(p.t // step)
+            marks.setdefault(key, p.chips)
+        tl = ";".join(f"t{int(step*k)}s:{v}"
+                      for k, v in sorted(marks.items())[:9])
+        rows.append(Row(f"fig19/{name}", wall * 1e6,
+                        gpu_hours=round(res.gpu_hours(), 3),
+                        peak_chips=res.peak_chips,
+                        hysteresis=round(res.hysteresis, 2),
+                        scale_ups=res.scale_ups,
+                        timeline=tl.replace(";", "|")))
+    c, l = runs["chiron"], runs["llumnix"]
+    rows.append(Row("fig2/gpu_savings", 0.0,
+                    chiron_gpu_h=round(c.gpu_hours(), 3),
+                    llumnix_gpu_h=round(l.gpu_hours(), 3),
+                    savings_pct=round(100 * (1 - c.gpu_hours() /
+                                             max(l.gpu_hours(), 1e-9)), 1)))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 3: inter-token latency and token throughput vs batch size
+(Llama-8B and Llama-70B), from the roofline-calibrated perf model."""
+import time
+
+from benchmarks.common import Row
+from repro.sim.perf_model import PerfModel
+
+
+def run():
+    rows = []
+    for model in ("llama-8b", "llama-70b"):
+        pm = PerfModel(model)
+        t0 = time.perf_counter()
+        pts = [(b, pm.itl(b, 1024.0), pm.throughput(b, 1024.0))
+               for b in (1, 8, 32, 64, 128, 256, 320, 384, 512, 1024)]
+        us = (time.perf_counter() - t0) * 1e6 / len(pts)
+        peak_b, _, peak_thr = max(pts, key=lambda p: p[2])
+        for b, itl, thr in pts:
+            rows.append(Row(f"fig3/{model}/b{b}", us,
+                            itl_ms=round(itl * 1e3, 2),
+                            tok_per_s=round(thr),
+                            inflection_batch=peak_b))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 9 (W_A): interactive-only workload, arrival-rate sweep for the
+small/large/mixed model configurations; SLO attainment + per-instance
+throughput for Chiron vs Llumnix (untuned + tuned)."""
+from benchmarks.common import Row, chiron, llumnix, llumnix_tuned, run_sim
+from repro.sim.workload import WorkloadSpec
+
+RATES = {"llama-8b": (40.0, 120.0, 240.0), "llama-70b": (10.0, 25.0, 50.0)}
+N_REQ = 1200
+
+
+def _spec(model, rate, seed=0):
+    return WorkloadSpec(n_requests=N_REQ, arrival_rate=rate,
+                        interactive_frac=1.0, model=model, seed=seed)
+
+
+def run():
+    rows = []
+    for model, rates in RATES.items():
+        for rate in rates:
+            spec = _spec(model, rate)
+            ctrls = {
+                "chiron": chiron(model),
+                "llumnix": llumnix(model),
+                "llumnix_tuned": llumnix_tuned(_spec(model, rate, seed=1),
+                                               model),
+            }
+            for name, ctrl in ctrls.items():
+                res, wall = run_sim(spec, ctrl, max_time=900)
+                rows.append(Row(
+                    f"fig9/{model}/rate{rate:g}/{name}", wall * 1e6,
+                    slo_pct=round(100 * res.slo_attainment(), 1),
+                    per_inst_tok_s=round(res.per_instance_throughput()),
+                    peak_chips=res.peak_chips,
+                    gpu_hours=round(res.gpu_hours(), 3)))
+    return rows

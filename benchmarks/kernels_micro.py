@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: wall time per call of the jitted ref backend on
+CPU (the TPU kernels are dry-run-only here), plus FLOP-derived intensity."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Row
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    B, n_kv, group, D, page, mp = 8, 8, 4, 128, 16, 64
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, n_kv, group, D), jnp.float32)
+    kp = jax.random.normal(ks[1], (512, page, n_kv, D), jnp.float32)
+    vp = jax.random.normal(ks[2], (512, page, n_kv, D), jnp.float32)
+    bt = jax.random.randint(ks[3], (B, mp), 0, 512, dtype=jnp.int32)
+    ln = jnp.full((B,), mp * page, jnp.int32)
+    us = _time(ops.paged_attention, q, kp, vp, bt, ln, backend="ref")
+    flops = 2 * 2 * B * n_kv * group * D * mp * page
+    rows.append(Row("kernels/paged_attention_ref", us,
+                    gflops=round(flops / 1e9, 2),
+                    seq=mp * page))
+
+    S = 2048
+    q2 = jax.random.normal(ks[0], (1, 8, S, 128), jnp.float32)
+    k2 = jax.random.normal(ks[1], (1, 2, S, 128), jnp.float32)
+    v2 = jax.random.normal(ks[2], (1, 2, S, 128), jnp.float32)
+    us = _time(ops.flash_prefill, q2, k2, v2, backend="ref")
+    rows.append(Row("kernels/flash_prefill_ref", us,
+                    gflops=round(2 * 2 * 8 * S * S * 128 / 2 / 1e9, 2)))
+
+    b, s, h, p, n = 2, 2048, 16, 64, 64
+    x = jax.random.normal(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, s, n))
+    Cm = jax.random.normal(ks[0], (b, s, n))
+    us = _time(ops.ssd_scan, x, dt, A, Bm, Cm, chunk=128, backend="ref")
+    rows.append(Row("kernels/ssd_scan_ref", us, seq=s, heads=h))
+    return rows

@@ -1,0 +1,38 @@
+"""§Roofline: read the dry-run JSONL records and emit the per-(arch x
+shape) roofline table (terms in seconds, bottleneck, useful-FLOPs ratio)."""
+import json
+import os
+
+from benchmarks.common import Row
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+RESULTS = os.path.join(_DIR, "dryrun_optimized.jsonl")
+_FALLBACK = os.path.join(_DIR, "dryrun_single_pod.jsonl")
+
+
+def run():
+    rows = []
+    path = RESULTS if os.path.exists(RESULTS) else _FALLBACK
+    if not os.path.exists(path):
+        rows.append(Row("roofline/missing", 0.0,
+                        note="run repro.launch.dryrun --all --out first"))
+        return rows
+    with open(path) as f:
+        recs = [json.loads(l) for l in f if l.strip()]
+    # keep the latest record per (arch, shape)
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"])] = r
+    for (arch, shape), r in sorted(latest.items()):
+        if r["status"] != "ok":
+            rows.append(Row(f"roofline/{arch}/{shape}", 0.0, status="FAIL"))
+            continue
+        rows.append(Row(
+            f"roofline/{arch}/{shape}", r.get("total_s", 0) * 1e6,
+            compute_ms=round(r["compute_s"] * 1e3, 3),
+            memory_ms=round(r["memory_s"] * 1e3, 3),
+            collective_ms=round(r["collective_s"] * 1e3, 3),
+            bottleneck=r["bottleneck"],
+            useful=round(r["useful_flops_ratio"], 3),
+            mem_gib=round(r["bytes_per_device"] / 2**30, 2)))
+    return rows

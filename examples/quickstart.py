@@ -1,0 +1,53 @@
+"""Quickstart: the public API in five minutes.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. pick an assigned architecture config (full or reduced),
+2. build the model, run a forward pass,
+3. prefill a prompt and decode a few tokens through the KV cache,
+4. score a batch (training loss),
+5. inspect Chiron's autoscaler on synthetic metrics.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.core.backpressure import LocalMetrics
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.models import get_model
+
+print("assigned architectures:", ", ".join(list_archs()))
+
+# full config (what the dry-run lowers) vs reduced config (CPU-runnable)
+full = get_config("granite-8b")
+print(f"\ngranite-8b full: {full.n_layers}L d={full.d_model} "
+      f"params={full.param_count()/1e9:.1f}B [{full.source}]")
+
+cfg = get_smoke_config("granite-8b")
+model = get_model(cfg)
+params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+print(f"reduced: {cfg.n_layers}L d={cfg.d_model} "
+      f"params={cfg.param_count()/1e6:.1f}M")
+
+# forward + loss
+batch = model.example_batch(batch=2, seq=32, key=jax.random.PRNGKey(1),
+                            dtype=jnp.float32)
+logits, aux = model.forward(params, batch)
+print(f"\nforward: logits {logits.shape}, loss "
+      f"{float(model.loss(params, batch)):.3f}")
+
+# prefill + decode (the serving path)
+last, cache = model.prefill(params, batch, cache_len=48, dtype=jnp.float32)
+tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+for i in range(4):
+    logits_step, cache = model.decode_step(params, tok, cache)
+    tok = jnp.argmax(logits_step, -1)[:, None].astype(jnp.int32)
+print(f"decoded 4 tokens, cache pos now {cache['pos']}")
+
+# Chiron's local autoscaler (Algorithm 1) reacting to backpressure
+scaler = LocalAutoscaler(itl_slo=0.2, init_batch=8)
+print("\nAlgorithm 1 (batch-size autoscaling):")
+for itl in (0.05, 0.05, 0.1, 0.25, 0.15):
+    bs = scaler.update(LocalMetrics(observed_itl=itl, throughput=1000.0,
+                                    itl_slo=0.2))
+    print(f"  observed ITL {itl*1e3:4.0f}ms -> max batch size {bs}")

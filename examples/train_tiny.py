@@ -1,0 +1,34 @@
+"""End-to-end training driver: ~100M-parameter model, few hundred steps.
+
+  PYTHONPATH=src python examples/train_tiny.py [--steps 200]
+
+Exercises the full training substrate (model stack, AdamW, remat option,
+checkpointing) on CPU with an OLMo-family config scaled to ~100M params.
+"""
+import argparse
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    import sys
+    sys.argv = ["train", "--arch", "olmo-1b", "--steps", str(args.steps),
+                "--batch", "8", "--seq", "128", "--lr", "1e-3",
+                "--checkpoint", "/tmp/repro_tiny_ckpt"]
+    # ~100M variant of the olmo family
+    from repro.configs import olmo_1b
+    orig = olmo_1b.smoke_config
+    olmo_1b.smoke_config = lambda: olmo_1b.CONFIG.with_(
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, d_ff=2048,
+        vocab_size=32000)
+    try:
+        train_mod.main()
+    finally:
+        olmo_1b.smoke_config = orig
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Dev check: real continuous-batching engine + local autoscaler loop."""
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.backpressure import LocalMetrics
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.serving.engine import Engine
+from repro.serving.request import make_batch, make_interactive
+
+cfg = get_smoke_config("granite-8b")
+eng = Engine(cfg, max_slots=4, max_len=96, dtype=jnp.float32)
+
+reqs = [make_interactive(16, 8), make_interactive(24, 12),
+        make_batch(16, 20), make_batch(16, 20), make_batch(16, 6)]
+for r in reqs:
+    eng.submit(r)
+
+scaler = LocalAutoscaler(itl_slo=0.5, init_batch=2, max_batch=4)
+steps = 0
+while (eng.waiting or eng.n_active) and steps < 200:
+    stats = eng.step()
+    steps += 1
+    if steps % 5 == 0:
+        bs = scaler.update(LocalMetrics(stats.itl, stats.throughput or 1.0, 0.5))
+        eng.set_max_batch_size(bs)
+
+fin = [r for r in reqs if r.state.value == "finished"]
+print(f"steps={steps} finished={len(fin)}/{len(reqs)} "
+      f"final_bs={scaler.max_batch_size}")
+assert len(fin) == len(reqs), [r.state for r in reqs]
+for r in reqs:
+    assert r.tokens_generated >= r.output_len
+    assert r.first_token_time is not None
+print("preemptions:", [r.preemptions for r in reqs])
+print("ENGINE OK")

@@ -1,0 +1,32 @@
+"""Dev-time quick check: every assigned arch forward/prefill/decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED_ARCHS, get_smoke_config
+from repro.models import get_model
+
+archs = sys.argv[1:] or ASSIGNED_ARCHS
+for arch in archs:
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key, dtype=jnp.float32)
+    B, S = 2, 64
+    batch = model.example_batch(B, S, key, dtype=jnp.float32)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size), (arch, logits.shape)
+    assert not bool(jnp.any(jnp.isnan(logits))), f"{arch}: NaN in forward"
+    loss = model.loss(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    last, cache = model.prefill(params, batch, dtype=jnp.float32)
+    assert last.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    lg2, cache = model.decode_step(params, tok, cache)
+    assert lg2.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(lg2))), f"{arch}: NaN in decode"
+    # consistency: prefill last-token logits == forward last-position logits
+    err = float(jnp.max(jnp.abs(last - logits[:, -1])))
+    print(f"{arch:20s} ok  loss={float(loss):.3f}  prefill/fwd err={err:.2e}")
+print("ALL OK")

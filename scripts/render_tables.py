@@ -1,0 +1,57 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run JSONL records."""
+import json
+import sys
+
+
+def load(path):
+    latest = {}
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                r = json.loads(line)
+                latest[(r["arch"], r["shape"])] = r
+    return latest
+
+
+HBM_GIB = 16.0  # v5e
+
+
+def table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | mesh | compute | memory | collective | "
+          "bottleneck | useful | GiB/dev | fits HBM | status |")
+    print("|---|---|---|---:|---:|---:|---|---:|---:|---|---|")
+    for (a, s), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | {r['mesh']} | | | | | | | | FAIL |")
+            continue
+        gib = r["bytes_per_device"] / 2**30
+        print(f"| {a} | {s} | {r['mesh']} "
+              f"| {r['compute_s']*1e3:.2f} ms | {r['memory_s']*1e3:.2f} ms "
+              f"| {r['collective_s']*1e3:.2f} ms | {r['bottleneck']} "
+              f"| {r['useful_flops_ratio']:.2f} "
+              f"| {gib:.2f} | {'yes' if gib <= HBM_GIB else 'NO'} | ok |")
+
+
+def multipod_table(recs, title):
+    print(f"\n### {title}\n")
+    print("| arch | shape | mesh | GiB/dev | compile | status |")
+    print("|---|---|---|---:|---:|---|")
+    for (a, s), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | {r['mesh']} | | | FAIL |")
+            continue
+        print(f"| {a} | {s} | {r['mesh']} "
+              f"| {r['bytes_per_device']/2**30:.2f} "
+              f"| {r.get('compile_s', 0):.1f}s | ok |")
+
+
+if __name__ == "__main__":
+    mode = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    path = sys.argv[2]
+    title = sys.argv[3] if len(sys.argv) > 3 else path
+    recs = load(path)
+    if mode == "roofline":
+        table(recs, title)
+    else:
+        multipod_table(recs, title)

@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of Chiron — hierarchical
+autoscaling for LLM serving (Patke et al., 2025) — plus the serving,
+model, kernel and launch substrate it runs on."""
+
+__version__ = "0.1.0"

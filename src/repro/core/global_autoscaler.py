@@ -1,0 +1,108 @@
+"""Global autoscaler — interactive (IBP / Theta) + batch (Algorithm 2).
+
+Interactive autoscaling (§5.2): keep the over-provisioning ratio
+IBP = running_interactive / (interactive + mixed) inside [Theta-delta,
+Theta+delta]; Theta comes from historical arrival spikes (tail spike 3x ->
+Theta = 1/3).
+
+Batch instance autoscaling (§5.3, Algorithm 2): group queued batch requests
+by TTFT deadline, estimate each group's waiting time via QLM, add the
+MINIMUM number of batch instances that makes BBP (groups past deadline)
+zero; retire all batch instances when no batch work remains.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+from repro.core.request_groups import RequestGroup, make_request_groups
+from repro.core.waiting_time import WaitingTimeEstimator
+from repro.serving.request import Request
+
+
+@dataclass
+class InteractiveScalingDecision:
+    delta_instances: int            # +n add (interactive+mixed), -n remove
+    ibp: float
+
+
+@dataclass
+class InteractiveAutoscaler:
+    theta: float = 1.0 / 3.0        # target over-provisioning level
+    delta: float = 0.1              # hysteresis band (footnote 2)
+    min_instances: int = 1
+
+    def update(self, n_running_interactive: int, n_interactive: int,
+               n_mixed: int) -> InteractiveScalingDecision:
+        total = n_interactive + n_mixed
+        ibp = (n_running_interactive / total) if total else 1.0
+        if ibp > self.theta + self.delta:
+            # instances needed so that running/total == theta
+            needed = math.ceil(n_running_interactive / max(self.theta, 1e-9))
+            return InteractiveScalingDecision(max(needed - total, 1), ibp)
+        if ibp < self.theta - self.delta and total > self.min_instances:
+            target = math.ceil(max(n_running_interactive, 1) /
+                               max(self.theta, 1e-9))
+            remove = min(total - max(target, self.min_instances),
+                         total - self.min_instances)
+            return InteractiveScalingDecision(-max(remove, 0), ibp)
+        return InteractiveScalingDecision(0, ibp)
+
+
+@dataclass
+class BatchScalingDecision:
+    add_instances: int
+    retire_all: bool
+    bbp_before: int
+    groups: List[RequestGroup] = field(default_factory=list)
+
+
+@dataclass
+class BatchAutoscaler:
+    estimator: WaitingTimeEstimator
+    instance_token_throughput: float    # Theta per batch instance (tokens/s)
+    max_add_per_cycle: int = 64
+    group_k: int = 0                    # 0 = auto; -1 = groups disabled
+                                        # (one group per request — the
+                                        # hysteresis ablation of Fig. 6)
+
+    def compute_bbp(self, groups: Sequence[RequestGroup], now: float,
+                    total_throughput: float) -> int:
+        """BBP (Eq. 2): groups whose estimated wait blows the TTFT deadline.
+
+        Requests ahead of group g = all requests in groups with earlier
+        deadlines plus g itself (FCFS across group order).
+        """
+        bbp = 0
+        ahead = 0
+        for g in groups:
+            ahead += g.n
+            w = self.estimator.waiting_time(ahead, total_throughput, 1)
+            if now + w > g.deadline:
+                bbp += 1
+        return bbp
+
+    def update(self, queued_batch: Sequence[Request], now: float, *,
+               n_batch_instances: int, spare_mixed_throughput: float = 0.0,
+               n_active_batch_requests: int = 0) -> BatchScalingDecision:
+        if self.group_k < 0:
+            groups = make_request_groups(queued_batch, k=len(queued_batch))
+        else:
+            groups = make_request_groups(queued_batch, k=self.group_k)
+        if not groups:
+            retire = (n_active_batch_requests == 0 and n_batch_instances > 0)
+            return BatchScalingDecision(0, retire, 0, [])
+
+        def throughput_with(extra: int) -> float:
+            return (n_batch_instances + extra) * self.instance_token_throughput \
+                + spare_mixed_throughput
+
+        bbp0 = self.compute_bbp(groups, now, max(throughput_with(0), 1e-9))
+        dispatch = 0
+        bbp = bbp0
+        # Algorithm 2: keep adding instances until backpressure is 0
+        while bbp > 0 and dispatch < self.max_add_per_cycle:
+            dispatch += 1
+            bbp = self.compute_bbp(groups, now, throughput_with(dispatch))
+        return BatchScalingDecision(dispatch, False, bbp0, groups)

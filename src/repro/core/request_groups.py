@@ -1,0 +1,106 @@
+"""Request groups (SHEPHERD-style, via 1-D k-means on TTFT deadlines).
+
+Queued batch requests with similar TTFT-SLO deadlines are clustered and
+scheduled as a unit (FCFS within a group), which minimizes autoscaling
+hysteresis (paper §2.3, Fig. 6: 20x fewer scaling actions, 2.5x throughput).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+from repro.serving.request import Request
+
+
+@dataclass
+class RequestGroup:
+    requests: List[Request] = field(default_factory=list)
+    centroid_deadline: float = 0.0
+
+    @property
+    def deadline(self) -> float:
+        """Earliest TTFT-SLO deadline in the group (conservative)."""
+        return min(r.deadline for r in self.requests)
+
+    @property
+    def n(self) -> int:
+        return len(self.requests)
+
+    def total_expected_tokens(self, mean_output: float) -> float:
+        return self.n * mean_output
+
+    def sorted_fcfs(self) -> List[Request]:
+        return sorted(self.requests, key=lambda r: r.arrival_time)
+
+
+def kmeans_1d(values: Sequence[float], k: int, iters: int = 25) -> List[int]:
+    """MacQueen-style 1-D k-means; returns a cluster id per value."""
+    n = len(values)
+    if n == 0:
+        return []
+    k = max(1, min(k, n))
+    vs = sorted(values)
+    # init centroids at quantiles
+    cents = [vs[int(i * (n - 1) / max(k - 1, 1))] for i in range(k)]
+    assign = [0] * n
+    for _ in range(iters):
+        changed = False
+        for i, v in enumerate(values):
+            j = min(range(k), key=lambda c: abs(v - cents[c]))
+            if assign[i] != j:
+                assign[i] = j
+                changed = True
+        for j in range(k):
+            members = [values[i] for i in range(n) if assign[i] == j]
+            if members:
+                cents[j] = sum(members) / len(members)
+        if not changed:
+            break
+    return assign
+
+
+def make_request_groups(requests: Sequence[Request], k: int = 0,
+                        deadline_tolerance: float = 300.0) -> List[RequestGroup]:
+    """Cluster queued requests by TTFT deadline.
+
+    k=0 -> choose k from the deadline spread: one group per
+    ``deadline_tolerance`` seconds of spread (min 1, max 8).
+    """
+    reqs = list(requests)
+    if not reqs:
+        return []
+    if k >= len(reqs) > 0:
+        # degenerate: one group per request (grouping disabled ablation)
+        out = [RequestGroup([r], r.deadline) for r in reqs]
+        out.sort(key=lambda g: g.deadline)
+        return out
+    deadlines = [r.deadline for r in reqs]
+    if k <= 0:
+        spread = max(deadlines) - min(deadlines)
+        k = int(min(8, max(1, round(spread / deadline_tolerance))))
+    if len(reqs) > 3000:
+        # cluster a stride sample, then one nearest-centroid pass for all
+        stride = len(reqs) // 1000
+        sample = deadlines[::stride]
+        sample_assign = kmeans_1d(sample, k)
+        kk = max(sample_assign) + 1
+        cents = [0.0] * kk
+        counts = [0] * kk
+        for v, a in zip(sample, sample_assign):
+            cents[a] += v
+            counts[a] += 1
+        cents = [c / max(n, 1) for c, n in zip(cents, counts)]
+        assign = [min(range(kk), key=lambda j: abs(v - cents[j]))
+                  for v in deadlines]
+    else:
+        assign = kmeans_1d(deadlines, k)
+    groups = {}
+    for r, a in zip(reqs, assign):
+        groups.setdefault(a, RequestGroup())
+        groups[a].requests.append(r)
+    out = []
+    for g in groups.values():
+        g.centroid_deadline = sum(r.deadline for r in g.requests) / g.n
+        out.append(g)
+    out.sort(key=lambda g: g.deadline)
+    return out

@@ -1,0 +1,112 @@
+"""Mamba2 SSD chunked-scan kernel (TPU Pallas).
+
+The chunk axis is sequential ("arbitrary") and carries the SSM state
+(P, N) in VMEM scratch; per chunk the kernel computes the intra-chunk
+quadratic (attention-like) term on the MXU plus the inter-chunk
+contribution of the carried state, then updates the state — the same
+dataflow as ``repro.models.ssm.ssd_chunked`` (the oracle), but with one
+HBM->VMEM DMA per (x, dt, B, C) chunk tile and no (b, nc, cs, cs, h)
+intermediate materialized in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, h0_ref, y_ref, state_ref,
+            h_s, *, chunk: int):
+    c = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_s[...] = h0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (cs, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)[:, None]  # (cs, 1)
+    A = A_ref[0]                                     # scalar
+    Bm = B_ref[0].astype(jnp.float32)                # (cs, N)
+    Cm = C_ref[0].astype(jnp.float32)                # (cs, N)
+
+    dA = dt * A                                      # (cs, 1)
+    dA_cum = jnp.cumsum(dA, axis=0)                  # (cs, 1)
+
+    # intra-chunk: y_diag = ((C B^T) ∘ L ∘ dt_j) x
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    li = dA_cum                                      # (cs,1) broadcast rows
+    lj = dA_cum[:, 0][None, :]                       # (1,cs) cols
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(li - lj), 0.0)
+    w = scores * L * dt[:, 0][None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_off = exp(dA_cum) * (C h^T);  h (P,N)
+    y += jnp.exp(dA_cum) * jax.lax.dot_general(
+        Cm, h_s[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: h' = exp(dA_total) h + x^T (decay_to_end * dt * B)
+    dA_total = dA_cum[chunk - 1, 0]
+    decay = jnp.exp(dA_total - dA_cum)               # (cs,1)
+    h_s[...] = jnp.exp(dA_total) * h_s[...] + jax.lax.dot_general(
+        x, Bm * (decay * dt), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        state_ref[0, 0] = h_s[...].astype(state_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, h0: jax.Array = None, *, chunk: int = 256,
+             interpret: bool = False):
+    """Chunked SSD scan.
+
+    x (b,s,h,p); dt (b,s,h); A (h,); B (b,s,n); C (b,s,n);
+    h0 optional initial state (b,h,p,n)
+    -> (y (b,s,h,p), final_state (b,h,p,n))
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (b, h, nc)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+
+    y, state = pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A, B, C, h0)
+    return y, state

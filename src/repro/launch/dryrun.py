@@ -1,0 +1,178 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST stay the first statements in this module — jax
+# locks the device count on first initialization (see task brief).
+#
+# Multi-pod dry-run: lower + compile every (arch x input-shape) pair on the
+# production mesh, print memory/cost analysis, and dump roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+#       [--out results.jsonl]
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import extract_terms, model_flops_for
+from repro.launch.steps import jit_step, resolve_config
+from repro.models import runtime_flags
+
+
+def _layer_trips(cfg) -> int:
+    """Trip count of each over-layers while loop in the lowered module."""
+    if cfg.arch_type == "hybrid":
+        return cfg.attn_every
+    if cfg.arch_type == "audio":
+        # encoder and decoder loops share a trip count for our configs
+        assert cfg.n_enc_layers == cfg.n_layers
+        return cfg.n_layers
+    return cfg.n_layers
+
+
+def _compile_once(cfg, shape, mesh, remat, unroll, zero_opt=False, microbatch=0):
+    runtime_flags.set_scan_unroll(unroll)
+    runtime_flags.set_mesh(mesh)
+    try:
+        with mesh:
+            jf, args = jit_step(cfg, shape, mesh, remat=remat, zero_opt=zero_opt,
+                                microbatch=microbatch)
+            lowered = jf.lower(*args)
+            compiled = lowered.compile()
+    finally:
+        runtime_flags.set_mesh(None)
+    return compiled
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            remat: bool = True, verbose: bool = True,
+            unroll: bool = True, mesh_shape: tuple = None,
+            zero_opt: bool = False, microbatch: int = 0) -> dict:
+    """Lower + compile one (arch x shape x mesh).
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, so a single rolled compile undercounts FLOPs/bytes by ~n_layers.
+    We compile twice (layer-scan unroll=1 and unroll=2): the delta is one
+    layer's cost, and  total = R(1) + (trips-1) * (R(2) - R(1)).
+    memory_analysis comes from the rolled module — that is what production
+    executes (per-iteration buffer reuse).
+    """
+    shape = INPUT_SHAPES[shape_name]
+    cfg = resolve_config(get_config(arch), shape)
+    if mesh_shape is not None:
+        # §Perf alternative factorization of the same chips, e.g. (32, 8)
+        # when the head count doesn't divide a 16-way model axis
+        axes = ("pod", "data", "model") if len(mesh_shape) == 3 \
+            else ("data", "model")
+        mesh = jax.make_mesh(tuple(mesh_shape), axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "x".join(map(str, mesh.devices.shape)),
+           "multi_pod": multi_pod, "status": "ok"}
+    t0 = time.time()
+    try:
+        c1 = _compile_once(cfg, shape, mesh, remat, 1, zero_opt, microbatch)
+        t1 = time.time()
+        mem = c1.memory_analysis()
+        mflops = model_flops_for(cfg, shape)
+        terms = extract_terms(c1, n_chips, mflops)
+        if unroll:
+            c2 = _compile_once(cfg, shape, mesh, remat, 2, zero_opt, microbatch)
+            t2 = extract_terms(c2, n_chips, mflops)
+            # with microbatching the layer loop nests inside the microbatch
+            # loop; both bodies are counted once by cost analysis
+            trips = _layer_trips(cfg) * max(microbatch, 1)
+            scale = trips - 1
+            terms.flops += scale * max(t2.flops - terms.flops, 0.0)
+            terms.hbm_bytes += scale * max(t2.hbm_bytes - terms.hbm_bytes, 0.0)
+            d_coll = max(t2.coll_bytes - terms.coll_bytes, 0.0)
+            terms.coll_bytes += scale * d_coll
+            terms.coll_breakdown = {
+                k: int(terms.coll_breakdown.get(k, 0) + scale *
+                       max(t2.coll_breakdown.get(k, 0) -
+                           terms.coll_breakdown.get(k, 0), 0))
+                for k in terms.coll_breakdown}
+        t_end = time.time()
+        rec.update(
+            compile_s=round(t1 - t0, 1), total_s=round(t_end - t0, 1),
+            bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0) +
+                                 getattr(mem, "argument_size_in_bytes", 0) +
+                                 getattr(mem, "output_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+            **terms.as_dict())
+        if verbose:
+            print(f"[{arch} x {shape_name} @ {rec['mesh']}] OK "
+                  f"compile={rec['compile_s']}s "
+                  f"mem/dev={rec['bytes_per_device']/2**30:.2f}GiB "
+                  f"compute={terms.compute_s*1e3:.2f}ms "
+                  f"memory={terms.memory_s*1e3:.2f}ms "
+                  f"collective={terms.collective_s*1e3:.2f}ms "
+                  f"bottleneck={terms.bottleneck} "
+                  f"useful={terms.useful_flops_ratio:.2f}")
+            print(f"  memory_analysis: {mem}")
+            print(f"  collectives: {terms.coll_breakdown}")
+    except Exception as e:  # a failure here is a sharding bug — surface it
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        if verbose:
+            print(f"[{arch} x {shape_name} @ {rec['mesh']}] FAIL: "
+                  f"{rec['error']}")
+            traceback.print_exc()
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep the layer scan rolled (faster compile, "
+                         "undercounted rooflines)")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--zero-opt", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--mesh-shape", default=None,
+                    help="alternative same-size mesh, e.g. 32x8")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
+        if args.mesh_shape else None
+
+    pairs = []
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    for a in archs:
+        for s in shapes:
+            pairs.append((a, s))
+    if not (args.all or (args.arch and args.shape)):
+        ap.error("pass --arch & --shape, or --all")
+
+    failures = 0
+    for a, s in pairs:
+        rec = run_one(a, s, multi_pod=args.multi_pod,
+                      remat=not args.no_remat, unroll=not args.no_unroll,
+                      mesh_shape=mesh_shape, zero_opt=args.zero_opt,
+                      microbatch=args.microbatch)
+        failures += rec["status"] != "ok"
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(pairs) - failures}/{len(pairs)} pairs lowered+compiled")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / peak_FLOP/s          (per-chip: XLA reports
+                                                    the partitioned module)
+memory term     = HLO_bytes / HBM_bw
+collective term = collective_bytes / link_bw
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO text
+and sum the result-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+# hardware constants (task-given, TPU v5e class)
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes per collective kind (result-shape bytes, '-start' ops only
+    counted once; '-done' carries the same tuple so we skip it)."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = re.compile(r"-done\(")
+    for m in _OP_RE.finditer(hlo_text):
+        line = m.group(0)
+        if seen_done.search(line):
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per-chip HLO FLOPs
+    hbm_bytes: float             # per-chip HLO bytes accessed
+    coll_bytes: float            # per-chip collective bytes
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    model_flops: float = 0.0     # 6*N*D (or 6*N_active*D) useful FLOPs/chip
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.flops <= 0:
+            return 0.0
+        return self.model_flops / self.flops
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "coll_breakdown": self.coll_breakdown,
+        }
+
+
+def extract_terms(compiled, n_chips: int, model_flops_global: float) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())),
+        coll_breakdown=coll,
+        model_flops=model_flops_global / n_chips,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); forward-only
+    kinds use 2*N*D (prefill) or 2*N_active per token (decode)."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per sequence

@@ -1,0 +1,200 @@
+"""Sharding rules: map every param/cache/batch leaf to a PartitionSpec.
+
+Policy (baseline; §Perf iterates on it):
+- tensor parallelism on the ``model`` axis: attention QKV/out projections,
+  FFN in/out, MoE experts (expert-parallel when n_experts divides the axis,
+  else per-expert tensor parallel on d_ff), vocab-sharded embedding/head,
+  SSM inner channels;
+- data parallelism on ``data`` (and ``pod`` when present): the batch axis
+  of inputs and caches;
+- every rule checks divisibility and falls back to replication, so any
+  (arch x shape x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _batch_spec_axis(mesh: Mesh, b: int):
+    """Largest prefix of the batch axes that divides b (else None)."""
+    sizes = axis_sizes(mesh)
+    axes = batch_axes(mesh)
+    total = 1
+    for a in axes:
+        total *= sizes[a]
+    if b % total == 0:
+        return axes if len(axes) > 1 else axes[0]
+    if b % sizes["data"] == 0:
+        return "data"
+    return None
+
+
+def _key_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+    return tuple(names)
+
+
+def _div(shape, dim: int, size: int) -> bool:
+    return 0 <= dim < len(shape) and shape[dim] % size == 0
+
+
+def param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+               msize: int) -> P:
+    """PartitionSpec for one parameter leaf (model-axis TP only)."""
+    def spec_at(dim: int) -> P:
+        dim = dim % len(shape)
+        if not _div(shape, dim, msize):
+            return P()
+        out = [None] * len(shape)
+        out[dim] = "model"
+        return P(*out)
+
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    if in_moe and len(shape) == 4:                   # (L, E, d, f) experts
+        # f-sharded tensor parallelism (Megatron column/row pairing): the
+        # capacity-dispatch block shard_maps over f, and a uniform layout
+        # avoids per-layer resharding (§Perf A4). Expert-parallel E
+        # sharding is the fallback when f doesn't divide.
+        dim = -1 if name in ("w_gate", "w_up") else -2
+        if _div(shape, dim % len(shape), msize):
+            return spec_at(dim)
+        return spec_at(1)                            # expert parallel
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "w_in"):
+        return spec_at(-1)
+    if name in ("wo", "w_down", "w_out"):
+        return spec_at(-2)
+    if name == "router":
+        return spec_at(-1)
+    if name == "tok":
+        return spec_at(0)                            # vocab-sharded embedding
+    if name == "head":
+        return spec_at(-1)                           # vocab-sharded logits
+    if name == "conv_w":
+        return spec_at(-1)
+    if name in ("A_log", "D", "dt_bias"):
+        return spec_at(-1)
+    return P()                                       # norms, biases, pos-emb
+
+
+def cache_spec(key: str, shape: Tuple[int, ...], mesh: Mesh,
+               batch: int) -> P:
+    sizes = axis_sizes(mesh)
+    msize = sizes["model"]
+    baxis = _batch_spec_axis(mesh, batch)
+    if key in ("pos",):
+        return P(baxis)
+    if key == "slot_pos":
+        # keep the slot->position map sharded like the cache length it
+        # masks (§Perf C3)
+        if _div(shape, 1, msize):
+            return P(baxis, "model")
+        return P(baxis, None)
+    out = [None] * len(shape)
+    out[1] = baxis                                   # (L/G, B, ...) layouts
+    if key in ("k", "v", "cross_k", "cross_v"):
+        if _div(shape, 3, msize):
+            out[3] = "model"                         # kv heads
+        elif _div(shape, 2, msize):
+            # sequence-sharded KV (§Perf C1): when kv-heads don't divide
+            # the model axis, shard the cache length instead — decode
+            # scores contract head_dim locally and only the tiny softmax
+            # stats + (B,H,D) output need cross-shard reduction, vs
+            # all-gathering the whole cache per layer under hd-sharding.
+            out[2] = "model"
+        elif _div(shape, 4, msize):
+            out[4] = "model"                         # head_dim fallback
+    elif key == "ssm":
+        if _div(shape, 2, msize):
+            out[2] = "model"                         # SSM heads
+        elif _div(shape, 3, msize):
+            out[3] = "model"
+    elif key == "conv":
+        if _div(shape, 3, msize):
+            out[3] = "model"                         # conv channels
+    return P(*out)
+
+
+# ------------------------------------------------------------------ trees
+
+
+def param_shardings(mesh: Mesh, params_shape) -> Any:
+    msize = axis_sizes(mesh)["model"]
+
+    def leaf(path, sds):
+        return NamedSharding(mesh, param_spec(_key_names(path), sds.shape,
+                                              msize))
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def cache_shardings(mesh: Mesh, cache_shape, batch: int) -> Any:
+    def leaf(path, sds):
+        names = _key_names(path)
+        return NamedSharding(mesh, cache_spec(names[-1], sds.shape, mesh,
+                                              batch))
+    return jax.tree_util.tree_map_with_path(leaf, cache_shape)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> Any:
+    def leaf(path, sds):
+        b = sds.shape[0]
+        baxis = _batch_spec_axis(mesh, b)
+        return NamedSharding(mesh, P(baxis, *([None] * (len(sds.shape) - 1))))
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def opt_shardings(mesh: Mesh, opt_shape, param_sh, *, zero: bool = False) -> Any:
+    """AdamW state: moments follow the params; step replicated.
+
+    zero=True (§Perf B3, ZeRO-1): additionally shard each moment over the
+    data axis on the largest param dim that is unsharded and divisible —
+    the f32 moments are 4x the bf16 params, so keeping them replicated
+    across the data axis dominates per-device argument memory.
+    """
+    from repro.training.optimizer import AdamWState
+    rep = NamedSharding(mesh, P())
+    if not zero:
+        return AdamWState(rep, param_sh, param_sh)
+    dsize = axis_sizes(mesh)["data"]
+
+    def zero_leaf(sh: NamedSharding, sds) -> NamedSharding:
+        spec = list(sh.spec) + [None] * (len(sds.shape) - len(sh.spec))
+        cands = [(sds.shape[i], i) for i in range(len(sds.shape))
+                 if spec[i] is None and sds.shape[i] % dsize == 0]
+        if cands:
+            _, dim = max(cands)
+            spec[dim] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    mom_sh = jax.tree.map(zero_leaf, param_sh, opt_shape.mu)
+    return AdamWState(rep, mom_sh, mom_sh)
+
+
+def logits_sharding(mesh: Mesh, batch: int, vocab: int) -> NamedSharding:
+    msize = axis_sizes(mesh)["model"]
+    vspec = "model" if vocab % msize == 0 else None
+    return NamedSharding(mesh, P(_batch_spec_axis(mesh, batch), vspec))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())

@@ -1,0 +1,193 @@
+"""Step builders: sharded train_step / prefill_step / serve_step per arch.
+
+``input_specs`` produces ShapeDtypeStruct stand-ins (weak-type-correct, no
+allocation) for every input of the chosen step kind, so the dry-run can
+lower + compile the full production configs without materializing a byte.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import shardings as sh
+from repro.models import Model
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+
+LONG_CONTEXT_WINDOW = 4096
+
+
+def resolve_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-dependent config adjustments (DESIGN.md §6): at 500k-token
+    decode every attention-bearing arch runs the sliding-window variant so
+    decode state is O(window); SSD chunking must divide the sequence."""
+    if shape.name == "long_500k" and cfg.has_attention and \
+            cfg.sliding_window == 0:
+        cfg = cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def cache_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    if cfg.sliding_window > 0:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+# ------------------------------------------------------------ input specs
+
+
+def _token_spec(batch: int, seq: int):
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def batch_specs(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    out = {"tokens": _token_spec(batch, seq)}
+    if cfg.arch_type == "audio":
+        out["frames"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), dt)
+    if cfg.arch_type == "vlm":
+        out["vision"] = jax.ShapeDtypeStruct((batch, cfg.n_vision_tokens,
+                                              cfg.d_model), dt)
+    return out
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int) -> Any:
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All ShapeDtypeStruct inputs for the step this shape lowers."""
+    cfg = resolve_config(cfg, shape)
+    p = params_specs(cfg)
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, p)
+        return {"params": p, "opt_state": opt,
+                "batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    if shape.kind == "prefill":
+        return {"params": p,
+                "batch": batch_specs(cfg, shape.global_batch, shape.seq_len)}
+    # decode: one token against a cache of seq_len
+    clen = cache_len_for(cfg, shape)
+    cache = cache_specs(cfg, shape.global_batch, clen)
+    return {"params": p,
+            "tokens": _token_spec(shape.global_batch, 1),
+            "cache": cache}
+
+
+# ------------------------------------------------------------ step fns
+
+
+def make_train_step(cfg: ModelConfig, *, remat: bool = True, lr: float = 3e-4,
+                    microbatch: int = 0):
+    """Build the train step. microbatch=M > 1 splits the global batch into
+    M sequential microbatches with f32 gradient accumulation (§Perf B4):
+    live activation memory scales ~1/M for the cost of re-reading the
+    accumulator M times."""
+    model = Model(cfg)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=remat))(params)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if microbatch and microbatch > 1:
+            m = microbatch
+
+            def split(a):
+                return a.reshape(m, a.shape[0] // m, *a.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                loss, g = grads_of(params, mb)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), acc, g)
+                return acc, loss
+
+            gacc, losses = jax.lax.scan(body, zeros, mbatches)
+            grads = jax.tree.map(lambda g: g / m, gacc)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = grads_of(params, batch)
+        new_params, new_opt, info = adamw_update(grads, opt_state, params,
+                                                 lr=lr)
+        return new_params, new_opt, {"loss": loss, **info}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: Optional[InputShape] = None):
+    model = Model(cfg)
+    clen = cache_len_for(cfg, shape) if shape else None
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cache_len=clen)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    model = Model(cfg)
+
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+    return serve_step
+
+
+# ------------------------------------------------------------ jit + shard
+
+
+def jit_step(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
+             remat: bool = True, donate: bool = True,
+             zero_opt: bool = False, microbatch: int = 0):
+    """Build the sharded jitted step for (cfg, shape, mesh); returns
+    (jitted_fn, ordered_input_specs_tuple)."""
+    cfg = resolve_config(cfg, shape)
+    specs = input_specs(cfg, shape)
+    p_sh = sh.param_shardings(mesh, specs["params"])
+    B = shape.global_batch
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, remat=remat, microbatch=microbatch)
+        o_sh = sh.opt_shardings(mesh, specs["opt_state"], p_sh, zero=zero_opt)
+        b_sh = sh.batch_shardings(mesh, specs["batch"])
+        metrics_sh = jax.tree.map(lambda _: sh.replicated(mesh),
+                                  {"loss": 0, "grad_norm": 0})
+        jf = jax.jit(fn,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, metrics_sh),
+                     donate_argnums=(0, 1) if donate else ())
+        args = (specs["params"], specs["opt_state"], specs["batch"])
+        return jf, args
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, shape)
+        b_sh = sh.batch_shardings(mesh, specs["batch"])
+        clen = cache_len_for(cfg, shape)
+        c_spec = jax.eval_shape(
+            lambda p, b: fn(p, b)[1], specs["params"], specs["batch"])
+        c_sh = sh.cache_shardings(mesh, c_spec, B)
+        l_sh = sh.logits_sharding(mesh, B, cfg.vocab_size)
+        jf = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(l_sh, c_sh))
+        return jf, (specs["params"], specs["batch"])
+
+    # decode
+    fn = make_serve_step(cfg)
+    c_sh = sh.cache_shardings(mesh, specs["cache"], B)
+    t_sh = sh.batch_shardings(mesh, {"tokens": specs["tokens"]})["tokens"]
+    l_sh = sh.logits_sharding(mesh, B, cfg.vocab_size)
+    jf = jax.jit(fn, in_shardings=(p_sh, t_sh, c_sh),
+                 out_shardings=(l_sh, c_sh),
+                 donate_argnums=(2,) if donate else ())
+    return jf, (specs["params"], specs["tokens"], specs["cache"])

@@ -1,0 +1,170 @@
+"""Whisper-style encoder-decoder transformer backbone. [arXiv:2212.04356]
+
+Per the task carve-out, the mel-spectrogram + conv frontend is a stub: the
+model consumes precomputed frame embeddings (B, enc_seq, d_model). Everything
+downstream — bidirectional encoder, causal decoder with self + cross
+attention, KV caches — is implemented for real.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+def _init_enc_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ka, kf, k1, k2 = jax.random.split(key, 4)
+    return {"attn": L.init_attention(cfg, ka, dtype),
+            "ffn": L.init_ffn(cfg, kf, dtype),
+            "norm1": L.init_norm(cfg, k1, dtype),
+            "norm2": L.init_norm(cfg, k2, dtype)}
+
+
+def _init_dec_layer(cfg: ModelConfig, key, dtype) -> Params:
+    ka, kc, kf, k1, k2, k3 = jax.random.split(key, 6)
+    return {"self_attn": L.init_attention(cfg, ka, dtype),
+            "cross_attn": L.init_attention(cfg, kc, dtype),
+            "ffn": L.init_ffn(cfg, kf, dtype),
+            "norm1": L.init_norm(cfg, k1, dtype),
+            "norm2": L.init_norm(cfg, k2, dtype),
+            "norm3": L.init_norm(cfg, k3, dtype)}
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ke, kenc, kdec, kp, kn = jax.random.split(key, 5)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "emb": L.init_embeddings(cfg, ke, dtype),
+        "enc_pos": (jax.random.normal(kp, (cfg.enc_seq, cfg.d_model)) * 0.02).astype(dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k, dtype))(enc_keys),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k, dtype))(dec_keys),
+        "enc_norm": L.init_norm(cfg, kn, dtype),
+        "final_norm": L.init_norm(cfg, kn, dtype),
+    }
+
+
+def encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames (B, T, d) stub embeddings -> encoder states (B, T, d)."""
+    x = frames + params["enc_pos"][None, :frames.shape[1]].astype(frames.dtype)
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        x = x + L.attention_forward(cfg, lp["attn"], h, causal=False,
+                                    use_rope=False)
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        return x + L.ffn_forward(cfg, lp["ffn"], h), None
+
+    x, _ = L.layer_scan(body, x, params["enc_layers"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def _dec_layer_full(cfg, lp, x, enc, positions):
+    h = L.apply_norm(cfg, lp["norm1"], x)
+    x = x + L.attention_forward(cfg, lp["self_attn"], h, positions=positions)
+    h = L.apply_norm(cfg, lp["norm2"], x)
+    x = x + L.attention_forward(cfg, lp["cross_attn"], h, kv_x=enc,
+                                causal=False, use_rope=False)
+    h = L.apply_norm(cfg, lp["norm3"], x)
+    return x + L.ffn_forward(cfg, lp["ffn"], h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            frames: jax.Array, remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    def body(x, lp):
+        return _dec_layer_full(cfg, lp, x, enc, positions), None
+
+    step = jax.checkpoint(body) if remat else body
+    x, _ = L.layer_scan(step, x, params["dec_layers"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    return L.unembed(params["emb"], x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict[str, jax.Array]:
+    hd = cfg.resolved_head_dim
+    c = {
+        "k": jnp.zeros((cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+        "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+    return c
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            frames: jax.Array, cache_len: Optional[int] = None,
+            dtype=None, **_):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    enc = encode(cfg, params, frames)
+    B, S = tokens.shape
+    window = cfg.sliding_window or 0
+    clen = cache_len or (min(S, window) if window else S)
+    x = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    hd = cfg.resolved_head_dim
+
+    def body(x, lp):
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        o, k, v = L.attention_forward(cfg, lp["self_attn"], h,
+                                      positions=positions, return_kv=True)
+        x = x + o
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        ck = (enc @ lp["cross_attn"]["wk"]).reshape(B, -1, cfg.n_kv_heads, hd)
+        cv = (enc @ lp["cross_attn"]["wv"]).reshape(B, -1, cfg.n_kv_heads, hd)
+        x = x + L.attention_forward(cfg, lp["cross_attn"], h, kv_x=enc,
+                                    causal=False, use_rope=False)
+        h = L.apply_norm(cfg, lp["norm3"], x)
+        x = x + L.ffn_forward(cfg, lp["ffn"], h)
+        return x, (k.astype(dtype), v.astype(dtype),
+                   ck.astype(dtype), cv.astype(dtype))
+
+    x, (ks, vs, cks, cvs) = L.layer_scan(body, x, params["dec_layers"])
+    ks, vs, sp = L.fit_cache(ks, vs, S, clen, window, B)
+    cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+             "pos": jnp.full((B,), S, jnp.int32), "slot_pos": sp}
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["emb"], x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array]):
+    B = tokens.shape[0]
+    x = L.embed(params["emb"], tokens)
+    pos = cache["pos"]
+    S = cache["k"].shape[2]
+    slot = pos % S if cfg.sliding_window > 0 else pos
+    slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+
+    def body(x, inp):
+        lp, kc, vc, ck, cv = inp
+        h = L.apply_norm(cfg, lp["norm1"], x)
+        o, kc, vc = L.attention_decode(cfg, lp["self_attn"], h, kc, vc, pos,
+                                       slot_pos)
+        x = x + o
+        h = L.apply_norm(cfg, lp["norm2"], x)
+        x = x + L.cross_attention_decode(cfg, lp["cross_attn"], h, ck, cv)
+        h = L.apply_norm(cfg, lp["norm3"], x)
+        x = x + L.ffn_forward(cfg, lp["ffn"], h)
+        return x, (kc, vc)
+
+    x, (ks, vs) = L.layer_scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed(params["emb"], x)[:, 0]
+    return logits, dict(cache, k=ks, v=vs, pos=pos + 1, slot_pos=slot_pos)

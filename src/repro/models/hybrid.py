@@ -1,0 +1,169 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block applied
+every ``cfg.attn_every`` layers (each invocation keeps its own KV cache but
+re-uses the same weights). [arXiv:2411.15242]"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.ssm import init_mamba_layer, mamba_decode, mamba_forward
+
+Params = Dict[str, Any]
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ke, kl, ks, kn = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_mamba_layer(cfg, k, dtype))(layer_keys)
+    ka, kf, k1, k2 = jax.random.split(ks, 4)
+    shared = {
+        "attn": L.init_attention(cfg, ka, dtype),
+        "ffn": L.init_ffn(cfg, kf, dtype),
+        "norm1": L.init_norm(cfg, k1, dtype),
+        "norm2": L.init_norm(cfg, k2, dtype),
+    }
+    return {
+        "emb": L.init_embeddings(cfg, ke, dtype),
+        "layers": stacked,
+        "shared": shared,
+        "final_norm": {"w": jnp.ones((cfg.d_model,), dtype)},
+    }
+
+
+def _group_slice(stacked: Params, g: int, size: int) -> Params:
+    return jax.tree.map(lambda a: a[g * size:(g + 1) * size], stacked)
+
+
+def _shared_block_forward(cfg: ModelConfig, sp: Params, x: jax.Array,
+                          positions: jax.Array) -> jax.Array:
+    h = L.apply_norm(cfg, sp["norm1"], x)
+    x = x + L.attention_forward(cfg, sp["attn"], h, positions=positions)
+    h = L.apply_norm(cfg, sp["norm2"], x)
+    return x + L.ffn_forward(cfg, sp["ffn"], h)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    B, S = tokens.shape
+    x = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    G, A = _n_groups(cfg), cfg.attn_every
+
+    def mamba_body(x, lp):
+        x, _, _ = mamba_forward(cfg, lp, x)
+        return x, None
+
+    step = jax.checkpoint(mamba_body) if remat else mamba_body
+    for g in range(G):
+        x, _ = L.layer_scan(step, x, _group_slice(params["layers"], g, A))
+        x = _shared_block_forward(cfg, params["shared"], x, positions)
+    x = L.rms_norm(x, params["final_norm"]["w"])
+    return L.unembed(params["emb"], x), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> Dict[str, jax.Array]:
+    G = _n_groups(cfg)
+    H, P, N = cfg.n_ssm_heads, cfg.ssm.head_dim, cfg.ssm.state_dim
+    ch = cfg.d_inner + 2 * N
+    hd = cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, cfg.ssm.conv_width - 1, ch), dtype),
+        "k": jnp.zeros((G, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((G, batch, cache_len, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "slot_pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, *,
+            cache_len: Optional[int] = None, dtype=None, **_):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    window = cfg.sliding_window or 0
+    clen = cache_len or (min(S, window) if window else S)
+    x = L.embed(params["emb"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    G, A = _n_groups(cfg), cfg.attn_every
+
+    def mamba_body(x, lp):
+        x, h, conv = mamba_forward(cfg, lp, x)
+        return x, (h, conv.astype(dtype))
+
+    hs, convs, ks, vs = [], [], [], []
+    sp = params["shared"]
+    for g in range(G):
+        x, (h, conv) = L.layer_scan(mamba_body, x,
+                                    _group_slice(params["layers"], g, A))
+        hs.append(h); convs.append(conv)
+        hnorm = L.apply_norm(cfg, sp["norm1"], x)
+        o, k, v = L.attention_forward(cfg, sp["attn"], hnorm,
+                                      positions=positions, return_kv=True)
+        x = x + o
+        hnorm = L.apply_norm(cfg, sp["norm2"], x)
+        x = x + L.ffn_forward(cfg, sp["ffn"], hnorm)
+        ks.append(k.astype(dtype)); vs.append(v.astype(dtype))
+
+    k_all, v_all, spos = L.fit_cache(jnp.stack(ks), jnp.stack(vs), S, clen,
+                                     window, B)
+    cache = {
+        "ssm": jnp.concatenate(hs, axis=0),
+        "conv": jnp.concatenate(convs, axis=0),
+        "k": k_all, "v": v_all,
+        "pos": jnp.full((B,), S, jnp.int32),
+        "slot_pos": spos,
+    }
+    x = L.rms_norm(x, params["final_norm"]["w"])
+    logits = L.unembed(params["emb"], x[:, -1:])
+    return logits[:, 0], cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                cache: Dict[str, jax.Array]):
+    B = tokens.shape[0]
+    x = L.embed(params["emb"], tokens)
+    pos = cache["pos"]
+    Sc = cache["k"].shape[2]
+    slot = pos % Sc if cfg.sliding_window > 0 else pos
+    slot_pos = cache["slot_pos"].at[jnp.arange(B), slot].set(pos)
+    G, A = _n_groups(cfg), cfg.attn_every
+    sp = params["shared"]
+
+    def mamba_body(x, inp):
+        lp, h, conv = inp
+        x, h, conv = mamba_decode(cfg, lp, x, h, conv)
+        return x, (h, conv)
+
+    hs, convs, ks, vs = [], [], [], []
+    for g in range(G):
+        grp = (_group_slice(params["layers"], g, A),
+               cache["ssm"][g * A:(g + 1) * A],
+               cache["conv"][g * A:(g + 1) * A])
+        x, (h, conv) = L.layer_scan(mamba_body, x, grp)
+        hs.append(h); convs.append(conv)
+        hnorm = L.apply_norm(cfg, sp["norm1"], x)
+        o, kc, vc = L.attention_decode(cfg, sp["attn"], hnorm, cache["k"][g],
+                                       cache["v"][g], pos, slot_pos)
+        x = x + o
+        hnorm = L.apply_norm(cfg, sp["norm2"], x)
+        x = x + L.ffn_forward(cfg, sp["ffn"], hnorm)
+        ks.append(kc); vs.append(vc)
+
+    x = L.rms_norm(x, params["final_norm"]["w"])
+    logits = L.unembed(params["emb"], x)[:, 0]
+    new_cache = dict(cache,
+                     ssm=jnp.concatenate(hs, axis=0),
+                     conv=jnp.concatenate(convs, axis=0),
+                     k=jnp.stack(ks), v=jnp.stack(vs),
+                     pos=pos + 1, slot_pos=slot_pos)
+    return logits, new_cache

@@ -1,0 +1,35 @@
+"""Process-wide model-execution flags.
+
+``scan_unroll``: unroll factor for the over-layers lax.scan. The default (1)
+keeps HLO compact for smoke tests and real serving. The dry-run sets this to
+True (full unroll) because XLA's cost analysis does not multiply while-loop
+body costs by trip count — rooflines derived from a scanned module would
+undercount FLOPs/bytes by a factor of n_layers.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+scan_unroll: Union[int, bool] = 1
+
+# Mesh for model-internal shard_map blocks (MoE combine-then-reduce, §Perf
+# A4). None = single-device execution (smoke tests, the real CPU engine).
+mesh = None
+
+
+def set_scan_unroll(v: Union[int, bool]) -> None:
+    global scan_unroll
+    scan_unroll = v
+
+
+def get_scan_unroll() -> Union[int, bool]:
+    return scan_unroll
+
+
+def set_mesh(m) -> None:
+    global mesh
+    mesh = m
+
+
+def get_mesh():
+    return mesh

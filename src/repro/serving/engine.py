@@ -1,0 +1,286 @@
+"""Continuous-batching engine with real JAX execution.
+
+This is the data plane of a serving instance: slot-based KV/state pool,
+iteration-level scheduling (admit -> decode-one-token -> retire), preemption
+of batch requests with host KV offload (Chiron's mixed-instance eviction),
+and the ITL / throughput measurements the local autoscaler closes its loop
+on. The max batch size is the knob Algorithm 1 turns.
+
+The engine serves any architecture behind the unified ``Model`` API —
+dense, MoE, SSM, hybrid, enc-dec, VLM — because caches are written/read
+through the generic slot-pool protocol below.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import Model
+from repro.serving.request import Request, RequestState, RequestType
+
+_SCALAR_KEYS = ("pos",)
+_ROW_KEYS = ("slot_pos",)
+
+
+@dataclass
+class StepStats:
+    now: float
+    n_active: int
+    new_tokens: int
+    finished: List[Request] = field(default_factory=list)
+    itl: float = 0.0                 # seconds for this decode iteration
+    throughput: float = 0.0          # tokens/s over the sliding window
+    preempted: List[Request] = field(default_factory=list)
+
+
+@dataclass
+class _Slot:
+    request: Optional[Request] = None
+    token: Optional[jax.Array] = None   # next input token (1,)
+
+    @property
+    def active(self) -> bool:
+        return self.request is not None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, *, key=None, params=None,
+                 max_slots: int = 8, max_len: int = 256,
+                 max_batch_size: Optional[int] = None,
+                 clock=time.monotonic, dtype=jnp.float32,
+                 prefix_cache_entries: int = 0,
+                 prefill_chunk: int = 0):
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.dtype = dtype
+        key = key if key is not None else jax.random.PRNGKey(0)
+        self.params = params if params is not None else self.model.init(key, dtype=dtype)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.max_batch_size = max_batch_size or max_slots
+        self.clock = clock
+        # serving-optimization knobs (transformer family only; paper Fig.11)
+        chunkable = cfg.arch_type in ("dense", "moe")
+        self.prefill_chunk = prefill_chunk if chunkable else 0
+        self.prefix_cache = None
+        if prefix_cache_entries > 0 and chunkable:
+            from repro.serving.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(prefix_cache_entries)
+        self.pool = self.model.init_cache(max_slots, max_len, dtype=dtype)
+        self.slots: List[_Slot] = [_Slot() for _ in range(max_slots)]
+        self.waiting: Deque[Request] = deque()
+        self._decode = jax.jit(self.model.decode_step)
+        self._last_step_t: Optional[float] = None
+        self._window: Deque = deque(maxlen=32)   # (t, tokens) samples
+        self._rng = np.random.default_rng(0)
+
+    # ------------------------------------------------------------ metrics
+    @property
+    def n_active(self) -> int:
+        return sum(s.active for s in self.slots)
+
+    @property
+    def n_waiting(self) -> int:
+        return len(self.waiting)
+
+    def utilization(self) -> float:
+        return self.n_active / max(self.max_batch_size, 1)
+
+    def running_types(self) -> List[RequestType]:
+        return [s.request.request_type for s in self.slots if s.active]
+
+    def throughput(self) -> float:
+        if len(self._window) < 2:
+            return 0.0
+        dt = self._window[-1][0] - self._window[0][0]
+        toks = sum(t for _, t in list(self._window)[1:])
+        return toks / dt if dt > 0 else 0.0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, req: Request) -> None:
+        req.state = RequestState.QUEUED
+        self.waiting.append(req)
+
+    def set_max_batch_size(self, b: int) -> None:
+        self.max_batch_size = max(1, min(int(b), self.max_slots))
+
+    # --------------------------------------------------------- slot cache
+    def _write_slot(self, slot: int, sub: Dict[str, jax.Array]) -> None:
+        """Write a batch-of-1 cache pytree into the pool at ``slot``."""
+        for k, v in sub.items():
+            if k in _SCALAR_KEYS:
+                self.pool[k] = self.pool[k].at[slot].set(v[0])
+            elif k in _ROW_KEYS:
+                S = v.shape[1]
+                row = jnp.full((self.max_len,), -1, v.dtype).at[:S].set(v[0])
+                self.pool[k] = self.pool[k].at[slot].set(row)
+            else:
+                pool = self.pool[k]
+                if v.ndim >= 3 and v.shape[2] != pool.shape[2]:
+                    S = v.shape[2]
+                    self.pool[k] = pool.at[:, slot, :S].set(v[:, 0])
+                else:
+                    self.pool[k] = pool.at[:, slot].set(v[:, 0])
+
+    def _read_slot(self, slot: int) -> Dict[str, np.ndarray]:
+        out = {}
+        for k, v in self.pool.items():
+            if k in _SCALAR_KEYS:
+                out[k] = np.asarray(v[slot:slot + 1])
+            elif k in _ROW_KEYS:
+                out[k] = np.asarray(v[slot:slot + 1])
+            else:
+                out[k] = np.asarray(v[:, slot:slot + 1])
+        return out
+
+    def _restore_slot(self, slot: int, saved: Dict[str, np.ndarray]) -> None:
+        for k, v in saved.items():
+            arr = jnp.asarray(v)
+            if k in _SCALAR_KEYS or k in _ROW_KEYS:
+                self.pool[k] = self.pool[k].at[slot].set(arr[0])
+            else:
+                self.pool[k] = self.pool[k].at[:, slot].set(arr[:, 0])
+
+    # ------------------------------------------------------------ admit
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                return i
+        return None
+
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        if req.prompt_tokens is not None:
+            return np.asarray(req.prompt_tokens, np.int32).reshape(-1)
+        return self._rng.integers(0, self.cfg.vocab_size,
+                                  size=(req.prompt_len,), dtype=np.int32)
+
+    def _prompt_batch(self, req: Request, toks: Optional[np.ndarray] = None):
+        toks = toks if toks is not None else self._prompt_tokens(req)
+        batch = {"tokens": jnp.asarray(toks)[None]}
+        if self.cfg.arch_type == "audio":
+            batch["frames"] = jnp.zeros((1, self.cfg.enc_seq, self.cfg.d_model),
+                                        self.dtype)
+        if self.cfg.arch_type == "vlm":
+            batch["vision"] = jnp.zeros((1, self.cfg.n_vision_tokens,
+                                         self.cfg.d_model), self.dtype)
+        return batch
+
+    def _prefill(self, req: Request):
+        """Prefill a prompt, via the prefix cache and/or in chunks when
+        those knobs are enabled; returns (last_logits, cache)."""
+        toks = self._prompt_tokens(req)
+        past = None
+        if self.prefix_cache is not None:
+            past, consumed = self.prefix_cache.lookup(toks)
+            remaining = toks[consumed:]
+        else:
+            remaining = toks
+        chunk = self.prefill_chunk or len(remaining)
+        logits = None
+        for lo in range(0, len(remaining), chunk):
+            piece = remaining[lo:lo + chunk]
+            logits, past = self.model.prefill(
+                self.params, self._prompt_batch(req, piece),
+                dtype=self.dtype, past_cache=past)
+        if self.prefix_cache is not None:
+            self.prefix_cache.store(toks, past)
+        return logits, past
+
+    def _admit(self, req: Request, now: float) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        if req.saved_kv is not None:
+            self._restore_slot(slot, req.saved_kv)
+            req.saved_kv = None
+            tok = jnp.zeros((1,), jnp.int32)
+        else:
+            logits, cache = self._prefill(req)
+            self._write_slot(slot, jax.tree.map(lambda a: a, cache))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            req.tokens_generated += 1
+            if req.first_token_time is None:
+                req.first_token_time = now
+        req.state = RequestState.RUNNING
+        self.slots[slot] = _Slot(req, tok)
+        return True
+
+    def preempt_one_batch(self, now: float) -> Optional[Request]:
+        """Evict the most recently admitted batch request (KV to host)."""
+        for i in reversed(range(self.max_slots)):
+            s = self.slots[i]
+            if s.active and s.request.request_type == RequestType.BATCH:
+                req = s.request
+                req.saved_kv = self._read_slot(i)
+                req.state = RequestState.PREEMPTED
+                req.preemptions += 1
+                self.slots[i] = _Slot()
+                return req
+        return None
+
+    # ------------------------------------------------------------ step
+    def step(self) -> StepStats:
+        now = self.clock()
+        stats = StepStats(now=now, n_active=0, new_tokens=0)
+
+        # 1. admit (interactive first — zero-queuing), preempting batch
+        #    requests on a full instance if an interactive request waits.
+        self.waiting = deque(sorted(
+            self.waiting, key=lambda r: (not r.is_interactive, r.arrival_time)))
+        while self.waiting and self.n_active < self.max_batch_size:
+            req = self.waiting[0]
+            if not self._admit(req, now):
+                break
+            self.waiting.popleft()
+        if self.waiting and self.waiting[0].is_interactive and \
+                self.n_active >= self.max_batch_size:
+            victim = self.preempt_one_batch(now)
+            if victim is not None:
+                stats.preempted.append(victim)
+                self._admit(self.waiting.popleft(), now)
+
+        active_idx = [i for i, s in enumerate(self.slots) if s.active]
+        stats.n_active = len(active_idx)
+        if not active_idx:
+            self._last_step_t = now
+            return stats
+
+        # 2. one decode iteration over the whole slot pool
+        tokens = jnp.stack([
+            s.token[0] if s.active else jnp.zeros((), jnp.int32)
+            for s in self.slots])[:, None]
+        logits, self.pool = self._decode(self.params, tokens, self.pool)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        t_end = self.clock()
+        itl = (t_end - self._last_step_t) if self._last_step_t else (t_end - now)
+        self._last_step_t = t_end
+        stats.itl = itl
+
+        # 3. bookkeeping: ITL samples, finishes
+        for i in active_idx:
+            s = self.slots[i]
+            req = s.request
+            req.itl_samples.append(itl)
+            req.tokens_generated += 1
+            stats.new_tokens += 1
+            if req.first_token_time is None:
+                req.first_token_time = t_end
+            if req.tokens_generated >= req.output_len or \
+                    int(self.pool["pos"][i]) >= self.max_len - 1:
+                req.state = RequestState.FINISHED
+                req.finish_time = t_end
+                stats.finished.append(req)
+                self.slots[i] = _Slot()
+            else:
+                s.token = next_tok[i:i + 1]
+
+        self._window.append((t_end, stats.new_tokens))
+        stats.throughput = self.throughput()
+        return stats

@@ -1,0 +1,51 @@
+"""Global queue (paper §3, Lifecycle of a Request).
+
+All requests enqueue here; interactive requests follow a zero-queuing
+discipline (dispatched immediately, footnote 3) while batch requests may
+wait and are scheduled as request groups by the global autoscaler.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional
+
+from repro.serving.request import Request, RequestType
+
+
+class GlobalQueue:
+    def __init__(self):
+        self.interactive: Deque[Request] = deque()
+        self.batch: List[Request] = []
+
+    def push(self, req: Request) -> None:
+        if req.request_type == RequestType.INTERACTIVE:
+            self.interactive.append(req)
+        else:
+            self.batch.append(req)
+
+    def pop_interactive(self) -> Optional[Request]:
+        return self.interactive.popleft() if self.interactive else None
+
+    def pop_batch_fcfs(self) -> Optional[Request]:
+        """FCFS by (group deadline, arrival) — groups are recomputed by the
+        controller; within the queue we serve earliest deadline first, then
+        arrival order (FCFS within a group, §5.3)."""
+        if not self.batch:
+            return None
+        self.batch.sort(key=lambda r: (r.deadline, r.arrival_time))
+        return self.batch.pop(0)
+
+    def requeue(self, req: Request) -> None:
+        """Preempted request returns to the queue (keeps saved KV)."""
+        self.push(req)
+
+    @property
+    def n_interactive(self) -> int:
+        return len(self.interactive)
+
+    @property
+    def n_batch(self) -> int:
+        return len(self.batch)
+
+    def __len__(self) -> int:
+        return self.n_interactive + self.n_batch

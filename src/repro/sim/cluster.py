@@ -1,0 +1,266 @@
+"""Simulated serving cluster: instances driven by the analytic perf model.
+
+The control plane (autoscalers, routing, queues, request groups) is the
+production ``repro.core`` / ``repro.serving`` code; only the data plane —
+how long a decode step takes — is simulated, using ``PerfModel``. Instance
+bring-up takes ``model_load_time()`` (the 15–60 s that motivates Chiron's
+over-provisioning), and every provision/retire action is counted for the
+hysteresis metric.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.core.backpressure import LocalMetrics
+from repro.serving.request import Request, RequestState, RequestType
+from repro.sim.perf_model import PerfModel
+
+_inst_counter = itertools.count()
+
+
+class InstanceType(enum.Enum):
+    INTERACTIVE = "interactive"
+    MIXED = "mixed"
+    BATCH = "batch"
+
+
+class InstanceState(enum.Enum):
+    LOADING = "loading"
+    ACTIVE = "active"
+    RETIRED = "retired"
+
+
+@dataclass
+class SimSeq:
+    request: Request
+    ctx_tokens: float            # prompt + generated so far (KV footprint)
+    prefill_left: float          # seconds of prefill work remaining
+    _itl_accum: Tuple[float, int] = (0.0, 0)
+
+    @property
+    def done(self) -> bool:
+        return self.request.tokens_generated >= self.request.output_len
+
+
+class SimInstance:
+    def __init__(self, perf: PerfModel, itype: InstanceType, now: float, *,
+                 local_autoscaler: Optional[LocalAutoscaler] = None,
+                 static_batch: Optional[int] = None,
+                 load_time: Optional[float] = None):
+        self.id = next(_inst_counter)
+        self.perf = perf
+        self.itype = itype
+        self.state = InstanceState.LOADING
+        self.ready_time = now + (load_time if load_time is not None
+                                 else perf.model_load_time())
+        self.local = local_autoscaler
+        self.static_batch = static_batch
+        self.running: List[SimSeq] = []
+        self.created_at = now
+
+    # ------------------------------------------------------------ state
+    def activate_if_ready(self, now: float) -> None:
+        if self.state == InstanceState.LOADING and now >= self.ready_time:
+            self.state = InstanceState.ACTIVE
+
+    @property
+    def active(self) -> bool:
+        return self.state == InstanceState.ACTIVE
+
+    @property
+    def max_batch_size(self) -> int:
+        if self.local is not None:
+            return self.local.max_batch_size
+        return self.static_batch or 64
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    def mean_ctx(self) -> float:
+        if not self.running:
+            return 0.0
+        return sum(s.ctx_tokens for s in self.running) / len(self.running)
+
+    def kv_tokens(self) -> float:
+        return sum(s.ctx_tokens for s in self.running)
+
+    def kv_utilization(self) -> float:
+        cap = self.perf.kv_capacity_tokens()
+        if not math.isfinite(cap):
+            return self.n_running / max(self.max_batch_size, 1)
+        return self.kv_tokens() / cap
+
+    def slot_utilization(self) -> float:
+        return self.n_running / max(self.max_batch_size, 1)
+
+    def current_itl(self) -> float:
+        if not self.running:
+            return 0.0
+        return self.perf.itl(self.n_running, max(self.mean_ctx(), 1.0))
+
+    def current_throughput(self) -> float:
+        if not self.running:
+            return 0.0
+        return self.n_running / self.current_itl()
+
+    def spare_throughput(self) -> float:
+        """Tokens/s of unused slot capacity (used for BBP multiplexing)."""
+        spare = self.max_batch_size - self.n_running
+        if spare <= 0:
+            return 0.0
+        itl = self.perf.itl(self.max_batch_size, max(self.mean_ctx(), 512.0))
+        return spare / itl
+
+    def runs_interactive(self) -> bool:
+        return any(s.request.is_interactive for s in self.running)
+
+    def min_itl_slo(self) -> float:
+        if not self.running:
+            return float("inf")
+        return min(s.request.slo.itl for s in self.running)
+
+    # ------------------------------------------------------------ intake
+    def can_admit(self, req: Request) -> bool:
+        if not self.active or self.n_running >= self.max_batch_size:
+            return False
+        cap = self.perf.kv_capacity_tokens()
+        if math.isfinite(cap):
+            # hard admission wall well past the soft preemption inflection
+            if self.kv_tokens() + req.prompt_len > 1.5 * cap:
+                return False
+        return True
+
+    def admit(self, req: Request, now: float) -> None:
+        restored = req.saved_kv is not None
+        ctx = req.prompt_len + req.tokens_generated
+        prefill = 0.0 if restored else self.perf.prefill_time(req.prompt_len)
+        if restored:
+            req.saved_kv = None
+        req.state = RequestState.RUNNING
+        self.running.append(SimSeq(req, ctx, prefill))
+
+    def evict_one_batch(self, now: float) -> Optional[Request]:
+        """Mixed-instance preemption: interactive evicts batch; KV saved to
+        host so the restart skips re-prefill (paper §3)."""
+        for i in reversed(range(len(self.running))):
+            s = self.running[i]
+            if s.request.request_type == RequestType.BATCH:
+                self.running.pop(i)
+                s.request.state = RequestState.PREEMPTED
+                s.request.preemptions += 1
+                s.request.saved_kv = ("sim", s.ctx_tokens)
+                return s.request
+        return None
+
+    # ------------------------------------------------------------ stepping
+    def step(self, dt: float, now: float) -> Tuple[List[Request], int]:
+        """Advance the instance by dt of simulated wall time (fluid model)."""
+        if not self.active or not self.running:
+            return [], 0
+        b = self.n_running
+        itl = self.perf.itl(b, max(self.mean_ctx(), 1.0))
+        finished: List[Request] = []
+        tokens_out = 0
+        for s in list(self.running):
+            budget = dt
+            if s.prefill_left > 0:
+                used = min(budget, s.prefill_left)
+                s.prefill_left -= used
+                budget -= used
+                if s.prefill_left > 0:
+                    continue
+                if s.request.first_token_time is None:
+                    s.request.first_token_time = now + used
+                    s.request.tokens_generated += 1
+                    s.ctx_tokens += 1
+                    tokens_out += 1
+            ntok = int(budget / itl)
+            ntok = min(ntok, s.request.output_len - s.request.tokens_generated)
+            if ntok > 0:
+                s.request.tokens_generated += ntok
+                s.ctx_tokens += ntok
+                tokens_out += ntok
+                s.request.itl_samples.append(itl)
+                if s.request.first_token_time is None:
+                    s.request.first_token_time = now + itl
+            if s.done:
+                s.request.state = RequestState.FINISHED
+                s.request.finish_time = now + dt
+                self.running.remove(s)
+                finished.append(s.request)
+        return finished, tokens_out
+
+    def update_local_autoscaler(self) -> None:
+        if self.local is None or not self.running:
+            return
+        m = LocalMetrics(observed_itl=self.current_itl(),
+                         throughput=self.current_throughput(),
+                         itl_slo=self.min_itl_slo(),
+                         n_active=self.n_running,
+                         batch_size=self.local.max_batch_size)
+        self.local.update(m)
+
+
+class SimCluster:
+    def __init__(self, perf_factory, *, max_chips: int = 400,
+                 load_time: Optional[float] = None):
+        """perf_factory: model_name -> PerfModel (fresh or shared)."""
+        self.perf_factory = perf_factory
+        self.max_chips = max_chips
+        self.load_time = load_time
+        self.instances: List[SimInstance] = []
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.chip_seconds = 0.0
+        self.peak_chips = 0
+
+    # ------------------------------------------------------------ queries
+    def by_type(self, itype: InstanceType) -> List[SimInstance]:
+        return [i for i in self.instances if i.itype == itype]
+
+    def active_instances(self) -> List[SimInstance]:
+        return [i for i in self.instances if i.active]
+
+    def used_chips(self) -> int:
+        return sum(i.perf.chips for i in self.instances)
+
+    @property
+    def hysteresis(self) -> float:
+        """Total scaling actions / scale-ups (paper §2.3 definition)."""
+        if self.scale_ups == 0:
+            return 0.0
+        return (self.scale_ups + self.scale_downs) / self.scale_ups
+
+    # ------------------------------------------------------------ scaling
+    def provision(self, model: str, itype: InstanceType, now: float,
+                  **inst_kw) -> Optional[SimInstance]:
+        perf = self.perf_factory(model)
+        if self.used_chips() + perf.chips > self.max_chips:
+            return None
+        inst = SimInstance(perf, itype, now, load_time=self.load_time,
+                           **inst_kw)
+        self.instances.append(inst)
+        self.scale_ups += 1
+        self.peak_chips = max(self.peak_chips, self.used_chips())
+        return inst
+
+    def retire(self, inst: SimInstance) -> List[Request]:
+        """Remove an instance; returns displaced requests for requeueing."""
+        displaced = [s.request for s in inst.running]
+        for r in displaced:
+            r.state = RequestState.PREEMPTED
+            r.saved_kv = None   # instance gone; must re-prefill elsewhere
+        inst.running.clear()
+        inst.state = InstanceState.RETIRED
+        self.instances.remove(inst)
+        self.scale_downs += 1
+        return displaced
+
+    def tick_accounting(self, dt: float) -> None:
+        self.chip_seconds += self.used_chips() * dt

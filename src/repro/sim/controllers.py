@@ -1,0 +1,266 @@
+"""Cluster controllers: Chiron (hierarchical) and the baselines.
+
+A controller's ``control(cluster, queue, now)`` runs every control interval
+and turns backpressure into provision/retire actions; ``route`` places
+queued requests onto instances per the paper's preferential routing.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+from repro.core.baselines import LlumnixAutoscaler
+from repro.core.global_autoscaler import BatchAutoscaler, InteractiveAutoscaler
+from repro.core.local_autoscaler import LocalAutoscaler
+from repro.core.waiting_time import WaitingTimeEstimator
+from repro.serving.global_queue import GlobalQueue
+from repro.serving.request import Request, RequestType
+from repro.sim.cluster import InstanceType, SimCluster, SimInstance
+
+
+def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
+    """Most-loaded instance that can still admit (packing). Packing — not
+    least-loaded spreading — keeps interactive requests concentrated so
+    IBP counts genuinely-busy instances and mixed spare capacity stays
+    spare (otherwise every mixed instance 'runs interactive' and the
+    interactive scaler over-provisions 3x its own additions)."""
+    cands = [i for i in insts if i.active]
+    if not cands:
+        return None
+    return max(cands, key=lambda i: i.slot_utilization())
+
+
+class BaseController:
+    """Shared routing: interactive -> interactive then mixed (preempting
+    batch); batch -> batch instances then spare mixed capacity."""
+
+    serves_batch_on_mixed = True
+
+    def route(self, cluster: SimCluster, queue: GlobalQueue, now: float) -> None:
+        # ---- interactive: zero-queuing
+        while queue.n_interactive:
+            req = queue.interactive[0]
+            placed = False
+            for pool in (cluster.by_type(InstanceType.INTERACTIVE),
+                         cluster.by_type(InstanceType.MIXED)):
+                inst = _best_fit([i for i in pool if i.can_admit(req)])
+                if inst is not None:
+                    inst.admit(queue.pop_interactive(), now)
+                    placed = True
+                    break
+            if not placed:
+                # preempt a batch request on a mixed instance
+                for inst in cluster.by_type(InstanceType.MIXED):
+                    if not inst.active:
+                        continue
+                    victim = inst.evict_one_batch(now)
+                    if victim is not None:
+                        queue.requeue(victim)
+                        inst.admit(queue.pop_interactive(), now)
+                        placed = True
+                        break
+            if not placed:
+                break   # cluster saturated; request waits (SLO at risk)
+
+        # ---- batch: fill batch instances, then spare mixed capacity
+        if not queue.n_batch:
+            return
+        # one sort per routing pass (preempted-first, then group FCFS),
+        # then admit from the front — not a sort per admission
+        queue.batch.sort(key=lambda r: (r.saved_kv is None, r.deadline,
+                                        r.arrival_time))
+        pools = [cluster.by_type(InstanceType.BATCH)]
+        if self.serves_batch_on_mixed:
+            pools.append(cluster.by_type(InstanceType.MIXED))
+        idx = 0
+        for pool in pools:
+            for inst in pool:
+                while inst.active and idx < len(queue.batch):
+                    if not inst.can_admit(queue.batch[idx]):
+                        break
+                    inst.admit(queue.batch[idx], now)
+                    idx += 1
+        del queue.batch[:idx]
+
+    def control(self, cluster: SimCluster, queue: GlobalQueue,
+                now: float) -> None:
+        raise NotImplementedError
+
+
+@dataclass
+class ChironController(BaseController):
+    """The paper's hierarchical autoscaler (local + global)."""
+    model: str = "llama-8b"
+    theta: float = 1.0 / 3.0
+    delta: float = 0.1
+    itl_slo_interactive: float = 0.2
+    itl_slo_batch: float = 2.0
+    local_enabled: bool = True          # False -> "Global" ablation arm
+    global_enabled: bool = True         # False -> "Local" ablation arm
+    static_batch: int = 64              # used when local_enabled=False
+    estimator: WaitingTimeEstimator = field(default_factory=WaitingTimeEstimator)
+    min_instances: int = 1
+    init_batch: int = 8
+    max_batch: int = 4096
+    group_k: int = 0                    # -1 disables request groups (Fig. 6)
+    # paper §5.2: Theta is chosen from historical arrival spikes (tail
+    # spike 3x -> Theta = 1/3). auto_theta re-estimates it online from the
+    # observed arrival process every `theta_refresh` seconds.
+    auto_theta: bool = False
+    theta_refresh: float = 120.0
+
+    def __post_init__(self):
+        self.interactive_scaler = InteractiveAutoscaler(
+            self.theta, self.delta, self.min_instances)
+        self._batch_scaler: Optional[BatchAutoscaler] = None
+        self._arrivals: List[float] = []
+        self._next_theta_update = self.theta_refresh
+
+    # ------------------------------------------------------------ helpers
+    def _mk_local(self, slo: float) -> Optional[LocalAutoscaler]:
+        if not self.local_enabled:
+            return None
+        return LocalAutoscaler(itl_slo=slo, init_batch=self.init_batch,
+                               max_batch=self.max_batch)
+
+    def _provision(self, cluster: SimCluster, itype: InstanceType,
+                   now: float) -> Optional[SimInstance]:
+        slo = self.itl_slo_batch if itype == InstanceType.BATCH \
+            else self.itl_slo_interactive
+        return cluster.provision(
+            self.model, itype, now,
+            local_autoscaler=self._mk_local(slo),
+            static_batch=None if self.local_enabled else self.static_batch)
+
+    def batch_instance_throughput(self, cluster: SimCluster) -> float:
+        perf = cluster.perf_factory(self.model)
+        b = perf.optimal_batch(self.itl_slo_batch, mean_ctx=512.0)
+        return perf.throughput(b, mean_ctx=512.0)
+
+    # ------------------------------------------------------------ control
+    def observe_arrival(self, req: Request, now: float) -> None:
+        if self.auto_theta and req.is_interactive:
+            self._arrivals.append(now)
+
+    def _refresh_theta(self, now: float) -> None:
+        if not self.auto_theta or now < self._next_theta_update:
+            return
+        self._next_theta_update = now + self.theta_refresh
+        if len(self._arrivals) < 20:
+            return
+        from repro.sim.workload import arrival_spikes
+
+        class _R:  # arrival_spikes wants .arrival_time
+            __slots__ = ("arrival_time",)
+
+            def __init__(self, t):
+                self.arrival_time = t
+        spikes = arrival_spikes([_R(t) for t in self._arrivals], 30.0)
+        if spikes:
+            import numpy as np
+            tail = float(np.percentile(spikes, 99.0))
+            self.interactive_scaler.theta = 1.0 / max(tail, 1.0)
+
+    def control(self, cluster: SimCluster, queue: GlobalQueue,
+                now: float) -> None:
+        # 0. bootstrap + optional Theta re-estimation from arrival history
+        self._refresh_theta(now)
+        if not cluster.instances:
+            self._provision(cluster, InstanceType.MIXED, now)
+
+        # 1. local autoscaling on every instance
+        if self.local_enabled:
+            for inst in cluster.active_instances():
+                inst.update_local_autoscaler()
+
+        # 2. interactive/mixed scaling on IBP
+        if self.global_enabled:
+            inter = cluster.by_type(InstanceType.INTERACTIVE)
+            mixed = cluster.by_type(InstanceType.MIXED)
+            n_running = sum(1 for i in inter + mixed if i.runs_interactive())
+            dec = self.interactive_scaler.update(n_running, len(inter),
+                                                 len(mixed))
+            if dec.delta_instances > 0:
+                for _ in range(dec.delta_instances):
+                    if self._provision(cluster, InstanceType.MIXED, now) is None:
+                        break
+            elif dec.delta_instances < 0:
+                idle_mixed = [i for i in cluster.by_type(InstanceType.MIXED)
+                              if i.active and not i.runs_interactive()]
+                idle_mixed.sort(key=lambda i: i.n_running)
+                for inst in idle_mixed[:-dec.delta_instances]:
+                    if len(cluster.by_type(InstanceType.MIXED)) + \
+                            len(cluster.by_type(InstanceType.INTERACTIVE)) \
+                            <= self.min_instances:
+                        break
+                    for r in cluster.retire(inst):
+                        queue.requeue(r)
+
+            # 3. batch scaling on BBP (Algorithm 2)
+            if self._batch_scaler is None:
+                self._batch_scaler = BatchAutoscaler(
+                    self.estimator, self.batch_instance_throughput(cluster),
+                    group_k=self.group_k)
+            spare = sum(i.spare_throughput()
+                        for i in cluster.by_type(InstanceType.MIXED)
+                        if i.active)
+            n_batch_inst = len(cluster.by_type(InstanceType.BATCH))
+            n_active_batch = sum(
+                sum(1 for s in i.running
+                    if s.request.request_type == RequestType.BATCH)
+                for i in cluster.instances)
+            dec2 = self._batch_scaler.update(
+                queue.batch, now,
+                n_batch_instances=n_batch_inst,
+                spare_mixed_throughput=spare,
+                n_active_batch_requests=n_active_batch)
+            if dec2.retire_all:
+                for inst in list(cluster.by_type(InstanceType.BATCH)):
+                    for r in cluster.retire(inst):
+                        queue.requeue(r)
+            else:
+                for _ in range(dec2.add_instances):
+                    if self._provision(cluster, InstanceType.BATCH, now) is None:
+                        break
+
+    def observe_completion(self, req: Request) -> None:
+        self.estimator.output_model.observe(req.output_len)
+
+
+@dataclass
+class LlumnixController(BaseController):
+    """Utilization-band autoscaler; SLO-unaware, no queue deferral."""
+    model: str = "llama-8b"
+    low: float = 0.3
+    high: float = 0.8
+    static_batch: int = 64
+    min_instances: int = 1
+
+    def __post_init__(self):
+        self.scaler = LlumnixAutoscaler(self.low, self.high,
+                                        self.min_instances)
+
+    # every Llumnix instance serves whatever arrives -> model as MIXED
+    def control(self, cluster: SimCluster, queue: GlobalQueue,
+                now: float) -> None:
+        if not cluster.instances:
+            cluster.provision(self.model, InstanceType.MIXED, now,
+                              static_batch=self.static_batch)
+        insts = cluster.active_instances()
+        util = (sum(i.kv_utilization() for i in insts) / len(insts)) \
+            if insts else 1.0
+        delta = self.scaler.update(util, len(cluster.instances), len(queue))
+        if delta > 0:
+            for _ in range(delta):
+                cluster.provision(self.model, InstanceType.MIXED, now,
+                                  static_batch=self.static_batch)
+        elif delta < 0:
+            idle = [i for i in insts if i.n_running == 0]
+            for inst in idle[:(-delta)]:
+                if len(cluster.instances) <= self.min_instances:
+                    break
+                cluster.retire(inst)
+
+    def observe_completion(self, req: Request) -> None:
+        pass

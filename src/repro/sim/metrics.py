@@ -1,0 +1,110 @@
+"""Experiment metrics: SLO attainment, throughput, GPU efficiency, hysteresis."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.serving.request import Request, RequestState, RequestType
+
+
+@dataclass
+class TimelinePoint:
+    t: float
+    n_interactive: int
+    n_mixed: int
+    n_batch: int
+    chips: int
+    q_interactive: int
+    q_batch: int
+    tokens_per_s: float
+
+
+@dataclass
+class RunResult:
+    requests: List[Request]
+    timeline: List[TimelinePoint]
+    chip_seconds: float
+    peak_chips: int
+    scale_ups: int
+    scale_downs: int
+    duration: float
+
+    # ------------------------------------------------------------ SLOs
+    def _done(self, rtype=None) -> List[Request]:
+        rs = [r for r in self.requests if rtype is None
+              or r.request_type == rtype]
+        return rs
+
+    def slo_attainment(self, rtype=None) -> float:
+        rs = self._done(rtype)
+        if not rs:
+            return 1.0
+        return sum(r.slo_met() for r in rs) / len(rs)
+
+    def ttft_attainment(self, rtype=None) -> float:
+        rs = self._done(rtype)
+        if not rs:
+            return 1.0
+        return sum(1 for r in rs
+                   if r.state == RequestState.FINISHED and r.ttft_met()) / len(rs)
+
+    def completion_rate(self) -> float:
+        if not self.requests:
+            return 1.0
+        return sum(r.state == RequestState.FINISHED
+                   for r in self.requests) / len(self.requests)
+
+    # ------------------------------------------------------------ thr/eff
+    def total_tokens(self) -> int:
+        return sum(r.tokens_generated for r in self.requests)
+
+    def request_throughput(self) -> float:
+        done = [r for r in self.requests if r.state == RequestState.FINISHED]
+        return len(done) / self.duration if self.duration else 0.0
+
+    def per_instance_throughput(self) -> float:
+        """Mean tokens/s per active instance over the run."""
+        if not self.timeline:
+            return 0.0
+        samples = [(p.tokens_per_s, p.n_interactive + p.n_mixed + p.n_batch)
+                   for p in self.timeline if
+                   (p.n_interactive + p.n_mixed + p.n_batch) > 0]
+        if not samples:
+            return 0.0
+        return sum(t / n for t, n in samples) / len(samples)
+
+    def gpu_hours(self) -> float:
+        return self.chip_seconds / 3600.0
+
+    @property
+    def hysteresis(self) -> float:
+        if self.scale_ups == 0:
+            return 0.0
+        return (self.scale_ups + self.scale_downs) / self.scale_ups
+
+    def mean_itl(self, rtype=None) -> float:
+        rs = [r for r in self._done(rtype) if r.itl_samples]
+        if not rs:
+            return 0.0
+        vals = [sum(r.itl_samples) / len(r.itl_samples) for r in rs]
+        return sum(vals) / len(vals)
+
+    def p99_ttft(self, rtype=None) -> float:
+        ttfts = sorted(r.ttft for r in self._done(rtype) if r.ttft is not None)
+        if not ttfts:
+            return 0.0
+        return ttfts[min(int(0.99 * len(ttfts)), len(ttfts) - 1)]
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "slo_attainment": self.slo_attainment(),
+            "slo_interactive": self.slo_attainment(RequestType.INTERACTIVE),
+            "slo_batch": self.slo_attainment(RequestType.BATCH),
+            "completion_rate": self.completion_rate(),
+            "request_throughput": self.request_throughput(),
+            "per_instance_throughput": self.per_instance_throughput(),
+            "gpu_hours": self.gpu_hours(),
+            "peak_chips": self.peak_chips,
+            "hysteresis": self.hysteresis,
+            "mean_itl": self.mean_itl(),
+        }

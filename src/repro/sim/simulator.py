@@ -1,0 +1,105 @@
+"""Discrete-time cluster simulation loop.
+
+Drives arrivals -> global queue -> controller routing -> instance fluid
+steps -> completions, at a fixed tick (default 0.25 s), with the controller
+invoked every ``control_interval``. The identical ``repro.core`` autoscaler
+code used by the real engine runs here — only the data plane is simulated
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+from repro.serving.global_queue import GlobalQueue
+from repro.serving.request import Request, RequestState
+from repro.sim.cluster import InstanceType, SimCluster
+from repro.sim.controllers import BaseController
+from repro.sim.metrics import RunResult, TimelinePoint
+from repro.sim.perf_model import PerfModel
+
+
+def simulate(requests: List[Request], controller: BaseController,
+             cluster: SimCluster, *, dt: float = 0.25,
+             control_interval: float = 1.0, max_time: float = 7200.0,
+             warm_start: int = 0, timeline_every: float = 1.0) -> RunResult:
+    queue = GlobalQueue()
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    pi = 0
+    t = 0.0
+    next_control = 0.0
+    next_timeline = 0.0
+    timeline: List[TimelinePoint] = []
+
+    # optional warm start: instances pre-provisioned and instantly active
+    for _ in range(warm_start):
+        inst = controller._provision(cluster, InstanceType.MIXED, t) \
+            if hasattr(controller, "_provision") else \
+            cluster.provision(controller.model, InstanceType.MIXED, t,
+                              static_batch=getattr(controller, "static_batch", 64))
+        if inst is not None:
+            inst.ready_time = t
+
+    while t < max_time:
+        # 1. arrivals
+        while pi < len(pending) and pending[pi].arrival_time <= t:
+            queue.push(pending[pi])
+            if hasattr(controller, "observe_arrival"):
+                controller.observe_arrival(pending[pi], t)
+            pi += 1
+
+        # 2. instance state transitions
+        for inst in cluster.instances:
+            inst.activate_if_ready(t)
+
+        # 3. control (scaling) then routing
+        if t >= next_control:
+            controller.control(cluster, queue, t)
+            next_control = t + control_interval
+        controller.route(cluster, queue, t)
+
+        # 4. data-plane step
+        tok_this_tick = 0
+        for inst in cluster.active_instances():
+            finished, toks = inst.step(dt, t)
+            tok_this_tick += toks
+            for r in finished:
+                controller.observe_completion(r)
+
+        cluster.tick_accounting(dt)
+
+        # 5. timeline sample
+        if t >= next_timeline:
+            timeline.append(TimelinePoint(
+                t,
+                len(cluster.by_type(InstanceType.INTERACTIVE)),
+                len(cluster.by_type(InstanceType.MIXED)),
+                len(cluster.by_type(InstanceType.BATCH)),
+                cluster.used_chips(),
+                queue.n_interactive, queue.n_batch,
+                tok_this_tick / dt))
+            next_timeline = t + timeline_every
+
+        t += dt
+
+        # 6. termination: all requests arrived and none outstanding
+        if pi >= len(pending) and len(queue) == 0 and \
+                all(not i.running for i in cluster.instances):
+            break
+
+    return RunResult(requests=requests, timeline=timeline,
+                     chip_seconds=cluster.chip_seconds,
+                     peak_chips=cluster.peak_chips,
+                     scale_ups=cluster.scale_ups,
+                     scale_downs=cluster.scale_downs,
+                     duration=t)
+
+
+def default_perf_factory(**perf_kw) -> Callable[[str], PerfModel]:
+    cache = {}
+
+    def factory(model: str) -> PerfModel:
+        if model not in cache:
+            cache[model] = PerfModel(model, **perf_kw)
+        return cache[model]
+    return factory

@@ -1,0 +1,36 @@
+"""Minimal dependency-free checkpointing: pytree <-> .npz + structure file."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(path: str, tree: Any, meta: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"),
+             **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    with open(os.path.join(path, "structure.json"), "w") as f:
+        json.dump({"treedef": str(treedef), "n_leaves": len(leaves),
+                   "meta": meta or {}}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = jax.tree.flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert arr.shape == ref.shape, (i, arr.shape, ref.shape)
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(out)
+
+
+def checkpoint_meta(path: str) -> dict:
+    with open(os.path.join(path, "structure.json")) as f:
+        return json.load(f)["meta"]

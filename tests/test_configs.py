@@ -1,0 +1,68 @@
+"""The assigned architecture table, verified exactly."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config
+
+# (arch, type, L, d_model, H, kv, d_ff, vocab)
+ASSIGNED = [
+    ("olmo-1b", "dense", 16, 2048, 16, 16, 8192, 50304),
+    ("granite-8b", "dense", 36, 4096, 32, 8, 14336, 49152),
+    ("zamba2-2.7b", "hybrid", 54, 2560, 32, 32, 10240, 32000),
+    ("phi3-mini-3.8b", "dense", 32, 3072, 32, 32, 8192, 32064),
+    ("yi-34b", "dense", 60, 7168, 56, 8, 20480, 64000),
+    ("mamba2-1.3b", "ssm", 48, 2048, 0, 0, 0, 50280),
+    ("qwen2-moe-a2.7b", "moe", 24, 2048, 16, 16, 1408, 151936),
+    ("deepseek-moe-16b", "moe", 28, 2048, 16, 16, 1408, 102400),
+    ("whisper-base", "audio", 6, 512, 8, 8, 2048, 51865),
+    ("internvl2-2b", "vlm", 24, 2048, 16, 8, 8192, 92553),
+]
+
+
+@pytest.mark.parametrize("arch,atype,L,d,H,kv,ff,V", ASSIGNED)
+def test_assigned_config_exact(arch, atype, L, d, H, kv, ff, V):
+    cfg = get_config(arch)
+    assert cfg.arch_type == atype
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == H
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    assert cfg.source, "every config must cite its source"
+
+
+def test_moe_details():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.moe.n_experts, q.moe.n_shared_experts,
+            q.moe.experts_per_token) == (60, 4, 4)
+    d = get_config("deepseek-moe-16b")
+    assert (d.moe.n_experts, d.moe.n_shared_experts,
+            d.moe.experts_per_token) == (64, 2, 6)
+
+
+def test_ssm_details():
+    m = get_config("mamba2-1.3b")
+    assert m.ssm.state_dim == 128
+    z = get_config("zamba2-2.7b")
+    assert z.ssm.state_dim == 64
+    assert z.attn_every > 0 and z.n_layers % z.attn_every == 0
+
+
+def test_smoke_configs_reduced():
+    for arch in ASSIGNED_ARCHS:
+        s = get_smoke_config(arch)
+        assert s.n_layers <= 2
+        assert s.d_model <= 512
+        if s.is_moe:
+            assert s.moe.n_experts <= 4
+        assert s.arch_type == get_config(arch).arch_type
+
+
+def test_param_counts_plausible():
+    # sanity: headline sizes within ~45% of the advertised parameter count
+    expect = {"olmo-1b": 1.2e9, "granite-8b": 8e9, "yi-34b": 34e9,
+              "mamba2-1.3b": 1.3e9, "phi3-mini-3.8b": 3.8e9,
+              "deepseek-moe-16b": 16e9}
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.55 * n < got < 1.45 * n, (arch, got)

@@ -1,0 +1,120 @@
+"""Property-based tests for the paged KV allocator invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant,
+                                 precondition, rule)
+
+from repro.serving.kv_manager import OutOfPagesError, PagedKVManager
+
+
+def test_basic_alloc_free():
+    m = PagedKVManager(num_pages=10, page_size=16)
+    pages = m.allocate(1, 40)          # 3 pages
+    assert len(pages) == 3
+    assert m.free_pages == 7
+    m.free(1)
+    assert m.free_pages == 10
+    m.check_invariants()
+
+
+def test_append_grows_page():
+    m = PagedKVManager(num_pages=4, page_size=4)
+    m.allocate(1, 4)
+    assert m.used_pages == 1
+    for _ in range(4):
+        m.append_token(1)
+    assert m.used_pages == 2
+    assert m.seq_tokens(1) == 8
+    m.check_invariants()
+
+
+def test_out_of_pages():
+    m = PagedKVManager(num_pages=2, page_size=4)
+    m.allocate(1, 8)
+    with pytest.raises(OutOfPagesError):
+        m.allocate(2, 1)
+    with pytest.raises(OutOfPagesError):
+        m.append_token(1)
+    m.check_invariants()
+
+
+def test_swap_out_in_roundtrip():
+    m = PagedKVManager(num_pages=4, page_size=4)
+    m.allocate(1, 10)
+    assert m.used_pages == 3
+    m.swap_out(1)
+    assert m.free_pages == 4
+    assert not m.has_seq(1)
+    m.allocate(2, 16)
+    with pytest.raises(OutOfPagesError):
+        m.swap_in(1)
+    m.free(2)
+    pages = m.swap_in(1)
+    assert len(pages) == 3
+    assert m.seq_tokens(1) == 10
+    m.check_invariants()
+
+
+class KVStateMachine(RuleBasedStateMachine):
+    """Random alloc/append/free/swap sequences never violate invariants."""
+
+    def __init__(self):
+        super().__init__()
+        self.m = PagedKVManager(num_pages=32, page_size=4)
+        self.live = set()
+        self.on_host = set()
+        self.next_id = 0
+
+    @rule(n_tokens=st.integers(1, 40))
+    def allocate(self, n_tokens):
+        sid = self.next_id
+        self.next_id += 1
+        try:
+            self.m.allocate(sid, n_tokens)
+            self.live.add(sid)
+        except OutOfPagesError:
+            pass
+
+    @precondition(lambda self: self.live - self.on_host)
+    @rule(data=st.data())
+    def append(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live - self.on_host)))
+        try:
+            self.m.append_token(sid)
+        except OutOfPagesError:
+            pass
+
+    @precondition(lambda self: self.live)
+    @rule(data=st.data())
+    def free(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live)))
+        self.m.free(sid)
+        self.live.discard(sid)
+        self.on_host.discard(sid)
+
+    @precondition(lambda self: self.live - self.on_host)
+    @rule(data=st.data())
+    def swap_out(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.live - self.on_host)))
+        self.m.swap_out(sid)
+        self.on_host.add(sid)
+
+    @precondition(lambda self: self.on_host)
+    @rule(data=st.data())
+    def swap_in(self, data):
+        sid = data.draw(st.sampled_from(sorted(self.on_host)))
+        try:
+            self.m.swap_in(sid)
+            self.on_host.discard(sid)
+        except OutOfPagesError:
+            pass
+
+    @invariant()
+    def invariants_hold(self):
+        self.m.check_invariants()
+
+
+TestKVStateMachine = KVStateMachine.TestCase
+TestKVStateMachine.settings = settings(max_examples=30,
+                                       stateful_step_count=40,
+                                       deadline=None)

@@ -1,0 +1,93 @@
+"""Additional hypothesis properties on substrate invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+from repro.sim.perf_model import PerfModel
+from repro.sim.workload import WorkloadSpec, generate
+
+
+# ------------------------------------------------------------- fit_cache
+@given(total=st.integers(1, 40), clen=st.integers(1, 48),
+       window=st.sampled_from([0, 8, 16]))
+@settings(max_examples=40, deadline=None)
+def test_fit_cache_shapes_and_slots(total, clen, window):
+    Lyr, B, Hkv, D = 2, 1, 2, 4
+    if window:
+        clen = min(clen, window)
+    ks = jnp.arange(Lyr * B * total * Hkv * D, dtype=jnp.float32) \
+        .reshape(Lyr, B, total, Hkv, D)
+    vs = ks + 1
+    ko, vo, sp = L.fit_cache(ks, vs, total, clen, window, B)
+    assert ko.shape == (Lyr, B, clen, Hkv, D)
+    assert sp.shape == (B, clen)
+    spn = np.asarray(sp[0])
+    # every retained absolute position appears exactly once, and the
+    # retained set is exactly the last min(total, clen) positions
+    kept = sorted(p for p in spn if p >= 0)
+    expect = list(range(max(total - clen, 0), total))
+    assert kept == expect
+    # slot contents match: cache[slot] holds position sp[slot]
+    for slot, pos in enumerate(spn):
+        if pos < 0:
+            continue
+        np.testing.assert_array_equal(np.asarray(ko[:, 0, slot]),
+                                      np.asarray(ks[:, 0, pos]))
+
+
+# ------------------------------------------------------------- RoPE
+@given(pos=st.integers(0, 16384), shift=st.integers(1, 1000))
+@settings(max_examples=30, deadline=None)
+def test_rope_relative_property(pos, shift):
+    """<rope(q,i), rope(k,j)> depends only on i-j (relative encoding).
+
+    Bounded to pos <= 16k: f32 angle computation loses the property's
+    precision beyond ~1e5 absolute positions (production long-context
+    decode sidesteps this via the 4096-token sliding window, where
+    relative offsets stay small; exact 500k absolute RoPE would need f64
+    angles)."""
+    D = 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+
+    def score(i, j):
+        ci, si = L.rope_angles(jnp.array([[i]], jnp.float32), D, 1e4)
+        cj, sj = L.rope_angles(jnp.array([[j]], jnp.float32), D, 1e4)
+        qi = L.apply_rope(q, ci, si)
+        kj = L.apply_rope(k, cj, sj)
+        return float(jnp.sum(qi * kj))
+
+    a = score(pos, pos + shift)
+    b = score(pos + 7, pos + shift + 7)
+    # f32 trig at positions up to 1e5 carries ~1e-3 relative error
+    np.testing.assert_allclose(a, b, rtol=5e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- perf model
+@given(b1=st.integers(1, 2000), b2=st.integers(1, 2000),
+       ctx=st.sampled_from([128.0, 1024.0, 4096.0]))
+@settings(max_examples=50, deadline=None)
+def test_perf_model_itl_monotone_in_batch(b1, b2, ctx):
+    pm = PerfModel("llama-8b")
+    lo, hi = min(b1, b2), max(b1, b2)
+    assert pm.itl(lo, ctx) <= pm.itl(hi, ctx) * 1.0001
+
+
+@given(rate=st.floats(0.5, 200.0), n=st.integers(10, 300),
+       seed=st.integers(0, 50))
+@settings(max_examples=25, deadline=None)
+def test_workload_generator_sane(rate, n, seed):
+    reqs = generate(WorkloadSpec(n_requests=n, arrival_rate=rate, seed=seed))
+    assert len(reqs) == n
+    ts = [r.arrival_time for r in reqs]
+    assert ts == sorted(ts)
+    assert all(r.prompt_len >= 4 and r.output_len >= 4 for r in reqs)
+    assert all(r.prompt_len <= 2048 and r.output_len <= 2048 for r in reqs)
+    # empirical rate within a loose factor of the target
+    dur = ts[-1] - ts[0]
+    if dur > 1:
+        emp = (n - 1) / dur
+        assert 0.3 * rate < emp < 3.0 * rate

@@ -1,0 +1,50 @@
+"""Request-group clustering (1-D k-means on TTFT deadlines)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.request_groups import kmeans_1d, make_request_groups
+from repro.serving.request import make_batch
+
+
+def test_kmeans_separates_two_clusters():
+    vals = [1.0, 1.1, 0.9, 100.0, 101.0, 99.5]
+    assign = kmeans_1d(vals, 2)
+    assert assign[0] == assign[1] == assign[2]
+    assert assign[3] == assign[4] == assign[5]
+    assert assign[0] != assign[3]
+
+
+def test_groups_split_by_deadline():
+    fast = [make_batch(10, 10, arrival=0.0, ttft_slo=300.0) for _ in range(5)]
+    slow = [make_batch(10, 10, arrival=0.0, ttft_slo=3600.0) for _ in range(5)]
+    groups = make_request_groups(fast + slow)
+    assert len(groups) >= 2
+    # groups ordered by deadline; all fast requests in earlier groups
+    first = set(id(r) for r in groups[0].requests)
+    assert all(id(r) in first for r in fast) or groups[0].deadline < 3000
+
+
+def test_fcfs_within_group():
+    reqs = [make_batch(10, 10, arrival=float(10 - i), ttft_slo=600.0)
+            for i in range(5)]
+    [g] = make_request_groups(reqs, k=1)
+    order = [r.arrival_time for r in g.sorted_fcfs()]
+    assert order == sorted(order)
+
+
+@given(st.lists(st.floats(0.0, 10000.0), min_size=1, max_size=60),
+       st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_kmeans_total_assignment(vals, k):
+    assign = kmeans_1d(vals, k)
+    assert len(assign) == len(vals)
+    assert all(0 <= a < min(k, len(vals)) for a in assign)
+
+
+@given(st.integers(1, 100))
+@settings(max_examples=20, deadline=None)
+def test_every_request_in_exactly_one_group(n):
+    reqs = [make_batch(10, 10, arrival=float(i % 7), ttft_slo=600.0 * (1 + i % 3))
+            for i in range(n)]
+    groups = make_request_groups(reqs)
+    seen = [id(r) for g in groups for r in g.requests]
+    assert sorted(seen) == sorted(id(r) for r in reqs)

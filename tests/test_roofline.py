@@ -1,0 +1,43 @@
+"""Roofline extraction: HLO collective parsing + term math."""
+from repro.launch.roofline import (RooflineTerms, _shape_bytes,
+                                   collective_bytes)
+
+HLO = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[256,4096]{1,0} parameter(0)
+  %ag = bf16[4096,4096]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add
+  %rs = bf16[16,128]{1,0} reduce-scatter(%y), dimensions={0}
+  %a2a = f32[8,64]{1,0} all-to-all(%z), dimensions={0}
+  %cp = u32[2]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %ags = (bf16[32,32]{1,0}, bf16[32,32]{1,0}) all-gather-start(%v)
+  %agd = bf16[32,32]{1,0} all-gather-done(%ags)
+  ROOT %t = f32[1] tuple(%ar)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,4096]{1,0}") == 256 * 4096 * 2
+    assert _shape_bytes("f32[1024]{0}") == 4096
+    assert _shape_bytes("(bf16[2,2], f32[4])") == 8 + 16
+
+
+def test_collective_parse():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 4096 * 4096 * 2 + 2 * 32 * 32 * 2
+    assert out["all-reduce"] == 4096
+    assert out["reduce-scatter"] == 16 * 128 * 2
+    assert out["all-to-all"] == 8 * 64 * 4
+    assert out["collective-permute"] == 8
+
+
+def test_terms_bottleneck():
+    t = RooflineTerms(flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9,
+                      model_flops=100e12)
+    assert t.compute_s == 1.0
+    assert t.memory_s == 2.0
+    assert t.collective_s == 1.0
+    assert t.bottleneck == "memory"
+    assert 0 < t.useful_flops_ratio < 1

@@ -1,0 +1,93 @@
+"""Sharding rules: spec validity (in-process) + an 8-fake-device execution
+check (subprocess, so the device-count flag can't leak into other tests)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.launch.shardings import param_spec
+from repro.launch.steps import input_specs, resolve_config
+
+
+def test_param_spec_divisibility_fallback():
+    # vocab 50280 (mamba2) is not divisible by 16 -> replicated
+    spec = param_spec(("emb", "tok"), (50280, 2048), 16)
+    assert all(s is None for s in spec)
+    spec = param_spec(("emb", "tok"), (50304, 2048), 16)
+    assert spec[0] == "model"
+
+
+def test_param_spec_moe_f_sharded():
+    # f-sharded TP is preferred (uniform with the shard_map expert block,
+    # §Perf A4); expert-parallel is the fallback when f doesn't divide
+    spec = param_spec(("layers", "moe", "w_gate"), (24, 60, 2048, 1408), 16)
+    assert spec[1] is None and spec[3] == "model"
+    spec = param_spec(("layers", "moe", "w_down"), (28, 64, 1408, 2048), 16)
+    assert spec[2] == "model"
+    # f not divisible -> expert parallel fallback
+    spec = param_spec(("layers", "moe", "w_gate"), (24, 64, 2048, 1000), 16)
+    assert spec[1] == "model"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape", list(INPUT_SHAPES))
+def test_input_specs_build(arch, shape):
+    """Every (arch x shape) produces well-formed ShapeDtypeStructs without
+    touching devices."""
+    sp = INPUT_SHAPES[shape]
+    cfg = resolve_config(get_config(arch), sp)
+    specs = input_specs(cfg, sp)
+    assert "params" in specs
+    if sp.kind == "train":
+        assert specs["batch"]["tokens"].shape == (sp.global_batch, sp.seq_len)
+    elif sp.kind == "decode":
+        assert specs["tokens"].shape == (sp.global_batch, 1)
+        assert "cache" in specs
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.configs import get_smoke_config
+    from repro.launch import shardings as sh
+    from repro.models import Model
+
+    cfg = get_smoke_config("granite-8b").with_(vocab_size=512)
+    model = Model(cfg)
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    params = model.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = model.example_batch(4, 32, jax.random.PRNGKey(1),
+                                dtype=jnp.float32)
+    ref_logits, _ = model.forward(params, batch)
+
+    p_spec = jax.eval_shape(lambda: params)
+    p_sh = sh.param_shardings(mesh, p_spec)
+    b_sh = sh.batch_shardings(mesh, jax.eval_shape(lambda: batch))
+    with mesh:
+        f = jax.jit(lambda p, b: model.forward(p, b)[0],
+                    in_shardings=(p_sh, b_sh))
+        out = f(params, batch)
+    err = float(jnp.max(jnp.abs(out - ref_logits)))
+    print(json.dumps({"err": err, "n_dev": len(jax.devices())}))
+""")
+
+
+def test_sharded_forward_matches_single_device():
+    """Run the same smoke model on a (2,4) mesh of 8 host devices; the
+    sharded result must match the unsharded one."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["n_dev"] == 8
+    assert rec["err"] < 2e-3, rec

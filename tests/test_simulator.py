@@ -1,0 +1,91 @@
+"""Cluster-simulation invariants + paper-level behaviour ordering."""
+import pytest
+
+from repro.serving.request import RequestState, RequestType
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController, LlumnixController
+from repro.sim.perf_model import PerfModel
+from repro.sim.simulator import default_perf_factory, simulate
+from repro.sim.workload import WorkloadSpec, generate, theta_from_history
+
+
+def _run(ctrl, reqs, max_chips=200, **kw):
+    cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
+    return simulate(reqs, ctrl, cluster, max_time=kw.pop("max_time", 900),
+                    warm_start=kw.pop("warm_start", 2), **kw)
+
+
+def test_conservation_all_requests_terminate():
+    spec = WorkloadSpec(n_requests=200, arrival_rate=15.0, seed=3)
+    reqs = generate(spec)
+    res = _run(ChironController(), reqs)
+    states = [r.state for r in reqs]
+    assert all(s == RequestState.FINISHED for s in states)
+    # each finished exactly once with sane bookkeeping
+    for r in reqs:
+        assert r.tokens_generated == r.output_len
+        assert r.finish_time is not None and r.first_token_time is not None
+        assert r.finish_time >= r.first_token_time >= r.arrival_time
+
+
+def test_gpu_accounting_positive():
+    spec = WorkloadSpec(n_requests=100, arrival_rate=10.0, seed=4)
+    res = _run(ChironController(), generate(spec))
+    assert res.gpu_hours() > 0
+    assert res.peak_chips > 0
+    assert res.duration > 0
+
+
+def test_mixed_workload_completes_with_multiplexing():
+    spec = WorkloadSpec(n_requests=150, arrival_rate=10.0,
+                        interactive_frac=0.7, batch_ttft_slo=600.0, seed=5)
+    reqs = generate(spec)
+    res = _run(ChironController(), reqs, max_time=1200)
+    assert res.completion_rate() == 1.0
+    assert res.slo_attainment(RequestType.INTERACTIVE) > 0.5
+
+
+def test_chiron_beats_llumnix_on_batch_efficiency():
+    """Paper §6.2/Fig 19: with a batch queue + interactive stream, Chiron
+    multiplexes the queue into spare capacity and uses fewer GPU-hours."""
+    def mk(seed=7):
+        return generate(WorkloadSpec(
+            n_requests=150, arrival_rate=8.0, interactive_frac=1.0,
+            batch_queue_size=400, batch_ttft_slo=900.0, seed=seed))
+
+    res_c = _run(ChironController(), mk(), max_time=1500)
+    res_l = _run(LlumnixController(), mk(), max_time=1500)
+    assert res_c.completion_rate() > 0.95
+    # efficiency: fewer chip-hours per completed request
+    eff_c = res_c.gpu_hours() / max(sum(
+        r.state == RequestState.FINISHED for r in res_c.requests), 1)
+    eff_l = res_l.gpu_hours() / max(sum(
+        r.state == RequestState.FINISHED for r in res_l.requests), 1)
+    assert eff_c < eff_l, (eff_c, eff_l)
+
+
+def test_hysteresis_lower_with_groups():
+    spec = WorkloadSpec(n_requests=100, arrival_rate=5.0,
+                        interactive_frac=1.0, batch_queue_size=300,
+                        batch_ttft_slo=600.0, seed=8)
+    res = _run(ChironController(), generate(spec), max_time=1200)
+    # grouped batch scaling adds instances in bulk: few scaling actions
+    assert res.scale_ups < 25
+
+
+def test_theta_from_history():
+    reqs = generate(WorkloadSpec(n_requests=500, arrival_rate=20.0, seed=9,
+                                 process="gamma", cv=3.0))
+    th = theta_from_history(reqs)
+    assert 0.0 < th <= 1.0
+
+
+def test_perf_model_fig3_shape():
+    """Fig. 3: ITL monotone in batch; throughput has an inflection."""
+    pm = PerfModel("llama-8b")
+    itls = [pm.itl(b, 1024) for b in (1, 32, 128, 256, 512, 1024)]
+    assert all(a <= b * 1.001 for a, b in zip(itls, itls[1:]))
+    thr = [pm.throughput(b, 1024) for b in (1, 32, 128, 256, 512, 1024)]
+    peak = max(thr)
+    assert thr.index(peak) not in (0, len(thr) - 1)   # interior inflection
+    assert thr[-1] < peak

@@ -1,0 +1,74 @@
+"""End-to-end behaviour tests for the paper's system (Chiron).
+
+These mirror the paper's headline claims at reduced scale:
+- hierarchical autoscaling keeps SLOs while using fewer GPU-hours than a
+  utilization autoscaler on a mixed interactive+batch workload;
+- the ablation ordering (full Chiron >= single-level arms) holds;
+- the whole pipeline (workload -> queue -> routing -> scaling -> metrics)
+  conserves requests.
+"""
+import pytest
+
+from repro.serving.request import RequestState, RequestType
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController, LlumnixController
+from repro.sim.simulator import default_perf_factory, simulate
+from repro.sim.workload import WorkloadSpec, generate
+
+
+def _spec(seed=11, **kw):
+    base = dict(n_requests=150, arrival_rate=8.0, interactive_frac=1.0,
+                batch_queue_size=350, batch_ttft_slo=900.0, seed=seed)
+    base.update(kw)
+    return WorkloadSpec(**base)
+
+
+def _run(ctrl, spec, max_time=1500):
+    cluster = SimCluster(default_perf_factory(), max_chips=200)
+    return simulate(generate(spec), ctrl, cluster, max_time=max_time,
+                    warm_start=2)
+
+
+def test_full_pipeline_conserves_and_meets_slos():
+    res = _run(ChironController(), _spec())
+    assert res.completion_rate() == 1.0
+    assert res.slo_attainment(RequestType.INTERACTIVE) > 0.7
+    assert res.ttft_attainment(RequestType.BATCH) > 0.7
+
+
+def test_chiron_more_efficient_than_llumnix():
+    res_c = _run(ChironController(), _spec(seed=21))
+    res_l = _run(LlumnixController(), _spec(seed=21))
+    done_c = sum(r.state == RequestState.FINISHED for r in res_c.requests)
+    done_l = sum(r.state == RequestState.FINISHED for r in res_l.requests)
+    eff_c = res_c.gpu_hours() / max(done_c, 1)
+    eff_l = res_l.gpu_hours() / max(done_l, 1)
+    assert eff_c < eff_l
+
+
+def test_ablation_ordering():
+    """Fig. 18: both levels contribute.
+
+    - vs global-only (static batch size): the local autoscaler lifts
+      per-instance throughput;
+    - vs local-only (no instance scaling): the global autoscaler adds the
+      batch instances needed to meet TTFT deadlines under backlog.
+    """
+    spec = _spec(seed=31, n_requests=400, arrival_rate=20.0,
+                 batch_queue_size=20000, batch_ttft_slo=120.0)
+    full = _run(ChironController(), spec, max_time=1200)
+    spec_l = _spec(seed=31, n_requests=400, arrival_rate=20.0,
+                   batch_queue_size=20000, batch_ttft_slo=120.0)
+    local_only = _run(ChironController(global_enabled=False), spec_l,
+                      max_time=1200)
+    spec_g = _spec(seed=31, n_requests=400, arrival_rate=20.0,
+                   batch_queue_size=20000, batch_ttft_slo=120.0)
+    global_only = _run(ChironController(local_enabled=False,
+                                        static_batch=48), spec_g,
+                       max_time=1200)
+    # local contribution: higher per-instance throughput than static batch
+    assert full.per_instance_throughput() > \
+        global_only.per_instance_throughput()
+    # global contribution: batch TTFT attainment under backlog
+    assert full.ttft_attainment(RequestType.BATCH) > \
+        local_only.ttft_attainment(RequestType.BATCH)

@@ -1,0 +1,45 @@
+"""QLM waiting-time estimator: online fitting + CLT sharpening property."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.waiting_time import OutputLengthModel, WaitingTimeEstimator
+
+
+def test_output_model_fits():
+    m = OutputLengthModel()
+    rng = np.random.default_rng(0)
+    xs = rng.lognormal(5.0, 0.8, 500)
+    for x in xs:
+        m.observe(int(x))
+    assert abs(m.mu - xs.astype(int).mean()) < 1.0
+    assert abs(m.sigma - xs.astype(int).std()) < 2.0
+
+
+def test_waiting_time_eq1():
+    est = WaitingTimeEstimator()
+    est.output_model.mu = 100.0
+    # Eq 1: W = sum O_i / Theta = 10*100/500
+    assert est.waiting_time(10, 500.0) == 2.0
+    assert est.waiting_time(10, 500.0, n_instances=2) == 1.0
+    assert est.waiting_time(0, 500.0) == 0.0
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_clt_relative_error_shrinks(seed):
+    """Paper Fig. 14: estimates sharpen as the queue grows — the relative
+    error of total-token prediction at q=2000 must beat q=20 on average."""
+    rng = np.random.default_rng(seed)
+    m = OutputLengthModel()
+    for x in rng.lognormal(5.0, 0.8, 300):
+        m.observe(int(x))
+
+    def rel_err(q, trials=30):
+        errs = []
+        for _ in range(trials):
+            actual = rng.lognormal(5.0, 0.8, q).astype(int).sum()
+            pred = q * m.mu
+            errs.append(abs(pred - actual) / actual)
+        return np.mean(errs)
+
+    assert rel_err(2000) < rel_err(20)
