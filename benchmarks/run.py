@@ -34,6 +34,7 @@ MODULES = [
     "fig17_burstiness",
     "fig18_ablation",
     "fig19_timeline",
+    "scenario_sweep",
     "arch_sweep",
     "appendix_a1_load_time",
     "kernels_micro",

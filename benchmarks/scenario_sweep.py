@@ -1,0 +1,271 @@
+"""Scenario sweep + simulator-engine benchmark.
+
+Three sections:
+
+- ``scenario/<name>``: every registered scenario (repro.sim.scenarios) run
+  end-to-end on the event-driven core with the Chiron controller.
+- ``fig19_equiv``: the fig19_timeline workload run on both engines; the
+  instance-count timelines must agree within one control interval
+  (``decisions_match``).
+- ``speedup``: a 100k-request bursty trace (batch backlog + interactive
+  burst spikes) on (a) the event core, (b) the tuned fixed-tick loop at
+  dt=0.25 (post-PR data plane), and (c) the seed's fixed-tick loop whose
+  batch queue re-sorts on every service pass — the O(n^2 log n) drain the
+  event core replaces. (c) runs under a wall-clock budget and is reported
+  as a lower bound when it exceeds it; a small-n curve shows its
+  superlinear growth.
+
+Env knobs: ``SCENARIO_SWEEP_N`` (speedup trace size, default 100000),
+``SCENARIO_SWEEP_LEGACY_BUDGET`` (seconds, default 120).
+"""
+from __future__ import annotations
+
+import os
+import signal
+import time
+from collections import deque
+from typing import List, Optional
+
+from benchmarks.common import MAX_CHIPS, Row, chiron
+from repro.serving.request import Request, RequestState, RequestType
+from repro.sim.cluster import SimCluster
+from repro.sim.metrics import decisions_match
+from repro.sim.scenarios import SCENARIOS, build
+from repro.sim.simulator import (default_perf_factory, simulate_events,
+                                 simulate_fixed_tick)
+from repro.sim.workload import WorkloadSpec, generate
+
+
+class SeedFcfsQueue:
+    """The seed's global queue, reconstructed for the baseline row: the
+    batch side is a plain list that is re-sorted whenever the head is
+    served in deadline/FCFS order (one sort per routing pass, exactly the
+    scaling bug the heap queue fixes). No listener API, so the batch
+    autoscaler falls back to re-clustering a snapshot every control tick
+    (the pre-incremental behaviour)."""
+
+    def __init__(self):
+        self.interactive = deque()
+        self._list: List[Request] = []
+        self._sorted = False
+
+    def push(self, req: Request) -> None:
+        if req.request_type == RequestType.INTERACTIVE:
+            self.interactive.append(req)
+        else:
+            self._list.append(req)
+            self._sorted = False
+
+    def requeue(self, req: Request) -> None:
+        if req.request_type == RequestType.INTERACTIVE:
+            self.interactive.appendleft(req)
+        else:
+            self._list.append(req)
+            self._sorted = False
+
+    def pop_interactive(self) -> Optional[Request]:
+        return self.interactive.popleft() if self.interactive else None
+
+    def _sort(self) -> None:
+        self._list.sort(key=lambda r: (r.saved_kv is None, r.deadline,
+                                       r.arrival_time))
+
+    def peek_batch(self) -> Optional[Request]:
+        if not self._list:
+            return None
+        if not self._sorted:           # one sort per routing pass
+            self._sort()
+            self._sorted = True
+        return self._list[0]
+
+    def pop_batch_fcfs(self) -> Optional[Request]:
+        """Seed semantics: the whole list re-sorts on every pop."""
+        if not self._list:
+            return None
+        self._sort()
+        return self._list.pop(0)
+
+    def iter_batch(self):
+        return iter(self._list)
+
+    @property
+    def n_interactive(self) -> int:
+        return len(self.interactive)
+
+    @property
+    def n_batch(self) -> int:
+        return len(self._list)
+
+    def __len__(self) -> int:
+        return self.n_interactive + self.n_batch
+
+
+class _Budget(Exception):
+    pass
+
+
+def _run_budgeted(fn, budget_s: float):
+    """Run fn() under SIGALRM; returns (result, wall) or (None, budget)."""
+    def _raise(signum, frame):
+        raise _Budget()
+    old = signal.signal(signal.SIGALRM, _raise)
+    signal.alarm(int(budget_s))
+    t0 = time.perf_counter()
+    try:
+        out = fn()
+        return out, time.perf_counter() - t0
+    except _Budget:
+        return None, budget_s
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _speedup_trace(n: int, seed: int = 1):
+    """Bursty 100k-class trace: a deadline-driven batch backlog (the
+    ~2000+-queued regime where the paper's estimator sharpens, Fig. 14)
+    under an interactive stream arriving in spikes."""
+    n_backlog = int(n * 0.9)
+    backlog, _ = build("backlog_drain", n_requests=n_backlog, seed=seed,
+                       backlog_frac=1.0, batch_ttft_slo=2400.0)
+    bursts, kw = build("burst_spikes", n_requests=n - n_backlog,
+                       seed=seed + 1, n_bursts=6, burst_rate=120.0,
+                       gap=300.0, interactive_frac=1.0)
+    reqs = backlog + bursts
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs, max(kw["max_time"], 3000.0)
+
+
+def _finish_stats(res, reqs):
+    done = sum(r.state == RequestState.FINISHED for r in reqs)
+    return dict(finished=done, slo=round(res.slo_attainment(), 3),
+                gpu_hours=round(res.gpu_hours(), 2))
+
+
+def run():
+    rows = []
+
+    # ---- scenario library on the event core
+    for name, sc in sorted(SCENARIOS.items()):
+        reqs, kw = build(name, seed=3)
+        cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+        t0 = time.perf_counter()
+        res = simulate_events(reqs, chiron(), cluster,
+                              max_time=kw["max_time"], warm_start=2)
+        wall = time.perf_counter() - t0
+        rows.append(Row(f"scenario/{name}", wall * 1e6,
+                        n=len(reqs), dur_s=round(res.duration),
+                        peak_chips=res.peak_chips,
+                        hysteresis=round(res.hysteresis, 2),
+                        **_finish_stats(res, reqs)))
+
+    # ---- fig19 workload: event vs fixed-tick decision equivalence.
+    # The event engine runs in sparse fixed-tick mode (quantize=dt) so both
+    # engines batch arrivals/completions on the same grid.
+    spec = WorkloadSpec(n_requests=2000, arrival_rate=30.0,
+                        interactive_frac=1.0, batch_queue_size=30000,
+                        batch_ttft_slo=1800.0, model="llama-8b", seed=5)
+    res_e = simulate_events(generate(spec),
+                            chiron(), SimCluster(default_perf_factory(),
+                                                 max_chips=MAX_CHIPS),
+                            max_time=2400, warm_start=2, quantize=0.25)
+    res_f = simulate_fixed_tick(generate(spec),
+                                chiron(), SimCluster(default_perf_factory(),
+                                                     max_chips=MAX_CHIPS),
+                                dt=0.25, max_time=2400, warm_start=2)
+    frac, dev = decisions_match(res_e, res_f, interval=1.0,
+                                slack_intervals=1)
+    rows.append(Row("fig19_equiv/full_chiron", 0.0,
+                    match_frac=round(frac, 4), max_count_dev=dev,
+                    scale_actions_event=res_e.scale_ups + res_e.scale_downs,
+                    scale_actions_fixed=res_f.scale_ups + res_f.scale_downs,
+                    gpu_h_event=round(res_e.gpu_hours(), 2),
+                    gpu_h_fixed=round(res_f.gpu_hours(), 2)))
+
+    # batch-autoscaler-driven arm (Algorithm 2 decides instance counts;
+    # no knife-edge local/TBP feedback amplifying data-plane noise): the
+    # instance-count timelines must be identical within one interval
+    spec_b = WorkloadSpec(n_requests=1, arrival_rate=1.0,
+                          interactive_frac=0.0, batch_queue_size=30000,
+                          batch_ttft_slo=1800.0, model="llama-8b", seed=5)
+
+    def ctrl_b():
+        return chiron(local_enabled=False, static_batch=64)
+    res_e = simulate_events(generate(spec_b), ctrl_b(),
+                            SimCluster(default_perf_factory(),
+                                       max_chips=MAX_CHIPS),
+                            max_time=2400, quantize=0.25)
+    res_f = simulate_fixed_tick(generate(spec_b), ctrl_b(),
+                                SimCluster(default_perf_factory(),
+                                           max_chips=MAX_CHIPS),
+                                dt=0.25, max_time=2400)
+    frac, dev = decisions_match(res_e, res_f, interval=1.0,
+                                slack_intervals=1)
+    rows.append(Row("fig19_equiv/batch_scaling", 0.0,
+                    match_frac=round(frac, 4), max_count_dev=dev,
+                    identical_within_one_interval=(frac >= 0.95
+                                                   and dev <= 1)))
+
+    # ---- 100k bursty trace: event vs fixed vs seed baseline
+    n = int(os.environ.get("SCENARIO_SWEEP_N", "100000"))
+    budget = float(os.environ.get("SCENARIO_SWEEP_LEGACY_BUDGET", "120"))
+
+    reqs, max_time = _speedup_trace(n)
+    cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+    t0 = time.perf_counter()
+    res = simulate_events(reqs, chiron(), cluster, max_time=max_time,
+                          warm_start=2)
+    wall_event = time.perf_counter() - t0
+    rows.append(Row("speedup/event", wall_event * 1e6, n=n,
+                    wall_s=round(wall_event, 2),
+                    **_finish_stats(res, reqs)))
+
+    reqs_f, _ = _speedup_trace(n)
+    cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+    t0 = time.perf_counter()
+    res_fx = simulate_fixed_tick(reqs_f, chiron(), cluster, dt=0.25,
+                                 max_time=max_time, warm_start=2)
+    wall_fixed = time.perf_counter() - t0
+    rows.append(Row("speedup/fixed_dt0.25", wall_fixed * 1e6, n=n,
+                    wall_s=round(wall_fixed, 2),
+                    speedup_event=round(wall_fixed / wall_event, 1),
+                    **_finish_stats(res_fx, reqs_f)))
+
+    # seed baseline growth curve (small n, full runs)
+    import repro.sim.simulator as sim_mod
+    for n_small in (1000, 4000):
+        reqs_s, mt = _speedup_trace(n_small)
+        cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+        orig = sim_mod.GlobalQueue
+        sim_mod.GlobalQueue = SeedFcfsQueue
+        try:
+            t0 = time.perf_counter()
+            simulate_fixed_tick(reqs_s, chiron(), cluster, dt=0.25,
+                                max_time=mt, warm_start=2)
+            w = time.perf_counter() - t0
+        finally:
+            sim_mod.GlobalQueue = orig
+        rows.append(Row(f"speedup/seed_fixed_n{n_small}", w * 1e6,
+                        n=n_small, wall_s=round(w, 2)))
+
+    # seed baseline at full n under a wall-clock budget
+    def _seed_full():
+        reqs_l, _ = _speedup_trace(n)
+        cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+        orig = sim_mod.GlobalQueue
+        sim_mod.GlobalQueue = SeedFcfsQueue
+        try:
+            return simulate_fixed_tick(reqs_l, chiron(), cluster, dt=0.25,
+                                       max_time=max_time, warm_start=2)
+        finally:
+            sim_mod.GlobalQueue = orig
+    out, wall_seed = _run_budgeted(_seed_full, budget)
+    if out is None:
+        rows.append(Row("speedup/seed_fixed_full", wall_seed * 1e6, n=n,
+                        wall_s=f">{wall_seed:.0f} (budget exceeded)",
+                        speedup_event=f">{wall_seed / wall_event:.0f}x"))
+    else:
+        rows.append(Row("speedup/seed_fixed_full", wall_seed * 1e6, n=n,
+                        wall_s=round(wall_seed, 2),
+                        speedup_event=round(wall_seed / wall_event, 1)))
+    return rows

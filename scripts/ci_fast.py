@@ -1,0 +1,43 @@
+#!/usr/bin/env python
+"""Fast CI loop: the non-JAX (sim / core / queue) test subset.
+
+Runs the control-plane and simulator tests — everything that exercises
+the autoscalers, the global queue, request groups, the waiting-time
+estimator, and both simulation engines — without importing JAX-heavy
+kernel/model modules. Target: well under a minute.
+
+Usage:  python scripts/ci_fast.py [extra pytest args]
+"""
+import os
+import subprocess
+import sys
+import time
+
+FAST_TESTS = [
+    "tests/test_autoscalers.py",
+    "tests/test_configs.py",
+    "tests/test_event_sim.py",
+    "tests/test_global_queue.py",
+    "tests/test_request_groups.py",
+    "tests/test_simulator.py",
+    "tests/test_system.py",
+    "tests/test_waiting_time.py",
+]
+
+
+def main() -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
+        + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "pytest", "-q", *FAST_TESTS,
+           *sys.argv[1:]]
+    t0 = time.time()
+    rc = subprocess.call(cmd, cwd=root, env=env)
+    print(f"ci_fast: {time.time() - t0:.1f}s", file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,7 +16,8 @@ import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence
 
-from repro.core.request_groups import RequestGroup, make_request_groups
+from repro.core.request_groups import (GroupStat, IncrementalGrouper,
+                                       RequestGroup, make_request_groups)
 from repro.core.waiting_time import WaitingTimeEstimator
 from repro.serving.request import Request
 
@@ -56,6 +57,7 @@ class BatchScalingDecision:
     retire_all: bool
     bbp_before: int
     groups: List[RequestGroup] = field(default_factory=list)
+    remove_instances: int = 0           # excess instances while BBP stays 0
 
 
 @dataclass
@@ -66,6 +68,15 @@ class BatchAutoscaler:
     group_k: int = 0                    # 0 = auto; -1 = groups disabled
                                         # (one group per request — the
                                         # hysteresis ablation of Fig. 6)
+    # Scale-down damping: an instance is only surrendered if BBP stays 0
+    # with the remaining capacity derated by this factor, so a boundary
+    # estimate cannot oscillate add/remove every control tick; at most one
+    # instance goes per cycle, bounding the in-flight work a removal can
+    # displace back into the queue.
+    scale_down_derate: float = 0.8
+    max_remove_per_cycle: int = 1
+    _grouper: Optional[IncrementalGrouper] = field(default=None, repr=False)
+    _grouper_src: Optional[object] = field(default=None, repr=False)
 
     def compute_bbp(self, groups: Sequence[RequestGroup], now: float,
                     total_throughput: float) -> int:
@@ -83,13 +94,34 @@ class BatchAutoscaler:
                 bbp += 1
         return bbp
 
-    def update(self, queued_batch: Sequence[Request], now: float, *,
+    def _groups_for(self, queued_batch) -> List[RequestGroup]:
+        """Request groups for either a queue snapshot (one-shot k-means) or
+        a ``GlobalQueue`` (incrementally maintained via its listener API)."""
+        if callable(getattr(queued_batch, "attach_batch_listener", None)):
+            if self.group_k < 0:
+                # grouping-disabled ablation: one group per request
+                return [GroupStat(r.deadline, 1) for r in
+                        sorted(queued_batch.iter_batch(),
+                               key=lambda r: r.deadline)]
+            if self._grouper is None or self._grouper_src is not queued_batch:
+                self._grouper = IncrementalGrouper(k=self.group_k)
+                self._grouper_src = queued_batch
+                queued_batch.attach_batch_listener(self._grouper)
+            return self._grouper.group_stats()
+        if hasattr(queued_batch, "iter_batch"):
+            # queue-like without the listener API: re-cluster a snapshot
+            # every tick (the pre-incremental behaviour)
+            queued_batch = list(queued_batch.iter_batch())
+        k = -1 if self.group_k < 0 else self.group_k
+        return make_request_groups(queued_batch, k=k)
+
+    def update(self, queued_batch, now: float, *,
                n_batch_instances: int, spare_mixed_throughput: float = 0.0,
                n_active_batch_requests: int = 0) -> BatchScalingDecision:
-        if self.group_k < 0:
-            groups = make_request_groups(queued_batch, k=len(queued_batch))
-        else:
-            groups = make_request_groups(queued_batch, k=self.group_k)
+        """Algorithm 2 over ``queued_batch`` — a Sequence[Request] snapshot
+        or a ``GlobalQueue`` (preferred in the control loop: groups are then
+        maintained incrementally instead of re-clustered every tick)."""
+        groups = self._groups_for(queued_batch)
         if not groups:
             retire = (n_active_batch_requests == 0 and n_batch_instances > 0)
             return BatchScalingDecision(0, retire, 0, [])
@@ -105,4 +137,18 @@ class BatchAutoscaler:
         while bbp > 0 and dispatch < self.max_add_per_cycle:
             dispatch += 1
             bbp = self.compute_bbp(groups, now, throughput_with(dispatch))
-        return BatchScalingDecision(dispatch, False, bbp0, groups)
+
+        # Minimality (Algorithm 2's claim): with BBP already 0 and no adds,
+        # surrender instances that remain unnecessary even after derating
+        # the surviving capacity — otherwise excess batch instances linger
+        # at BBP = 0 while groups trickle in.
+        remove = 0
+        if dispatch == 0 and bbp0 == 0 and n_batch_instances > 0:
+            limit = min(n_batch_instances, self.max_remove_per_cycle)
+            while remove < limit and self.compute_bbp(
+                    groups, now,
+                    max(self.scale_down_derate * throughput_with(-(remove + 1)),
+                        1e-9)) == 0:
+                remove += 1
+        return BatchScalingDecision(dispatch, False, bbp0, groups,
+                                    remove_instances=remove)

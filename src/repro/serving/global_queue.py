@@ -3,11 +3,25 @@
 All requests enqueue here; interactive requests follow a zero-queuing
 discipline (dispatched immediately, footnote 3) while batch requests may
 wait and are scheduled as request groups by the global autoscaler.
+
+The batch side is a binary heap keyed on ``(deadline, arrival_time, seq)``
+so every pop is O(log n) — draining n requests costs O(n log n) total
+instead of the O(n^2 log n) a sort-per-pop policy degrades to at the
+cluster scales the paper evaluates (thousands of queued requests).
+Preempted batch requests that still hold host-saved KV are parked in a
+separate resume lane served before fresh work, so a restart never
+re-queues behind requests that have not prefill'd yet.
+
+Listeners (``attach_batch_listener``) observe every batch add/remove and
+let the global autoscaler maintain request groups incrementally instead of
+re-clustering the whole queue each control tick.
 """
 from __future__ import annotations
 
+import heapq
+import itertools
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Iterator, List, Optional, Tuple
 
 from repro.serving.request import Request, RequestType
 
@@ -15,37 +29,102 @@ from repro.serving.request import Request, RequestType
 class GlobalQueue:
     def __init__(self):
         self.interactive: Deque[Request] = deque()
-        self.batch: List[Request] = []
+        # (deadline, arrival_time, seq, request) — earliest deadline first,
+        # FCFS within a deadline (§5.3), seq breaks exact ties stably.
+        self._batch_heap: List[Tuple[float, float, int, Request]] = []
+        self._resume: Deque[Request] = deque()   # preempted, KV on host
+        self._seq = itertools.count()
+        self._listeners: List[object] = []
 
+    # ------------------------------------------------------------ intake
     def push(self, req: Request) -> None:
         if req.request_type == RequestType.INTERACTIVE:
             self.interactive.append(req)
         else:
-            self.batch.append(req)
+            heapq.heappush(self._batch_heap,
+                           (req.deadline, req.arrival_time,
+                            next(self._seq), req))
+            self._notify_add(req)
 
+    def requeue(self, req: Request) -> None:
+        """Preempted request returns to the queue.
+
+        Zero-queuing discipline (footnote 3): a preempted interactive
+        request goes to the *front* of the interactive line — it already
+        waited once and must not re-queue behind later arrivals. Batch
+        requests with host-saved KV enter the resume lane (served first,
+        the restart skips re-prefill); otherwise they re-enter the heap at
+        their original (deadline, arrival) position.
+        """
+        if req.request_type == RequestType.INTERACTIVE:
+            self.interactive.appendleft(req)
+        elif req.saved_kv is not None:
+            self._resume.append(req)
+            self._notify_add(req)
+        else:
+            self.push(req)
+
+    # ------------------------------------------------------------ serving
     def pop_interactive(self) -> Optional[Request]:
         return self.interactive.popleft() if self.interactive else None
 
+    def peek_batch(self) -> Optional[Request]:
+        if self._resume:
+            return self._resume[0]
+        return self._batch_heap[0][3] if self._batch_heap else None
+
     def pop_batch_fcfs(self) -> Optional[Request]:
-        """FCFS by (group deadline, arrival) — groups are recomputed by the
-        controller; within the queue we serve earliest deadline first, then
-        arrival order (FCFS within a group, §5.3)."""
-        if not self.batch:
+        """Earliest deadline first, then arrival order (FCFS within a
+        group, §5.3); preempted requests with saved KV resume first."""
+        if self._resume:
+            req = self._resume.popleft()
+        elif self._batch_heap:
+            req = heapq.heappop(self._batch_heap)[3]
+        else:
             return None
-        self.batch.sort(key=lambda r: (r.deadline, r.arrival_time))
-        return self.batch.pop(0)
+        self._notify_remove(req)
+        return req
 
-    def requeue(self, req: Request) -> None:
-        """Preempted request returns to the queue (keeps saved KV)."""
-        self.push(req)
+    def iter_batch(self) -> Iterator[Request]:
+        """All queued batch requests in unspecified order (O(n))."""
+        yield from self._resume
+        for entry in self._batch_heap:
+            yield entry[3]
 
+    @property
+    def batch(self) -> List[Request]:
+        """Snapshot of queued batch requests, earliest deadline first.
+
+        O(n log n) — for control-loop consumers prefer passing the queue
+        itself (incremental grouping) or ``iter_batch`` over this.
+        """
+        out = sorted(self._batch_heap)
+        return list(self._resume) + [e[3] for e in out]
+
+    # ------------------------------------------------------------ listeners
+    def attach_batch_listener(self, listener) -> None:
+        """Register an ``on_add(req)`` / ``on_remove(req)`` observer of the
+        batch side; current contents are replayed as adds on attach."""
+        self._listeners.append(listener)
+        for req in self.iter_batch():
+            listener.on_add(req)
+
+    def _notify_add(self, req: Request) -> None:
+        for l in self._listeners:
+            l.on_add(req)
+
+    def _notify_remove(self, req: Request) -> None:
+        for l in self._listeners:
+            l.on_remove(req)
+
+    # ------------------------------------------------------------ sizes
     @property
     def n_interactive(self) -> int:
         return len(self.interactive)
 
     @property
     def n_batch(self) -> int:
-        return len(self.batch)
+        return len(self._batch_heap) + len(self._resume)
 
     def __len__(self) -> int:
         return self.n_interactive + self.n_batch

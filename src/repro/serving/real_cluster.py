@@ -84,6 +84,10 @@ class RealInstance:
     def runs_interactive(self) -> bool:
         return any(s.request.is_interactive for s in self.running)
 
+    def n_running_batch(self) -> int:
+        return sum(1 for s in self.running
+                   if not s.request.is_interactive)
+
     def min_itl_slo(self) -> float:
         return min((s.request.slo.itl for s in self.running),
                    default=float("inf"))

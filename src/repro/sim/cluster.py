@@ -6,10 +6,27 @@ how long a decode step takes — is simulated, using ``PerfModel``. Instance
 bring-up takes ``model_load_time()`` (the 15–60 s that motivates Chiron's
 over-provisioning), and every provision/retire action is counted for the
 hysteresis metric.
+
+Two data-plane drivers share the same instance state:
+
+- ``step(dt, now)``: the fixed-tick reference — every running sequence is
+  walked each tick.
+- ``advance(now)``: the event-core fluid model. Continuous batching gives
+  every decoding sequence the same token rate, so decode progress is a
+  single per-instance *virtual clock* (tokens emitted per sequence);
+  sequence finish order is a heap over virtual finish times and KV/context
+  aggregates are closed forms of the clock. Advancing an instance is O(1)
+  plus O(log B) per completed/transitioned sequence — independent of
+  batch size, which is what keeps million-request traces tractable.
+
+Control-plane queries (``can_admit``, ``mean_ctx``, ``runs_interactive``,
+``min_itl_slo``…) are all O(1) via maintained aggregates; the routing hot
+path never scans a batch.
 """
 from __future__ import annotations
 
 import enum
+import heapq
 import itertools
 import math
 from dataclasses import dataclass, field
@@ -21,6 +38,10 @@ from repro.serving.request import Request, RequestState, RequestType
 from repro.sim.perf_model import PerfModel
 
 _inst_counter = itertools.count()
+
+# decode rate used when the quantized tick emulation truncates to zero
+# tokens per tick (itl > dt: the tick loop makes no progress either)
+_STALLED_ITL = 1e12
 
 
 class InstanceType(enum.Enum):
@@ -35,12 +56,18 @@ class InstanceState(enum.Enum):
     RETIRED = "retired"
 
 
-@dataclass
+@dataclass(eq=False)
 class SimSeq:
     request: Request
     ctx_tokens: float            # prompt + generated so far (KV footprint)
     prefill_left: float          # seconds of prefill work remaining
-    _itl_accum: Tuple[float, int] = (0.0, 0)
+    gen_f: float = 0.0           # fractional tokens generated
+    # --- event-core fluid state ---
+    decoding: bool = False
+    prefill_done_t: float = 0.0  # absolute sim time prefill completes
+    v0: float = 0.0              # instance vclock at decode entry
+    gen_base: float = 0.0        # gen_f  - vclock while decoding
+    ctx_base: float = 0.0        # ctx    - vclock while decoding
 
     @property
     def done(self) -> bool:
@@ -56,21 +83,37 @@ class SimInstance:
         self.perf = perf
         self.itype = itype
         self.state = InstanceState.LOADING
+        self.active = False          # mirrors state (hot-path flag)
         self.ready_time = now + (load_time if load_time is not None
                                  else perf.model_load_time())
         self.local = local_autoscaler
         self.static_batch = static_batch
-        self.running: List[SimSeq] = []
+        self.running: Dict[int, SimSeq] = {}    # req_id -> seq (ins. order)
         self.created_at = now
+        # O(1) aggregates over ``running`` (the routing/control hot path
+        # queries these every pass; scanning the batch would be O(B))
+        self._kv_tokens = 0.0        # fixed-tick: sum of ctx_tokens
+        self._n_interactive = 0
+        self._slo_counts: Dict[float, int] = {}
+        self._batch_lifo: List[int] = []   # batch admits (lazy-stale rids)
+        # --- event-core state (unused on the fixed-tick path) ---
+        self.event_mode = False
+        self.last_advance = now      # sim time the fluid state is valid at
+        self.vclock = 0.0            # fluid tokens emitted per decoding seq
+        self._n_dec = 0              # decoding seqs
+        self._kv_prefill = 0.0       # sum ctx over prefilling seqs
+        self._kv_dec_base = 0.0      # sum ctx_base over decoding seqs
+        self._prefill_heap: List[Tuple[float, int]] = []   # (t_done, rid)
+        self._decode_heap: List[Tuple[float, int]] = []    # (vfin, rid)
+        self._epoch = 0              # invalidates scheduled events
+        self._pending_finished: List[Request] = []
+        self._cluster = None         # backref set by SimCluster.provision
 
     # ------------------------------------------------------------ state
     def activate_if_ready(self, now: float) -> None:
         if self.state == InstanceState.LOADING and now >= self.ready_time:
             self.state = InstanceState.ACTIVE
-
-    @property
-    def active(self) -> bool:
-        return self.state == InstanceState.ACTIVE
+            self.active = True
 
     @property
     def max_batch_size(self) -> int:
@@ -82,13 +125,18 @@ class SimInstance:
     def n_running(self) -> int:
         return len(self.running)
 
+    def n_running_batch(self) -> int:
+        return len(self.running) - self._n_interactive
+
     def mean_ctx(self) -> float:
-        if not self.running:
-            return 0.0
-        return sum(s.ctx_tokens for s in self.running) / len(self.running)
+        n = len(self.running)
+        return self.kv_tokens() / n if n else 0.0
 
     def kv_tokens(self) -> float:
-        return sum(s.ctx_tokens for s in self.running)
+        if self.event_mode:
+            return self._kv_prefill + self._kv_dec_base \
+                + self._n_dec * self.vclock
+        return self._kv_tokens
 
     def kv_utilization(self) -> float:
         cap = self.perf.kv_capacity_tokens()
@@ -118,12 +166,12 @@ class SimInstance:
         return spare / itl
 
     def runs_interactive(self) -> bool:
-        return any(s.request.is_interactive for s in self.running)
+        return self._n_interactive > 0
 
     def min_itl_slo(self) -> float:
-        if not self.running:
+        if not self._slo_counts:
             return float("inf")
-        return min(s.request.slo.itl for s in self.running)
+        return min(self._slo_counts)
 
     # ------------------------------------------------------------ intake
     def can_admit(self, req: Request) -> bool:
@@ -137,37 +185,245 @@ class SimInstance:
         return True
 
     def admit(self, req: Request, now: float) -> None:
+        if self.event_mode and self.last_advance < now:
+            self.advance(now)        # settle old composition first
         restored = req.saved_kv is not None
-        ctx = req.prompt_len + req.tokens_generated
+        ctx = float(req.prompt_len + req.tokens_generated)
         prefill = 0.0 if restored else self.perf.prefill_time(req.prompt_len)
         if restored:
             req.saved_kv = None
         req.state = RequestState.RUNNING
-        self.running.append(SimSeq(req, ctx, prefill))
+        s = SimSeq(req, ctx, prefill, gen_f=float(req.tokens_generated))
+        self.running[req.req_id] = s
+        if self._cluster is not None:
+            self._cluster.total_running += 1
+        self._slo_counts[req.slo.itl] = \
+            self._slo_counts.get(req.slo.itl, 0) + 1
+        if req.is_interactive:
+            self._n_interactive += 1
+        else:
+            self._batch_lifo.append(req.req_id)
+        if self.event_mode:
+            if prefill > 0:
+                s.prefill_done_t = now + prefill
+                heapq.heappush(self._prefill_heap, (s.prefill_done_t,
+                                                    req.req_id))
+                self._kv_prefill += ctx
+            else:
+                self._enter_decode(s, self.vclock)
+                if req.first_token_time is None:
+                    req.first_token_time = now
+            self.mark_dirty()
+        else:
+            self._kv_tokens += ctx
 
     def evict_one_batch(self, now: float) -> Optional[Request]:
         """Mixed-instance preemption: interactive evicts batch; KV saved to
         host so the restart skips re-prefill (paper §3)."""
-        for i in reversed(range(len(self.running))):
-            s = self.running[i]
-            if s.request.request_type == RequestType.BATCH:
-                self.running.pop(i)
-                s.request.state = RequestState.PREEMPTED
-                s.request.preemptions += 1
-                s.request.saved_kv = ("sim", s.ctx_tokens)
-                return s.request
+        if self.n_running_batch() == 0:
+            return None
+        if self.event_mode:
+            self.advance(now)        # settle old composition first
+        while self._batch_lifo:      # most-recent batch admit still running
+            s = self.running.get(self._batch_lifo.pop())
+            if s is None or s.request.request_type != RequestType.BATCH:
+                continue             # stale entry (finished/evicted)
+            self._materialize(s)
+            self._remove_seq(s)
+            s.request.state = RequestState.PREEMPTED
+            s.request.preemptions += 1
+            s.request.saved_kv = ("sim", s.ctx_tokens)
+            self.mark_dirty()
+            return s.request
         return None
+
+    # ----------------------------------------------------- seq bookkeeping
+    def _enter_decode(self, s: SimSeq, v_entry: float) -> None:
+        s.decoding = True
+        s.v0 = v_entry
+        s.gen_base = s.gen_f - v_entry
+        s.ctx_base = s.ctx_tokens - v_entry
+        self._kv_dec_base += s.ctx_base
+        self._n_dec += 1
+        vfin = float(s.request.output_len) - s.gen_base
+        heapq.heappush(self._decode_heap, (vfin, s.request.req_id))
+
+    def _materialize(self, s: SimSeq) -> None:
+        """Sync a decoding seq's lazy counters from the virtual clock."""
+        if self.event_mode and s.decoding:
+            s.gen_f = min(s.gen_base + self.vclock,
+                          float(s.request.output_len))
+            s.ctx_tokens = s.ctx_base + self.vclock
+            s.request.tokens_generated = int(s.gen_f)
+
+    def _remove_seq(self, s: SimSeq) -> None:
+        r = s.request
+        del self.running[r.req_id]
+        if self._cluster is not None:
+            self._cluster.total_running -= 1
+        c = self._slo_counts.get(r.slo.itl, 0) - 1
+        if c > 0:
+            self._slo_counts[r.slo.itl] = c
+        else:
+            self._slo_counts.pop(r.slo.itl, None)
+        if r.is_interactive:
+            self._n_interactive -= 1
+        if self.event_mode:
+            if s.decoding:
+                s.decoding = False
+                self._kv_dec_base -= s.ctx_base
+                self._n_dec -= 1
+            else:
+                self._kv_prefill -= s.ctx_tokens
+        else:
+            self._kv_tokens -= s.ctx_tokens
+        if not self.running:       # reset float drift at emptiness
+            self._kv_tokens = 0.0
+            self._kv_prefill = 0.0
+            self._kv_dec_base = 0.0
+            self._n_interactive = 0
+
+    # --------------------------------------------------- event-driven core
+    def mark_dirty(self) -> None:
+        """Flag this instance for completion-event rescheduling (and pending
+        finish collection) at the end of the current event batch."""
+        if self._cluster is not None:
+            self._cluster.dirty.add(self)
+
+    def drain_finished(self) -> List[Request]:
+        out = self._pending_finished
+        self._pending_finished = []
+        return out
+
+    def advance(self, now: float) -> None:
+        """Fluid catch-up to ``now`` under the current (fixed) composition —
+        the event-core counterpart of :meth:`step`.
+
+        All decoding seqs share one token rate, so the whole pool advances
+        by moving ``vclock``; prefill→decode transitions and finishes pop
+        off heaps at their exact crossing times (interpolated, so a
+        completion estimate firing slightly late is harmless).
+        """
+        dt = now - self.last_advance
+        t0 = self.last_advance
+        self.last_advance = now
+        if dt <= 0 or not self.active or not self.running:
+            return
+        self.mark_dirty()
+        itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0))
+        q = self._cluster.quantize if self._cluster else 0.0
+        if q > 0:
+            # fixed-tick parity: int(q/itl) tokens per tick, no carry
+            per_tick = int(q / itl + 1e-9)
+            itl = q / per_tick if per_tick > 0 else _STALLED_ITL
+        toks = 0.0
+        v_old = self.vclock
+
+        # 1. prefill completions due within (t0, now]: seq starts decoding
+        #    mid-interval with vclock credit from its entry point
+        ph = self._prefill_heap
+        entry_debt = 0.0
+        while ph and ph[0][0] <= now + 1e-12:
+            t_done, rid = heapq.heappop(ph)
+            s = self.running.get(rid)
+            if s is None or s.decoding or s.prefill_done_t != t_done:
+                continue                     # stale (departed/re-admitted)
+            s.prefill_left = 0.0
+            self._kv_prefill -= s.ctx_tokens
+            r = s.request
+            if r.first_token_time is None:
+                r.first_token_time = t_done
+                s.gen_f += 1.0
+                s.ctx_tokens += 1.0
+                toks += 1.0
+            v_entry = v_old + max(t_done - t0, 0.0) / itl
+            entry_debt += v_entry - v_old
+            self._enter_decode(s, v_entry)
+
+        # 2. the decode pool advances as one fluid
+        if self._n_dec:
+            self.vclock = v_old + dt / itl
+            toks += self._n_dec * (dt / itl) - entry_debt
+
+            # 3. finishes: pop virtual finish times the clock crossed
+            dh = self._decode_heap
+            while dh and dh[0][0] <= self.vclock + 1e-9:
+                vfin, rid = heapq.heappop(dh)
+                s = self.running.get(rid)
+                if s is None or not s.decoding or abs(
+                        (s.request.output_len - s.gen_base) - vfin) > 1e-6:
+                    continue                 # stale entry
+                over_v = self.vclock - vfin  # tokens past the true finish
+                toks -= over_v
+                s.ctx_tokens = s.ctx_base + vfin
+                s.gen_f = float(s.request.output_len)
+                r = s.request
+                self._remove_seq(s)
+                r.tokens_generated = r.output_len
+                r.state = RequestState.FINISHED
+                ft = now - over_v * itl
+                if r.first_token_time is None:   # sub-itl output edge case
+                    r.first_token_time = ft
+                r.finish_time = max(ft, r.first_token_time)
+                # one lifetime-mean ITL sample (the event core records the
+                # mean the SLO check reads, not per-tick samples)
+                span = r.finish_time - r.first_token_time
+                r.itl_samples.append(
+                    span / max(float(r.output_len) - 1.0, 1.0))
+                self._pending_finished.append(r)
+
+        if toks and self._cluster is not None:
+            self._cluster.tok_accum += toks
+
+    def next_event_in(self) -> float:
+        """Seconds until this instance's next intrinsic event (a prefill
+        completing or the earliest finish) under the current composition;
+        inf when idle. Floored at the cluster's completion grain so nearby
+        finishes coalesce into one event (and a late-drifting estimate
+        re-fires geometrically rather than spinning)."""
+        if not self.active or not self.running:
+            return float("inf")
+        best = float("inf")
+        ph = self._prefill_heap
+        while ph:
+            t_done, rid = ph[0]
+            s = self.running.get(rid)
+            if s is None or s.decoding or s.prefill_done_t != t_done:
+                heapq.heappop(ph)
+                continue
+            best = t_done - self.last_advance
+            break
+        dh = self._decode_heap
+        while dh:
+            vfin, rid = dh[0]
+            s = self.running.get(rid)
+            if s is None or not s.decoding or abs(
+                    (s.request.output_len - s.gen_base) - vfin) > 1e-6:
+                heapq.heappop(dh)
+                continue
+            itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0))
+            q = self._cluster.quantize if self._cluster else 0.0
+            if q > 0:
+                per_tick = int(q / itl + 1e-9)
+                itl = q / per_tick if per_tick > 0 else _STALLED_ITL
+            eta = (vfin - self.vclock) * itl
+            if eta < 1e11:               # stalled seqs schedule nothing
+                best = min(best, eta)
+            break
+        grain = self._cluster.completion_grain if self._cluster else 1e-3
+        return max(best, grain)
 
     # ------------------------------------------------------------ stepping
     def step(self, dt: float, now: float) -> Tuple[List[Request], int]:
-        """Advance the instance by dt of simulated wall time (fluid model)."""
+        """Advance the instance by dt of simulated wall time (fixed-tick
+        reference; walks every running sequence)."""
         if not self.active or not self.running:
             return [], 0
         b = self.n_running
         itl = self.perf.itl(b, max(self.mean_ctx(), 1.0))
         finished: List[Request] = []
         tokens_out = 0
-        for s in list(self.running):
+        for s in list(self.running.values()):
             budget = dt
             if s.prefill_left > 0:
                 used = min(budget, s.prefill_left)
@@ -179,12 +435,14 @@ class SimInstance:
                     s.request.first_token_time = now + used
                     s.request.tokens_generated += 1
                     s.ctx_tokens += 1
+                    self._kv_tokens += 1
                     tokens_out += 1
             ntok = int(budget / itl)
             ntok = min(ntok, s.request.output_len - s.request.tokens_generated)
             if ntok > 0:
                 s.request.tokens_generated += ntok
                 s.ctx_tokens += ntok
+                self._kv_tokens += ntok
                 tokens_out += ntok
                 s.request.itl_samples.append(itl)
                 if s.request.first_token_time is None:
@@ -192,7 +450,7 @@ class SimInstance:
             if s.done:
                 s.request.state = RequestState.FINISHED
                 s.request.finish_time = now + dt
-                self.running.remove(s)
+                self._remove_seq(s)
                 finished.append(s.request)
         return finished, tokens_out
 
@@ -219,16 +477,36 @@ class SimCluster:
         self.scale_downs = 0
         self.chip_seconds = 0.0
         self.peak_chips = 0
+        self._used_chips = 0         # maintained by provision/retire
+        self._pools: Dict[InstanceType, List[SimInstance]] = \
+            {t: [] for t in InstanceType}
+        self.total_running = 0       # running seqs cluster-wide (O(1) idle check)
+        # --- event-core state (unused on the fixed-tick path) ---
+        self.event_mode = False
+        self.now = 0.0               # sim time chip accounting is valid at
+        self.dirty: set = set()      # instances needing event rescheduling
+        self.tok_accum = 0.0         # tokens generated since last drain
+        # completion estimates are coalesced to this grain: finishes inside
+        # one grain are processed together (their finish times are still
+        # interpolated exactly) — the same quantization a dt=0.25 fixed
+        # tick imposes, at a fraction of the events
+        self.completion_grain = 0.25
+        # sparse fixed-tick mode (simulate_events(quantize=dt)): decode
+        # rates emulate the tick loop's integer truncation (int(dt/itl)
+        # tokens per tick, no carry) so both engines share dynamics
+        self.quantize = 0.0
 
     # ------------------------------------------------------------ queries
     def by_type(self, itype: InstanceType) -> List[SimInstance]:
-        return [i for i in self.instances if i.itype == itype]
+        """Live (maintained) pool list — treat as read-only; copy before
+        retiring members while iterating."""
+        return self._pools[itype]
 
     def active_instances(self) -> List[SimInstance]:
         return [i for i in self.instances if i.active]
 
     def used_chips(self) -> int:
-        return sum(i.perf.chips for i in self.instances)
+        return self._used_chips
 
     @property
     def hysteresis(self) -> float:
@@ -241,26 +519,70 @@ class SimCluster:
     def provision(self, model: str, itype: InstanceType, now: float,
                   **inst_kw) -> Optional[SimInstance]:
         perf = self.perf_factory(model)
-        if self.used_chips() + perf.chips > self.max_chips:
+        if self._used_chips + perf.chips > self.max_chips:
             return None
         inst = SimInstance(perf, itype, now, load_time=self.load_time,
                            **inst_kw)
+        inst.event_mode = self.event_mode
+        inst._cluster = self
         self.instances.append(inst)
+        self._pools[itype].append(inst)
         self.scale_ups += 1
-        self.peak_chips = max(self.peak_chips, self.used_chips())
+        self._used_chips += perf.chips
+        self.peak_chips = max(self.peak_chips, self._used_chips)
         return inst
 
     def retire(self, inst: SimInstance) -> List[Request]:
         """Remove an instance; returns displaced requests for requeueing."""
-        displaced = [s.request for s in inst.running]
-        for r in displaced:
+        if self.event_mode:
+            inst.advance(self.now)   # settle fluid state first
+            self.dirty.add(inst)     # pending finishes still get drained
+        displaced = []
+        for s in inst.running.values():
+            inst._materialize(s)
+            r = s.request
             r.state = RequestState.PREEMPTED
             r.saved_kv = None   # instance gone; must re-prefill elsewhere
+            displaced.append(r)
+        self.total_running -= len(inst.running)
         inst.running.clear()
+        inst._batch_lifo.clear()
+        inst._kv_tokens = 0.0
+        inst._kv_prefill = 0.0
+        inst._kv_dec_base = 0.0
+        inst._n_dec = 0
+        inst._n_interactive = 0
+        inst._slo_counts.clear()
+        inst._prefill_heap.clear()
+        inst._decode_heap.clear()
         inst.state = InstanceState.RETIRED
+        inst.active = False
         self.instances.remove(inst)
+        self._pools[inst.itype].remove(inst)
         self.scale_downs += 1
+        self._used_chips -= inst.perf.chips
         return displaced
 
     def tick_accounting(self, dt: float) -> None:
         self.chip_seconds += self.used_chips() * dt
+
+    # --------------------------------------------------- event-driven core
+    def advance_time(self, t: float) -> None:
+        """Accrue chip-seconds over [now, t] (composition is constant
+        between event batches) and move the cluster clock."""
+        if t > self.now:
+            self.chip_seconds += self._used_chips * (t - self.now)
+            self.now = t
+
+    def drain_dirty(self) -> List[SimInstance]:
+        # deterministic order: set iteration is address-dependent, and this
+        # order fixes event tie-breaks, backfill order, and the sequence
+        # completions reach the estimator — same seed must mean same run
+        out = sorted(self.dirty, key=lambda i: i.id)
+        self.dirty.clear()
+        return out
+
+    def take_tokens(self) -> float:
+        out = self.tok_accum
+        self.tok_accum = 0.0
+        return out

@@ -33,11 +33,28 @@ def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
 
 class BaseController:
     """Shared routing: interactive -> interactive then mixed (preempting
-    batch); batch -> batch instances then spare mixed capacity."""
+    batch); batch -> batch instances then spare mixed capacity.
+
+    ``route`` is the full preferential pass (every fixed tick / control
+    tick); the event core additionally calls ``route_interactive`` on every
+    event (zero-queuing) and ``backfill`` for just-freed instances, so the
+    hot path never rescans the whole cluster per completion.
+    """
 
     serves_batch_on_mixed = True
 
     def route(self, cluster: SimCluster, queue: GlobalQueue, now: float) -> None:
+        self.route_interactive(cluster, queue, now)
+        if not queue.n_batch:
+            return
+        pools = [cluster.by_type(InstanceType.BATCH)]
+        if self.serves_batch_on_mixed:
+            pools.append(cluster.by_type(InstanceType.MIXED))
+        for pool in pools:
+            self.backfill(pool, queue, now)
+
+    def route_interactive(self, cluster: SimCluster, queue: GlobalQueue,
+                          now: float) -> None:
         # ---- interactive: zero-queuing
         while queue.n_interactive:
             req = queue.interactive[0]
@@ -50,9 +67,11 @@ class BaseController:
                     placed = True
                     break
             if not placed:
-                # preempt a batch request on a mixed instance
+                # preempt a batch request on a mixed instance (the O(1)
+                # batch-count guard keeps a saturated all-interactive
+                # cluster from rescanning every batch on every pass)
                 for inst in cluster.by_type(InstanceType.MIXED):
-                    if not inst.active:
+                    if not inst.active or inst.n_running_batch() == 0:
                         continue
                     victim = inst.evict_one_batch(now)
                     if victim is not None:
@@ -63,25 +82,20 @@ class BaseController:
             if not placed:
                 break   # cluster saturated; request waits (SLO at risk)
 
-        # ---- batch: fill batch instances, then spare mixed capacity
-        if not queue.n_batch:
-            return
-        # one sort per routing pass (preempted-first, then group FCFS),
-        # then admit from the front — not a sort per admission
-        queue.batch.sort(key=lambda r: (r.saved_kv is None, r.deadline,
-                                        r.arrival_time))
-        pools = [cluster.by_type(InstanceType.BATCH)]
-        if self.serves_batch_on_mixed:
-            pools.append(cluster.by_type(InstanceType.MIXED))
-        idx = 0
-        for pool in pools:
-            for inst in pool:
-                while inst.active and idx < len(queue.batch):
-                    if not inst.can_admit(queue.batch[idx]):
-                        break
-                    inst.admit(queue.batch[idx], now)
-                    idx += 1
-        del queue.batch[:idx]
+    def backfill(self, insts, queue: GlobalQueue, now: float) -> None:
+        """Fill spare capacity on ``insts`` from the batch queue. The queue
+        pops in service order (resume lane, then earliest deadline / FCFS)
+        at O(log n) per admission — no per-pass sort."""
+        for inst in insts:
+            if inst.itype == InstanceType.INTERACTIVE:
+                continue             # interactive pool never serves batch
+            # cheap slot-full rejection before touching the queue
+            while inst.active and inst.n_running < inst.max_batch_size \
+                    and queue.n_batch:
+                req = queue.peek_batch()
+                if not inst.can_admit(req):
+                    break
+                inst.admit(queue.pop_batch_fcfs(), now)
 
     def control(self, cluster: SimCluster, queue: GlobalQueue,
                 now: float) -> None:
@@ -206,17 +220,26 @@ class ChironController(BaseController):
                         for i in cluster.by_type(InstanceType.MIXED)
                         if i.active)
             n_batch_inst = len(cluster.by_type(InstanceType.BATCH))
-            n_active_batch = sum(
-                sum(1 for s in i.running
-                    if s.request.request_type == RequestType.BATCH)
-                for i in cluster.instances)
+            n_active_batch = sum(i.n_running_batch()
+                                 for i in cluster.instances)
+            # pass the queue itself: request groups are maintained
+            # incrementally off its add/remove stream, not re-clustered
             dec2 = self._batch_scaler.update(
-                queue.batch, now,
+                queue, now,
                 n_batch_instances=n_batch_inst,
                 spare_mixed_throughput=spare,
                 n_active_batch_requests=n_active_batch)
             if dec2.retire_all:
                 for inst in list(cluster.by_type(InstanceType.BATCH)):
+                    for r in cluster.retire(inst):
+                        queue.requeue(r)
+            elif dec2.remove_instances > 0:
+                # Algorithm 2 minimality: surrender excess batch instances
+                # while BBP stays 0 — idle/least-loaded (and still-loading)
+                # instances first, displaced requests re-enter the queue
+                victims = sorted(cluster.by_type(InstanceType.BATCH),
+                                 key=lambda i: (i.active, i.n_running))
+                for inst in victims[:dec2.remove_instances]:
                     for r in cluster.retire(inst):
                         queue.requeue(r)
             else:

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 from repro.serving.request import Request, RequestState, RequestType
 
@@ -95,6 +95,16 @@ class RunResult:
             return 0.0
         return ttfts[min(int(0.99 * len(ttfts)), len(ttfts) - 1)]
 
+    def instance_counts_at(self, t: float) -> Tuple[int, int, int]:
+        """(interactive, mixed, batch) instance counts at time ``t``
+        (stepwise-left over the timeline samples)."""
+        last = (0, 0, 0)
+        for p in self.timeline:
+            if p.t > t:
+                break
+            last = (p.n_interactive, p.n_mixed, p.n_batch)
+        return last
+
     def summary(self) -> Dict[str, float]:
         return {
             "slo_attainment": self.slo_attainment(),
@@ -108,3 +118,27 @@ class RunResult:
             "hysteresis": self.hysteresis,
             "mean_itl": self.mean_itl(),
         }
+
+
+def decisions_match(a: "RunResult", b: "RunResult", *,
+                    interval: float = 1.0,
+                    slack_intervals: int = 1) -> Tuple[float, int]:
+    """Compare two runs' autoscaling decisions (per-type instance counts
+    sampled every control ``interval``), tolerating a shift of
+    ``slack_intervals`` — the engines may act the same way one control
+    tick apart. Returns (fraction of grid points matching, max per-type
+    count deviation at the unmatched points)."""
+    horizon = min(a.duration, b.duration)
+    n = max(int(horizon / interval), 1)
+    matched = 0
+    max_dev = 0
+    for i in range(n + 1):
+        t = i * interval
+        ca = a.instance_counts_at(t)
+        shifts = range(-slack_intervals, slack_intervals + 1)
+        if any(ca == b.instance_counts_at(t + s * interval) for s in shifts):
+            matched += 1
+        else:
+            cb = b.instance_counts_at(t)
+            max_dev = max(max_dev, max(abs(x - y) for x, y in zip(ca, cb)))
+    return matched / (n + 1), max_dev

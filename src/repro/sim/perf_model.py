@@ -67,9 +67,25 @@ class PerfModel:
         self.n_params = self.cfg.param_count()
         self.n_active = self.cfg.active_param_count()
         self.weight_bytes = self.n_params * BYTES_PER_PARAM
+        # The hot-path responses (itl / can_admit) run millions of times per
+        # simulation; fold every shape-derived constant once.
+        self._kv_per_tok = self._kv_bytes_per_token()
+        free = self.chips * HBM_BYTES - self.weight_bytes
+        self._kv_cap = float("inf") if self._kv_per_tok <= 0 else \
+            max(free, 0) * 0.9 / self._kv_per_tok   # 10% activation headroom
+        mem_bw = self.chips * HBM_BW * MBU
+        self._mem_t_base = self.weight_bytes / mem_bw
+        self._mem_t_per_kvtok = self._kv_per_tok / mem_bw
+        self._comp_t_per_seq = 2 * self.n_active / \
+            (self.chips * PEAK_FLOPS * MFU_DECODE)
+        self._coll_t = 0.0
+        if self.chips > 1:
+            coll_bytes = 2 * self.cfg.d_model * BYTES_PER_PARAM * \
+                self.cfg.n_layers * (self.chips - 1) / self.chips
+            self._coll_t = coll_bytes / ICI_BW
 
     # ------------------------------------------------------------ memory
-    def kv_bytes_per_token(self) -> float:
+    def _kv_bytes_per_token(self) -> float:
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         if cfg.arch_type == "ssm":
@@ -79,12 +95,11 @@ class PerfModel:
             n_attn_layers = cfg.n_layers // max(cfg.attn_every, 1)
         return 2 * n_attn_layers * cfg.n_kv_heads * hd * BYTES_PER_PARAM
 
+    def kv_bytes_per_token(self) -> float:
+        return self._kv_per_tok
+
     def kv_capacity_tokens(self) -> float:
-        free = self.chips * HBM_BYTES - self.weight_bytes
-        per_tok = self.kv_bytes_per_token()
-        if per_tok <= 0:
-            return float("inf")
-        return max(free, 0) * 0.9 / per_tok   # 10% activation headroom
+        return self._kv_cap
 
     # ------------------------------------------------------------ latency
     def prefill_time(self, prompt_len: int) -> float:
@@ -97,15 +112,9 @@ class PerfModel:
     def itl(self, batch_size: int, mean_ctx: float = 1024.0) -> float:
         """Inter-token latency at a given running batch size."""
         b = max(batch_size, 1)
-        kv_read = b * mean_ctx * self.kv_bytes_per_token()
-        mem_t = (self.weight_bytes + kv_read) / (self.chips * HBM_BW * MBU)
-        comp_t = 2 * self.n_active * b / (self.chips * PEAK_FLOPS * MFU_DECODE)
-        coll_t = 0.0
-        if self.chips > 1:
-            coll_bytes = 2 * self.cfg.d_model * BYTES_PER_PARAM * \
-                self.cfg.n_layers * (self.chips - 1) / self.chips
-            coll_t = coll_bytes / ICI_BW
-        t = max(mem_t, comp_t) + coll_t + STEP_OVERHEAD
+        mem_t = self._mem_t_base + b * mean_ctx * self._mem_t_per_kvtok
+        comp_t = b * self._comp_t_per_seq
+        t = max(mem_t, comp_t) + self._coll_t + STEP_OVERHEAD
         if self.speculative_decoding:
             t = t * (1 + self.spec_draft_overhead * math.sqrt(b)) \
                 / self.spec_accept_speedup

@@ -1,0 +1,202 @@
+"""Scenario library: named workload generators beyond the paper's traces.
+
+Each scenario builds a request list exercising a distinct control-plane
+regime — diurnal capacity tracking, spike absorption (Theta), multi-tenant
+SLO mixes, heavy-tail output lengths, and batch-backlog drains — in the
+trace-driven multi-SLO evaluation style of SLOs-Serve (arXiv:2504.08784)
+and the forecast/diurnal workloads of SageServe (arXiv:2502.14617).
+
+Scenarios register into ``SCENARIOS`` and are consumed by
+``benchmarks/scenario_sweep.py`` (and ``benchmarks/run.py``)::
+
+    from repro.sim.scenarios import SCENARIOS, build
+    reqs, sim_kw = build("diurnal", n_requests=5000, seed=0)
+
+Every builder takes ``(n_requests, seed, **overrides)`` and returns
+``(requests, sim_kwargs)`` where ``sim_kwargs`` carries a suggested
+``max_time`` for the run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.serving.request import (BATCH_ITL_SLO, Request, RequestType, SLO,
+                                   make_batch, make_interactive)
+from repro.sim.workload import MAX_TOKENS, _token_lengths
+
+SimKwargs = Dict[str, float]
+Builder = Callable[..., Tuple[List[Request], SimKwargs]]
+
+
+@dataclass
+class Scenario:
+    name: str
+    description: str
+    build: Builder
+    default_n: int = 3000
+
+
+SCENARIOS: Dict[str, Scenario] = {}
+
+
+def register(name: str, description: str, default_n: int = 3000):
+    def deco(fn: Builder) -> Builder:
+        SCENARIOS[name] = Scenario(name, description, fn, default_n)
+        return fn
+    return deco
+
+
+def build(name: str, n_requests: int = 0, seed: int = 0,
+          **overrides) -> Tuple[List[Request], SimKwargs]:
+    sc = SCENARIOS[name]
+    return sc.build(n_requests or sc.default_n, seed, **overrides)
+
+
+def _nonhomogeneous_arrivals(rng: np.random.Generator, n: int,
+                             rate_fn: Callable[[np.ndarray], np.ndarray],
+                             rate_max: float, horizon: float) -> np.ndarray:
+    """Thinning sampler for a non-homogeneous Poisson process; returns the
+    first ``n`` accepted arrival times (wraps the horizon if needed)."""
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n:
+        # draw candidate gaps in bulk at the envelope rate
+        gaps = rng.exponential(1.0 / rate_max, size=max(n, 1024))
+        ts = t + np.cumsum(gaps)
+        keep = rng.random(ts.size) < rate_fn(ts % horizon) / rate_max
+        out.extend(ts[keep].tolist())
+        t = float(ts[-1])
+    return np.asarray(out[:n])
+
+
+# --------------------------------------------------------------- scenarios
+@register("diurnal",
+          "sinusoidal day/night arrival rate; capacity must track the wave",
+          default_n=4000)
+def diurnal(n_requests: int, seed: int = 0, *, period: float = 1800.0,
+            base_rate: float = 6.0, amplitude: float = 0.85,
+            interactive_frac: float = 0.85,
+            batch_ttft_slo: float = 900.0) -> Tuple[List[Request], SimKwargs]:
+    rng = np.random.default_rng(seed)
+    rate_max = base_rate * (1 + amplitude)
+
+    def rate(ts: np.ndarray) -> np.ndarray:
+        return base_rate * (1 + amplitude * np.sin(2 * np.pi * ts / period))
+
+    times = _nonhomogeneous_arrivals(rng, n_requests, rate, rate_max, period)
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
+            if cls[i] else
+            make_batch(int(ins[i]), int(outs[i]), float(times[i]),
+                       ttft_slo=batch_ttft_slo)
+            for i in range(n_requests)]
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs, {"max_time": float(times[-1]) + 600.0}
+
+
+@register("burst_spikes",
+          "quiet Poisson base + short high-rate spikes separated by idle "
+          "gaps; stresses Theta over-provisioning and idle-skip",
+          default_n=4000)
+def burst_spikes(n_requests: int, seed: int = 0, *, n_bursts: int = 8,
+                 burst_rate: float = 120.0, base_rate: float = 0.5,
+                 gap: float = 300.0,
+                 interactive_frac: float = 1.0) -> Tuple[List[Request], SimKwargs]:
+    rng = np.random.default_rng(seed)
+    n_bursts = max(min(n_bursts, n_requests), 1)   # tiny-n guard
+    per_burst = max(n_requests // n_bursts, 1)
+    times: List[float] = []
+    t0 = 30.0
+    for _ in range(n_bursts):
+        gaps = rng.exponential(1.0 / burst_rate, per_burst)
+        ts = t0 + np.cumsum(gaps)
+        times.extend(ts.tolist())
+        t0 = float(ts[-1]) + gap
+    # sparse background traffic between bursts
+    n_bg = n_requests - per_burst * n_bursts
+    if n_bg > 0:
+        times.extend(rng.uniform(0.0, t0, n_bg).tolist())
+    times = np.sort(np.asarray(times))
+    ins, outs = _token_lengths(rng, len(times))
+    cls = rng.random(len(times)) < interactive_frac
+    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
+            if cls[i] else
+            make_batch(int(ins[i]), int(outs[i]), float(times[i]))
+            for i in range(len(times))]
+    return reqs, {"max_time": float(times[-1]) + gap + 300.0}
+
+
+@register("multi_tenant_slo",
+          "four tenants with distinct (TTFT, ITL) SLO classes sharing the "
+          "cluster: premium/standard interactive + urgent/overnight batch",
+          default_n=4000)
+def multi_tenant_slo(n_requests: int, seed: int = 0, *,
+                     arrival_rate: float = 12.0) -> Tuple[List[Request], SimKwargs]:
+    rng = np.random.default_rng(seed)
+    # (weight, request_type, ttft_slo, itl_slo)
+    tenants = [
+        (0.35, RequestType.INTERACTIVE, 5.0, 0.1),     # premium chat
+        (0.35, RequestType.INTERACTIVE, 15.0, 0.3),    # standard chat
+        (0.15, RequestType.BATCH, 600.0, BATCH_ITL_SLO),   # urgent batch
+        (0.15, RequestType.BATCH, 3600.0, BATCH_ITL_SLO),  # overnight batch
+    ]
+    gaps = rng.exponential(1.0 / arrival_rate, n_requests)
+    times = np.cumsum(gaps)
+    ins, outs = _token_lengths(rng, n_requests)
+    weights = np.asarray([w for w, *_ in tenants])
+    choice = rng.choice(len(tenants), size=n_requests,
+                        p=weights / weights.sum())
+    reqs = []
+    for i in range(n_requests):
+        _, rtype, ttft, itl = tenants[int(choice[i])]
+        reqs.append(Request(int(ins[i]), int(outs[i]), rtype,
+                            SLO(ttft, itl), float(times[i])))
+    return reqs, {"max_time": float(times[-1]) + 900.0}
+
+
+@register("heavy_tail",
+          "Pareto-tailed output lengths (a few requests generate for "
+          "minutes); stresses completion estimates and KV growth",
+          default_n=2500)
+def heavy_tail(n_requests: int, seed: int = 0, *, arrival_rate: float = 8.0,
+               pareto_shape: float = 1.2,
+               interactive_frac: float = 0.8) -> Tuple[List[Request], SimKwargs]:
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / arrival_rate, n_requests)
+    times = np.cumsum(gaps)
+    ins, _ = _token_lengths(rng, n_requests)
+    outs = np.clip((rng.pareto(pareto_shape, n_requests) + 1) * 48,
+                   4, 4 * MAX_TOKENS).astype(int)
+    cls = rng.random(n_requests) < interactive_frac
+    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
+            if cls[i] else
+            make_batch(int(ins[i]), int(outs[i]), float(times[i]),
+                       ttft_slo=1800.0)
+            for i in range(n_requests)]
+    return reqs, {"max_time": float(times[-1]) + 1800.0}
+
+
+@register("backlog_drain",
+          "large batch queue dumped at t=0 under a live interactive "
+          "stream (Fig. 19 regime): deadline-driven bulk scaling",
+          default_n=4000)
+def backlog_drain(n_requests: int, seed: int = 0, *,
+                  backlog_frac: float = 0.8, arrival_rate: float = 10.0,
+                  batch_ttft_slo: float = 1200.0) -> Tuple[List[Request], SimKwargs]:
+    rng = np.random.default_rng(seed)
+    n_backlog = int(n_requests * backlog_frac)
+    n_live = n_requests - n_backlog
+    ins_b, outs_b = _token_lengths(rng, n_backlog)
+    reqs = [make_batch(int(ins_b[i]), int(outs_b[i]), 0.0,
+                       ttft_slo=batch_ttft_slo) for i in range(n_backlog)]
+    gaps = rng.exponential(1.0 / arrival_rate, n_live)
+    times = np.cumsum(gaps)
+    ins_l, outs_l = _token_lengths(rng, n_live)
+    reqs.extend(make_interactive(int(ins_l[i]), int(outs_l[i]),
+                                 float(times[i])) for i in range(n_live))
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs, {"max_time": batch_ttft_slo + 1200.0}

@@ -1,28 +1,228 @@
-"""Discrete-time cluster simulation loop.
+"""Cluster simulation: event-driven core + fixed-tick reference loop.
 
-Drives arrivals -> global queue -> controller routing -> instance fluid
-steps -> completions, at a fixed tick (default 0.25 s), with the controller
-invoked every ``control_interval``. The identical ``repro.core`` autoscaler
-code used by the real engine runs here — only the data plane is simulated
-(DESIGN.md §4).
+The event-driven core (``simulate_events``) drives the cluster off a
+time-ordered event heap — request arrivals, instance-ready transitions,
+per-instance completion estimates, control ticks, and timeline samples —
+so idle spans cost zero work and million-request traces run in seconds.
+The identical ``repro.core`` autoscaler code used by the real engine runs
+in the control loop — only the data plane is simulated (DESIGN.md §4), as
+a fluid model whose composition changes happen exactly at event times.
+
+``simulate_fixed_tick`` is the original discrete-time loop (default tick
+0.25 s), kept as the equivalence reference and quantization baseline.
+``simulate`` keeps the historical signature and dispatches to either
+engine (event-driven by default).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import heapq
+import itertools
+import math
 from typing import Callable, List, Optional
 
 from repro.serving.global_queue import GlobalQueue
 from repro.serving.request import Request, RequestState
-from repro.sim.cluster import InstanceType, SimCluster
+from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.metrics import RunResult, TimelinePoint
 from repro.sim.perf_model import PerfModel
 
+# heap-event kinds; the tuple position makes READY sort before COMPLETION
+# at equal timestamps (an instance activates before its estimates fire)
+_READY, _COMPLETION = 0, 1
 
-def simulate(requests: List[Request], controller: BaseController,
-             cluster: SimCluster, *, dt: float = 0.25,
-             control_interval: float = 1.0, max_time: float = 7200.0,
-             warm_start: int = 0, timeline_every: float = 1.0) -> RunResult:
+
+def _warm_start(controller, cluster: SimCluster, t: float, n: int) -> None:
+    """Pre-provision ``n`` instances, instantly active (shared by engines)."""
+    for _ in range(n):
+        inst = controller._provision(cluster, InstanceType.MIXED, t) \
+            if hasattr(controller, "_provision") else \
+            cluster.provision(controller.model, InstanceType.MIXED, t,
+                              static_batch=getattr(controller, "static_batch",
+                                                   64))
+        if inst is not None:
+            inst.ready_time = t
+            inst.activate_if_ready(t)
+
+
+def simulate_events(requests: List[Request], controller: BaseController,
+                    cluster: SimCluster, *, control_interval: float = 1.0,
+                    max_time: float = 7200.0, warm_start: int = 0,
+                    timeline_every: float = 1.0,
+                    completion_grain: float = 0.25,
+                    quantize: float = 0.0) -> RunResult:
+    """Event-driven simulation. ``quantize > 0`` snaps every event time up
+    to that grid, making the run a *sparse fixed-tick*: it touches only
+    non-empty ticks yet batches arrivals/completions exactly like a
+    ``simulate_fixed_tick`` run at ``dt=quantize`` — the mode the
+    engine-equivalence comparison uses."""
+    queue = GlobalQueue()
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    n = len(pending)
+    pi = 0
+    t = 0.0
+    cluster.event_mode = True
+    cluster.now = 0.0
+    cluster.completion_grain = completion_grain
+    cluster.quantize = quantize
+
+    _warm_start(controller, cluster, t, warm_start)
+
+    heap: list = []                  # (time, kind, seq, instance, epoch)
+    ev_seq = itertools.count()
+    ready_scheduled: set = set()     # instance ids with a READY event pushed
+    timeline: List[TimelinePoint] = []
+    next_control = 0.0
+    control_parked = False
+    next_timeline = 0.0
+    last_sample_t = 0.0
+    eps = 1e-12
+
+    def _sample(now: float) -> None:
+        nonlocal last_sample_t, next_timeline
+        rate = cluster.take_tokens() / max(now - last_sample_t, 1e-9)
+        timeline.append(TimelinePoint(
+            now,
+            len(cluster.by_type(InstanceType.INTERACTIVE)),
+            len(cluster.by_type(InstanceType.MIXED)),
+            len(cluster.by_type(InstanceType.BATCH)),
+            cluster.used_chips(),
+            queue.n_interactive, queue.n_batch, rate))
+        last_sample_t = now
+        next_timeline = now + timeline_every
+
+    while True:
+        # ---- termination: all requests arrived, none queued or running
+        if pi >= n and len(queue) == 0 and cluster.total_running == 0:
+            break
+
+        # ---- next event time across all sources
+        t_next = pending[pi].arrival_time if pi < n else float("inf")
+        if heap and heap[0][0] < t_next:
+            t_next = heap[0][0]
+        if next_control < t_next:
+            t_next = next_control
+        if not control_parked and next_timeline < t_next:
+            t_next = next_timeline
+        if quantize > 0:                 # sparse fixed-tick alignment
+            t_next = math.ceil(t_next / quantize - 1e-9) * quantize
+        if t_next > max_time or t_next == float("inf"):
+            cluster.advance_time(max_time)   # idle chip-time to the horizon
+            t = max_time
+            break
+        t = t_next
+        cluster.advance_time(t)
+        changed = False
+
+        # 1. arrivals due at t
+        while pi < n and pending[pi].arrival_time <= t + eps:
+            req = pending[pi]
+            queue.push(req)
+            if hasattr(controller, "observe_arrival"):
+                controller.observe_arrival(req, t)
+            pi += 1
+            changed = True
+
+        # 2. instance events due at t (ready transitions, completion
+        #    estimates; stale estimates are skipped via the epoch stamp).
+        #    Instances that gained capacity are backfilled directly below.
+        freed = []
+        while heap and heap[0][0] <= t + eps:
+            _, kind, _, inst, epoch = heapq.heappop(heap)
+            if kind == _READY:
+                if inst.state == InstanceState.LOADING:
+                    inst.activate_if_ready(t)
+                    inst.mark_dirty()
+                    freed.append(inst)
+                    changed = True
+            elif epoch == inst._epoch and inst.state == InstanceState.ACTIVE:
+                inst.advance(t)
+                freed.append(inst)
+                changed = True
+
+        # a parked control loop resumes as soon as anything happens
+        if control_parked and changed:
+            next_control = t
+            control_parked = False
+
+        # 3. control tick: align every instance's fluid state with ``t``,
+        #    then run the identical production control path
+        ran_control = t >= next_control - eps
+        if ran_control:
+            for inst in cluster.instances:
+                inst.advance(t)
+            pre = (len(cluster.instances), cluster.scale_ups,
+                   cluster.scale_downs)
+            controller.control(cluster, queue, t)
+            # schedule ready events for instances the controller provisioned
+            for inst in cluster.instances:
+                if inst.state == InstanceState.LOADING and \
+                        inst.id not in ready_scheduled:
+                    heapq.heappush(heap, (inst.ready_time, _READY,
+                                          next(ev_seq), inst, 0))
+                    ready_scheduled.add(inst.id)
+            post = (len(cluster.instances), cluster.scale_ups,
+                    cluster.scale_downs)
+            quiescent = (pre == post and len(queue) == 0
+                         and cluster.total_running == 0
+                         and all(i.state != InstanceState.LOADING
+                                 for i in cluster.instances))
+            if quiescent:
+                # deterministic controller + unchanged inputs -> nothing can
+                # change before the next arrival; park the control loop
+                next_control = pending[pi].arrival_time if pi < n \
+                    else float("inf")
+                control_parked = True
+            else:
+                next_control = t + control_interval
+
+        # 4. routing: the full preferential pass runs at control ticks; in
+        #    between, interactive dispatch stays zero-queuing on every event
+        #    and only just-freed instances are backfilled from the batch
+        #    queue — the hot path never rescans the whole cluster
+        if ran_control or not hasattr(controller, "route_interactive"):
+            controller.route(cluster, queue, t)
+        else:
+            controller.route_interactive(cluster, queue, t)
+            if freed and queue.n_batch:
+                if len(freed) > 1:
+                    # preserve pool preference: batch instances first
+                    freed.sort(key=lambda i:
+                               i.itype != InstanceType.BATCH)
+                controller.backfill(freed, queue, t)
+
+        # 5. sweep instances touched this batch: surface completions to the
+        #    controller and (re)schedule their next completion estimate
+        for inst in cluster.drain_dirty():
+            for r in inst.drain_finished():
+                controller.observe_completion(r)
+            if inst.state == InstanceState.ACTIVE:
+                eta = inst.next_event_in()
+                if eta != float("inf"):
+                    inst._epoch += 1
+                    heapq.heappush(heap, (t + eta, _COMPLETION,
+                                          next(ev_seq), inst, inst._epoch))
+
+        # 6. timeline sample (suppressed while parked — state is frozen)
+        if t >= next_timeline - eps:
+            _sample(t)
+
+    if timeline and t > timeline[-1].t:
+        _sample(t)
+    return RunResult(requests=requests, timeline=timeline,
+                     chip_seconds=cluster.chip_seconds,
+                     peak_chips=cluster.peak_chips,
+                     scale_ups=cluster.scale_ups,
+                     scale_downs=cluster.scale_downs,
+                     duration=t)
+
+
+def simulate_fixed_tick(requests: List[Request], controller: BaseController,
+                        cluster: SimCluster, *, dt: float = 0.25,
+                        control_interval: float = 1.0,
+                        max_time: float = 7200.0, warm_start: int = 0,
+                        timeline_every: float = 1.0) -> RunResult:
+    """The original discrete-time loop (reference/quantization baseline)."""
     queue = GlobalQueue()
     pending = sorted(requests, key=lambda r: r.arrival_time)
     pi = 0
@@ -31,14 +231,7 @@ def simulate(requests: List[Request], controller: BaseController,
     next_timeline = 0.0
     timeline: List[TimelinePoint] = []
 
-    # optional warm start: instances pre-provisioned and instantly active
-    for _ in range(warm_start):
-        inst = controller._provision(cluster, InstanceType.MIXED, t) \
-            if hasattr(controller, "_provision") else \
-            cluster.provision(controller.model, InstanceType.MIXED, t,
-                              static_batch=getattr(controller, "static_batch", 64))
-        if inst is not None:
-            inst.ready_time = t
+    _warm_start(controller, cluster, t, warm_start)
 
     while t < max_time:
         # 1. arrivals
@@ -93,6 +286,27 @@ def simulate(requests: List[Request], controller: BaseController,
                      scale_ups=cluster.scale_ups,
                      scale_downs=cluster.scale_downs,
                      duration=t)
+
+
+def simulate(requests: List[Request], controller: BaseController,
+             cluster: SimCluster, *, dt: float = 0.25,
+             control_interval: float = 1.0, max_time: float = 7200.0,
+             warm_start: int = 0, timeline_every: float = 1.0,
+             engine: str = "event") -> RunResult:
+    """Compatibility wrapper: dispatch to the event-driven core (default)
+    or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies).
+    """
+    if engine == "event":
+        return simulate_events(requests, controller, cluster,
+                               control_interval=control_interval,
+                               max_time=max_time, warm_start=warm_start,
+                               timeline_every=timeline_every)
+    if engine == "fixed":
+        return simulate_fixed_tick(requests, controller, cluster, dt=dt,
+                                   control_interval=control_interval,
+                                   max_time=max_time, warm_start=warm_start,
+                                   timeline_every=timeline_every)
+    raise ValueError(f"unknown engine {engine!r} (want 'event' or 'fixed')")
 
 
 def default_perf_factory(**perf_kw) -> Callable[[str], PerfModel]:

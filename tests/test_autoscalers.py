@@ -2,7 +2,7 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.backpressure import (LocalMetrics, interactive_backpressure,
                                      local_backpressure)
@@ -152,3 +152,34 @@ def test_spare_mixed_capacity_reduces_instances():
     d_spare = sc.update(q, now=0.0, n_batch_instances=0,
                         spare_mixed_throughput=2000.0)
     assert d_spare.add_instances <= d_no_spare.add_instances
+
+
+def test_batch_scaler_scales_down_excess_while_bbp_zero():
+    """Algorithm 2 minimality (stale-instance fix): with BBP already 0,
+    instances that remain unnecessary even after derating the surviving
+    capacity are surrendered instead of lingering while groups trickle in."""
+    sc = _mk_scaler(throughput=1000.0)
+    q = _queue(10, ttft=3600.0)          # tiny draining queue, far deadline
+    d = sc.update(q, now=0.0, n_batch_instances=8)
+    assert d.add_instances == 0 and d.bbp_before == 0
+    assert d.remove_instances >= 1
+    # never surrenders capacity needed to keep BBP at zero
+    left = 8 - d.remove_instances
+    assert sc.compute_bbp(
+        d.groups, 0.0,
+        max(sc.scale_down_derate * left * 1000.0, 1e-9)) == 0
+
+
+def test_batch_scaler_never_removes_needed_capacity():
+    sc = _mk_scaler(throughput=1000.0)
+    # 2000 reqs * 256 tok = 512k tokens; 600 s deadline -> ~853 tok/s needed
+    q = _queue(2000, ttft=600.0)
+    d = sc.update(q, now=0.0, n_batch_instances=1)
+    assert d.remove_instances == 0
+
+
+def test_batch_scaler_retire_all_unchanged_when_queue_empty():
+    sc = _mk_scaler()
+    d = sc.update([], now=0.0, n_batch_instances=4,
+                  n_active_batch_requests=0)
+    assert d.retire_all and d.remove_instances == 0

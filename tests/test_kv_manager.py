@@ -1,8 +1,7 @@
 """Property-based tests for the paged KV allocator invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.stateful import (RuleBasedStateMachine, invariant,
-                                 precondition, rule)
+from _hypothesis_compat import (RuleBasedStateMachine, given, invariant,
+                                precondition, rule, settings, st)
 
 from repro.serving.kv_manager import OutOfPagesError, PagedKVManager
 

@@ -1,5 +1,5 @@
 """Request-group clustering (1-D k-means on TTFT deadlines)."""
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.request_groups import kmeans_1d, make_request_groups
 from repro.serving.request import make_batch
@@ -48,3 +48,90 @@ def test_every_request_in_exactly_one_group(n):
     groups = make_request_groups(reqs)
     seen = [id(r) for g in groups for r in g.requests]
     assert sorted(seen) == sorted(id(r) for r in reqs)
+
+
+# ------------------------------------------------- k-clamp fix (short queues)
+def test_positive_k_does_not_degenerate_on_short_queue():
+    """Regression: 0 < k >= n used to silently take the one-group-per-
+    request ablation path, inflating BBP on short queues. Identical
+    deadlines must collapse into ONE group for any positive k."""
+    reqs = [make_batch(10, 10, arrival=0.0, ttft_slo=600.0)
+            for _ in range(5)]
+    for k in (1, 4, 5, 8, 100):
+        groups = make_request_groups(reqs, k=k)
+        assert len(groups) == 1, (k, len(groups))
+        assert groups[0].n == 5
+
+
+def test_minus_one_is_the_only_singleton_path():
+    reqs = [make_batch(10, 10, arrival=0.0, ttft_slo=600.0)
+            for _ in range(4)]
+    groups = make_request_groups(reqs, k=-1)
+    assert len(groups) == 4
+    assert all(g.n == 1 for g in groups)
+
+
+@given(n=st.integers(1, 8), k=st.integers(1, 10),
+       spread=st.sampled_from([0.0, 1.0, 5000.0]))
+@settings(max_examples=60, deadline=None)
+def test_small_queue_grouping_property(n, k, spread):
+    """Positive k is clamped to min(k, n) and near-identical deadlines
+    merge: group count never exceeds the number of distinct deadlines."""
+    reqs = [make_batch(10, 10, arrival=0.0,
+                       ttft_slo=600.0 + spread * (i % 2))
+            for i in range(n)]
+    groups = make_request_groups(reqs, k=k)
+    distinct = len({r.deadline for r in reqs})
+    assert 1 <= len(groups) <= min(k, n)
+    if spread == 0.0:
+        assert len(groups) == 1
+    assert sum(g.n for g in groups) == n
+    assert len(groups) <= distinct
+
+
+# ------------------------------------------------- incremental grouper
+def test_incremental_grouper_tracks_queue():
+    from repro.core.request_groups import IncrementalGrouper
+    from repro.serving.global_queue import GlobalQueue
+
+    q = GlobalQueue()
+    g = IncrementalGrouper()
+    q.attach_batch_listener(g)
+    fast = [make_batch(10, 10, arrival=0.0, ttft_slo=300.0)
+            for _ in range(10)]
+    slow = [make_batch(10, 10, arrival=0.0, ttft_slo=3600.0)
+            for _ in range(10)]
+    for r in fast + slow:
+        q.push(r)
+    stats = g.group_stats()
+    assert sum(s.n for s in stats) == 20
+    assert len(stats) >= 2                      # distant cohorts split
+    assert stats[0].deadline < stats[-1].deadline
+    # serving drains groups (earliest deadline first)
+    for _ in range(10):
+        q.pop_batch_fcfs()
+    stats = g.group_stats()
+    assert sum(s.n for s in stats) == 10
+    assert g.n_members == 10
+
+
+def test_incremental_grouper_matches_oneshot_bbp_inputs():
+    """The incremental stats must agree with a from-scratch clustering on
+    what BBP reads: total membership and the earliest deadline."""
+    from repro.core.request_groups import IncrementalGrouper
+    from repro.serving.global_queue import GlobalQueue
+
+    q = GlobalQueue()
+    g = IncrementalGrouper()
+    q.attach_batch_listener(g)
+    reqs = [make_batch(10, 10, arrival=float(i),
+                       ttft_slo=300.0 * (1 + i % 5)) for i in range(300)]
+    for r in reqs:
+        q.push(r)
+    for _ in range(120):
+        q.pop_batch_fcfs()
+    stats = g.group_stats()
+    remaining = list(q.iter_batch())
+    oneshot = make_request_groups(remaining)
+    assert sum(s.n for s in stats) == len(remaining)
+    assert abs(stats[0].deadline - oneshot[0].deadline) < 1e-9

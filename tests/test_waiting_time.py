@@ -1,6 +1,6 @@
 """QLM waiting-time estimator: online fitting + CLT sharpening property."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.waiting_time import OutputLengthModel, WaitingTimeEstimator
 
