@@ -2,8 +2,13 @@
 
 Three sections:
 
-- ``scenario/<name>``: every registered scenario (repro.sim.scenarios) run
-  end-to-end on the event-driven core with the Chiron controller.
+- ``scenario/<name>``: every registered scenario (repro.sim.scenarios)
+  built columnar (``build_trace``) and run end-to-end on the event-driven
+  core with the Chiron controller (multi-model and failure-injection
+  scenarios pass their extra sim_kwargs through). Per-scenario results —
+  events/s, wall time, SLO attainment, per-model SLOs — are also written
+  machine-readable to ``BENCH_scenarios.json`` at the repo root so the
+  perf trajectory is tracked across PRs.
 - ``fig19_equiv``: the fig19_timeline workload run on both engines; the
   instance-count timelines must agree within one control interval
   (``decisions_match``).
@@ -20,6 +25,7 @@ Env knobs: ``SCENARIO_SWEEP_N`` (speedup trace size, default 100000),
 """
 from __future__ import annotations
 
+import json
 import os
 import signal
 import time
@@ -30,7 +36,7 @@ from benchmarks.common import MAX_CHIPS, Row, chiron
 from repro.serving.request import Request, RequestState, RequestType
 from repro.sim.cluster import SimCluster
 from repro.sim.metrics import decisions_match
-from repro.sim.scenarios import SCENARIOS, build
+from repro.sim.scenarios import SCENARIOS, build, build_trace
 from repro.sim.simulator import (default_perf_factory, simulate_events,
                                  simulate_fixed_tick)
 from repro.sim.workload import WorkloadSpec, generate
@@ -43,6 +49,8 @@ class SeedFcfsQueue:
     scaling bug the heap queue fixes). No listener API, so the batch
     autoscaler falls back to re-clustering a snapshot every control tick
     (the pre-incremental behaviour)."""
+
+    _MODEL = "llama-8b"              # the seed queue was single-model
 
     def __init__(self):
         self.interactive = deque()
@@ -63,14 +71,30 @@ class SeedFcfsQueue:
             self._list.append(req)
             self._sorted = False
 
-    def pop_interactive(self) -> Optional[Request]:
+    # --- model-keyed protocol (single lane): routing asks per model now
+    def interactive_models(self) -> List[str]:
+        return [self._MODEL] if self.interactive else []
+
+    def batch_models(self) -> List[str]:
+        return [self._MODEL] if self._list else []
+
+    def n_interactive_for(self, model=None) -> int:
+        return len(self.interactive)
+
+    def n_batch_for(self, model=None) -> int:
+        return len(self._list)
+
+    def peek_interactive(self, model=None) -> Optional[Request]:
+        return self.interactive[0] if self.interactive else None
+
+    def pop_interactive(self, model=None) -> Optional[Request]:
         return self.interactive.popleft() if self.interactive else None
 
     def _sort(self) -> None:
         self._list.sort(key=lambda r: (r.saved_kv is None, r.deadline,
                                        r.arrival_time))
 
-    def peek_batch(self) -> Optional[Request]:
+    def peek_batch(self, model=None) -> Optional[Request]:
         if not self._list:
             return None
         if not self._sorted:           # one sort per routing pass
@@ -78,14 +102,14 @@ class SeedFcfsQueue:
             self._sorted = True
         return self._list[0]
 
-    def pop_batch_fcfs(self) -> Optional[Request]:
+    def pop_batch_fcfs(self, model=None) -> Optional[Request]:
         """Seed semantics: the whole list re-sorts on every pop."""
         if not self._list:
             return None
         self._sort()
         return self._list.pop(0)
 
-    def iter_batch(self):
+    def iter_batch(self, model=None):
         return iter(self._list)
 
     @property
@@ -124,16 +148,18 @@ def _run_budgeted(fn, budget_s: float):
 def _speedup_trace(n: int, seed: int = 1):
     """Bursty 100k-class trace: a deadline-driven batch backlog (the
     ~2000+-queued regime where the paper's estimator sharpens, Fig. 14)
-    under an interactive stream arriving in spikes."""
+    under an interactive stream arriving in spikes. Columnar end to end —
+    the event core materializes requests lazily."""
+    from repro.sim.workload import Trace
     n_backlog = int(n * 0.9)
-    backlog, _ = build("backlog_drain", n_requests=n_backlog, seed=seed,
-                       backlog_frac=1.0, batch_ttft_slo=2400.0)
-    bursts, kw = build("burst_spikes", n_requests=n - n_backlog,
-                       seed=seed + 1, n_bursts=6, burst_rate=120.0,
-                       gap=300.0, interactive_frac=1.0)
-    reqs = backlog + bursts
-    reqs.sort(key=lambda r: r.arrival_time)
-    return reqs, max(kw["max_time"], 3000.0)
+    backlog, _ = build_trace("backlog_drain", n_requests=n_backlog,
+                             seed=seed, backlog_frac=1.0,
+                             batch_ttft_slo=2400.0)
+    bursts, kw = build_trace("burst_spikes", n_requests=n - n_backlog,
+                             seed=seed + 1, n_bursts=6, burst_rate=120.0,
+                             gap=300.0, interactive_frac=1.0)
+    trace = Trace.concat([backlog, bursts]).sorted_by_arrival()
+    return trace, max(kw["max_time"], 3000.0)
 
 
 def _finish_stats(res, reqs):
@@ -144,20 +170,48 @@ def _finish_stats(res, reqs):
 
 def run():
     rows = []
+    json_rows = []
 
-    # ---- scenario library on the event core
+    # ---- scenario library on the event core (columnar build)
     for name, sc in sorted(SCENARIOS.items()):
-        reqs, kw = build(name, seed=3)
+        trace, kw = build_trace(name, seed=3)
         cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+        ctrl = chiron(models=kw["models"]) if "models" in kw else chiron()
         t0 = time.perf_counter()
-        res = simulate_events(reqs, chiron(), cluster,
-                              max_time=kw["max_time"], warm_start=2)
+        res = simulate_events(trace, ctrl, cluster,
+                              max_time=kw["max_time"], warm_start=2,
+                              failures=kw.get("failures"))
         wall = time.perf_counter() - t0
+        extra = {}
+        if res.failures:
+            extra["failures"] = res.failures
         rows.append(Row(f"scenario/{name}", wall * 1e6,
-                        n=len(reqs), dur_s=round(res.duration),
+                        n=trace.n, dur_s=round(res.duration),
                         peak_chips=res.peak_chips,
                         hysteresis=round(res.hysteresis, 2),
-                        **_finish_stats(res, reqs)))
+                        events_per_s=round(res.n_events / max(wall, 1e-9)),
+                        **extra, **_finish_stats(res, res.requests)))
+        json_rows.append({
+            "scenario": name, "n_requests": trace.n,
+            "wall_s": round(wall, 3),
+            "events": res.n_events,
+            "events_per_s": round(res.n_events / max(wall, 1e-9), 1),
+            "sim_duration_s": round(res.duration, 1),
+            "slo_attainment": round(res.slo_attainment(), 4),
+            "slo_by_model": {m: round(v, 4)
+                             for m, v in res.slo_by_model().items()},
+            "completion_rate": round(res.completion_rate(), 4),
+            "gpu_hours": round(res.gpu_hours(), 3),
+            "peak_chips": res.peak_chips,
+            "hysteresis": round(res.hysteresis, 3),
+            "failures": res.failures,
+        })
+
+    # machine-readable perf trajectory (tracked across PRs)
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_scenarios.json")
+    with open(out_path, "w") as f:
+        json.dump({"scenarios": json_rows}, f, indent=1, sort_keys=True)
 
     # ---- fig19 workload: event vs fixed-tick decision equivalence.
     # The event engine runs in sparse fixed-tick mode (quantize=dt) so both
@@ -218,7 +272,7 @@ def run():
     wall_event = time.perf_counter() - t0
     rows.append(Row("speedup/event", wall_event * 1e6, n=n,
                     wall_s=round(wall_event, 2),
-                    **_finish_stats(res, reqs)))
+                    **_finish_stats(res, res.requests)))
 
     reqs_f, _ = _speedup_trace(n)
     cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
@@ -229,7 +283,7 @@ def run():
     rows.append(Row("speedup/fixed_dt0.25", wall_fixed * 1e6, n=n,
                     wall_s=round(wall_fixed, 2),
                     speedup_event=round(wall_fixed / wall_event, 1),
-                    **_finish_stats(res_fx, reqs_f)))
+                    **_finish_stats(res_fx, res_fx.requests)))
 
     # seed baseline growth curve (small n, full runs)
     import repro.sim.simulator as sim_mod

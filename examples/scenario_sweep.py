@@ -1,21 +1,33 @@
-"""Walkthrough: the scenario library + the event-driven simulator core.
+"""Walkthrough: the columnar trace plane + the event-driven simulator.
 
 Run:  PYTHONPATH=src python examples/scenario_sweep.py
 
 1. lists the registered scenarios,
-2. runs two of them end-to-end on the event-driven engine,
-3. shows the engine dispatch (`simulate(..., engine=...)`) and the
+2. runs two of them end-to-end on the event-driven engine straight from
+   the columnar ``Trace`` (lazy request materialization),
+3. runs the multi-model fleet (per-model SLO attainment on one shared
+   chip budget) and the failure-injection scenario,
+4. round-trips a trace through a CSV file (``trace_replay`` style),
+5. shows the engine dispatch (`simulate(..., engine=...)`) and the
    event-vs-fixed-tick speedup on a small backlog drain.
 
-The full benchmark (100k-request traces, seed-baseline comparison) lives
-in ``benchmarks/scenario_sweep.py``.
+The full benchmark (100k-request traces, seed-baseline comparison,
+``BENCH_scenarios.json``) lives in ``benchmarks/scenario_sweep.py``.
 """
+import os
+import tempfile
 import time
 
 from repro.sim.cluster import SimCluster
 from repro.sim.controllers import ChironController
-from repro.sim.scenarios import SCENARIOS, build
+from repro.sim.scenarios import SCENARIOS, build_trace
 from repro.sim.simulator import default_perf_factory, simulate
+from repro.sim.trace_io import load_trace, save_trace
+
+
+def _controller(kw):
+    return ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
 
 
 def main():
@@ -23,29 +35,49 @@ def main():
     for name, sc in sorted(SCENARIOS.items()):
         print(f"  {name:18s} {sc.description}")
 
-    for name in ("diurnal", "multi_tenant_slo"):
-        reqs, kw = build(name, n_requests=1200, seed=0)
+    for name in ("diurnal", "multi_tenant_slo", "multi_model_fleet",
+                 "instance_failures"):
+        trace, kw = build_trace(name, n_requests=1200, seed=0)
         cluster = SimCluster(default_perf_factory(), max_chips=200)
         t0 = time.perf_counter()
-        res = simulate(reqs, ChironController(), cluster,
-                       max_time=kw["max_time"], warm_start=2)
+        res = simulate(trace, _controller(kw), cluster,
+                       max_time=kw["max_time"], warm_start=2,
+                       failures=kw.get("failures"))
         wall = time.perf_counter() - t0
         s = res.summary()
-        print(f"\n{name}: {len(reqs)} requests in {wall:.2f}s wall "
+        print(f"\n{name}: {trace.n} requests in {wall:.2f}s wall "
               f"({res.duration:.0f}s simulated)")
         print(f"  slo_attainment={s['slo_attainment']:.3f} "
               f"gpu_hours={s['gpu_hours']:.2f} "
               f"peak_chips={s['peak_chips']} "
               f"hysteresis={s['hysteresis']:.2f}")
+        per_model = {k.split(':', 1)[1]: v for k, v in s.items()
+                     if k.startswith('slo_model:')}
+        if per_model:
+            print(f"  per-model SLO: "
+                  + " ".join(f"{m}={v:.3f}" for m, v in per_model.items()))
+        if res.failures:
+            print(f"  injected failures survived: {res.failures}")
+
+    # trace replay: save a scenario to CSV, load it back, run the replay
+    trace, kw = build_trace("trace_replay", n_requests=2000, seed=1)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "trace.csv")
+        save_trace(trace, path)
+        replay = load_trace(path)
+        res = simulate(replay, ChironController(),
+                       SimCluster(default_perf_factory(), max_chips=200),
+                       max_time=kw["max_time"], warm_start=2)
+    print(f"\ntrace_replay via CSV: {replay.n} requests round-tripped, "
+          f"slo={res.slo_attainment():.3f}")
 
     # engine dispatch: same trace, event core vs fixed-tick reference
-    reqs, kw = build("backlog_drain", n_requests=3000, seed=1)
     walls = {}
     for engine in ("event", "fixed"):
-        reqs_i, _ = build("backlog_drain", n_requests=3000, seed=1)
+        trace_i, kw = build_trace("backlog_drain", n_requests=3000, seed=1)
         cluster = SimCluster(default_perf_factory(), max_chips=200)
         t0 = time.perf_counter()
-        simulate(reqs_i, ChironController(), cluster,
+        simulate(trace_i, ChironController(), cluster,
                  max_time=kw["max_time"], warm_start=2, engine=engine)
         walls[engine] = time.perf_counter() - t0
     print(f"\nbacklog_drain x3000: event {walls['event']:.2f}s vs "

@@ -19,8 +19,11 @@ FAST_TESTS = [
     "tests/test_event_sim.py",
     "tests/test_global_queue.py",
     "tests/test_request_groups.py",
+    "tests/test_scenarios.py",       # scenario smoke incl. multi_model_fleet,
+                                     # trace_replay, instance_failures
     "tests/test_simulator.py",
     "tests/test_system.py",
+    "tests/test_trace_plane.py",     # columnar Trace + trace I/O + fleets
     "tests/test_waiting_time.py",
 ]
 

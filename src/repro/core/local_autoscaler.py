@@ -50,13 +50,23 @@ class LocalAutoscaler:
     ceiling_relax: float = 1.02
     # graduated decrease: halving is right for gross violations (the paper's
     # case: ITL 2x over SLO), but a 5-15% throughput dip just past the
-    # inflection only needs a step back — halving there reopens the gap the
-    # controller just closed and produces sawtooth batch sizes.
+    # inflection only needs a proportional step back (floored at
+    # mild_decrease) — halving there reopens the gap the controller just
+    # closed and produces sawtooth batch sizes.
     mild_violation: float = 1.25
     mild_decrease: float = 0.9
+    # EWMA on the throughput input to TBP (ROADMAP robustness item): the
+    # raw metric is sampled at control-tick grain, where one sequence
+    # finishing just before vs. just after the tick flips TBP across 1 and
+    # different engines/sampling grains converge to different batch-size
+    # ceilings. Smoothing the *input* keeps Algorithm 1 itself unchanged
+    # (alpha_thr=1 reproduces the raw-sample behaviour exactly) while
+    # making its fixed point grain-invariant.
+    thr_ewma_alpha: float = 0.5
 
     max_batch_size: int = field(init=False)
     _prev_throughput: Optional[float] = field(default=None, init=False)
+    _thr_ewma: Optional[float] = field(default=None, init=False)
     _prev_batch: int = field(default=0, init=False)
     _ceiling: Optional[float] = field(default=None, init=False)
     history: List[int] = field(default_factory=list, init=False)
@@ -75,14 +85,24 @@ class LocalAutoscaler:
         # proportionally to the step size, not to SLO proximity.
         grew = self.max_batch_size > self._prev_batch
         prev_thr = self._prev_throughput if grew else None
-        bp = local_backpressure(m.observed_itl, slo, prev_thr, m.throughput)
+        a = self.thr_ewma_alpha
+        thr = m.throughput if self._thr_ewma is None else \
+            a * m.throughput + (1.0 - a) * self._thr_ewma
+        self._thr_ewma = thr
+        bp = local_backpressure(m.observed_itl, slo, prev_thr, thr)
         lbp = m.observed_itl / slo
         bs = float(self.max_batch_size)
         self._prev_batch = self.max_batch_size
         if bp > 1.0:
             self._ceiling = bs
-            bs = bs * self.mild_decrease if bp < self.mild_violation \
-                else bs / 2.0
+            if bp < self.mild_violation:
+                # proportional step back, floored at mild_decrease: a
+                # barely-over-1 (smoothed) TBP excursion costs ~nothing,
+                # so sampling noise cannot ratchet the ceiling down —
+                # the EWMA bounds the excursion, this bounds its damage
+                bs = bs * max(1.0 / bp, self.mild_decrease)
+            else:
+                bs = bs / 2.0
         else:
             if lbp <= 0.0:
                 factor = self.max_growth
@@ -98,7 +118,7 @@ class LocalAutoscaler:
             bs = max(target, bs)   # a growth decision never shrinks
         self.max_batch_size = int(max(self.min_batch,
                                       min(self.max_batch, round(bs))))
-        self._prev_throughput = m.throughput
+        self._prev_throughput = thr
         self.history.append(self.max_batch_size)
         return self.max_batch_size
 

@@ -1,130 +1,243 @@
-"""Global queue (paper §3, Lifecycle of a Request).
+"""Global queue (paper §3, Lifecycle of a Request) — multi-model aware.
 
 All requests enqueue here; interactive requests follow a zero-queuing
 discipline (dispatched immediately, footnote 3) while batch requests may
 wait and are scheduled as request groups by the global autoscaler.
 
-The batch side is a binary heap keyed on ``(deadline, arrival_time, seq)``
-so every pop is O(log n) — draining n requests costs O(n log n) total
-instead of the O(n^2 log n) a sort-per-pop policy degrades to at the
-cluster scales the paper evaluates (thousands of queued requests).
-Preempted batch requests that still hold host-saved KV are parked in a
-separate resume lane served before fresh work, so a restart never
-re-queues behind requests that have not prefill'd yet.
+Every lane is keyed by the request's ``model``: a fleet serving N models
+holds N interactive FIFO lanes and N batch heaps behind one facade, and
+routing asks for work *for a specific model* so a request can never be
+handed to an instance that doesn't serve it. All single-model entry
+points (``pop_interactive()``, ``peek_batch()``, ...) keep their
+historical semantics by taking the globally-next request across lanes.
 
-Listeners (``attach_batch_listener``) observe every batch add/remove and
-let the global autoscaler maintain request groups incrementally instead of
-re-clustering the whole queue each control tick.
+The batch side is (per model) a binary heap keyed on ``(deadline,
+arrival_time, seq)`` so every pop is O(log n) — draining n requests costs
+O(n log n) total instead of the O(n^2 log n) a sort-per-pop policy
+degrades to at the cluster scales the paper evaluates. Preempted batch
+requests that still hold host-saved KV are parked in a per-model resume
+lane served before fresh work, so a restart never re-queues behind
+requests that have not prefill'd yet.
+
+Listeners (``attach_batch_listener``) observe every batch add/remove —
+optionally filtered to one model — and let each model's global autoscaler
+maintain request groups incrementally instead of re-clustering the whole
+queue each control tick.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from collections import deque
-from typing import Deque, Iterator, List, Optional, Tuple
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
 from repro.serving.request import Request, RequestType
 
 
 class GlobalQueue:
     def __init__(self):
-        self.interactive: Deque[Request] = deque()
-        # (deadline, arrival_time, seq, request) — earliest deadline first,
-        # FCFS within a deadline (§5.3), seq breaks exact ties stably.
-        self._batch_heap: List[Tuple[float, float, int, Request]] = []
-        self._resume: Deque[Request] = deque()   # preempted, KV on host
-        self._seq = itertools.count()
-        self._listeners: List[object] = []
+        # model -> deque of (seq, request); seq is a global FIFO stamp so
+        # cross-lane pops preserve arrival order, and front-requeues take
+        # negative stamps (they must precede everything already queued)
+        self._ilanes: Dict[str, Deque[Tuple[int, Request]]] = {}
+        self._iseq = itertools.count()
+        self._ifront = itertools.count(-1, -1)
+        self._icount = 0
+        # model -> (deadline, arrival_time, seq, request) heap — earliest
+        # deadline first, FCFS within a deadline (§5.3), seq breaks ties
+        self._bheaps: Dict[str, List[Tuple[float, float, int, Request]]] = {}
+        self._bresumes: Dict[str, Deque[Request]] = {}   # preempted, KV host
+        self._bseq = itertools.count()
+        self._bcount = 0
+        self._listeners: List[Tuple[object, Optional[str]]] = []
 
     # ------------------------------------------------------------ intake
     def push(self, req: Request) -> None:
         if req.request_type == RequestType.INTERACTIVE:
-            self.interactive.append(req)
+            lane = self._ilanes.get(req.model)
+            if lane is None:
+                lane = self._ilanes[req.model] = deque()
+            lane.append((next(self._iseq), req))
+            self._icount += 1
         else:
-            heapq.heappush(self._batch_heap,
-                           (req.deadline, req.arrival_time,
-                            next(self._seq), req))
-            self._notify_add(req)
+            h = self._bheaps.get(req.model)
+            if h is None:
+                h = self._bheaps[req.model] = []
+            heapq.heappush(h, (req.deadline, req.arrival_time,
+                               next(self._bseq), req))
+            self._bcount += 1
+            if self._listeners:
+                self._notify_add(req)
 
     def requeue(self, req: Request) -> None:
         """Preempted request returns to the queue.
 
         Zero-queuing discipline (footnote 3): a preempted interactive
-        request goes to the *front* of the interactive line — it already
+        request goes to the *front* of its model's line — it already
         waited once and must not re-queue behind later arrivals. Batch
-        requests with host-saved KV enter the resume lane (served first,
-        the restart skips re-prefill); otherwise they re-enter the heap at
-        their original (deadline, arrival) position.
+        requests with host-saved KV enter the model's resume lane (served
+        first, the restart skips re-prefill); otherwise they re-enter the
+        heap at their original (deadline, arrival) position.
         """
         if req.request_type == RequestType.INTERACTIVE:
-            self.interactive.appendleft(req)
+            self._ilanes.setdefault(req.model, deque()).appendleft(
+                (next(self._ifront), req))
+            self._icount += 1
         elif req.saved_kv is not None:
-            self._resume.append(req)
+            self._bresumes.setdefault(req.model, deque()).append(req)
+            self._bcount += 1
             self._notify_add(req)
         else:
             self.push(req)
 
-    # ------------------------------------------------------------ serving
-    def pop_interactive(self) -> Optional[Request]:
-        return self.interactive.popleft() if self.interactive else None
+    # ------------------------------------------------- interactive serving
+    def interactive_models(self) -> List[str]:
+        """Models with queued interactive work (lane insertion order)."""
+        return [m for m, d in self._ilanes.items() if d]
 
-    def peek_batch(self) -> Optional[Request]:
-        if self._resume:
-            return self._resume[0]
-        return self._batch_heap[0][3] if self._batch_heap else None
+    def n_interactive_for(self, model: str) -> int:
+        lane = self._ilanes.get(model)
+        return len(lane) if lane else 0
 
-    def pop_batch_fcfs(self) -> Optional[Request]:
+    def peek_interactive(self, model: Optional[str] = None) -> Optional[Request]:
+        lane = self._pick_ilane(model)
+        return lane[0][1] if lane else None
+
+    def pop_interactive(self, model: Optional[str] = None) -> Optional[Request]:
+        lane = self._pick_ilane(model)
+        if not lane:
+            return None
+        self._icount -= 1
+        return lane.popleft()[1]
+
+    def _pick_ilane(self, model: Optional[str]) -> Optional[Deque]:
+        if model is not None:
+            lane = self._ilanes.get(model)
+            return lane if lane else None
+        best = None
+        for lane in self._ilanes.values():      # few models: O(M) scan
+            if lane and (best is None or lane[0][0] < best[0][0]):
+                best = lane
+        return best
+
+    # ------------------------------------------------------ batch serving
+    def batch_models(self) -> List[str]:
+        """Models with queued batch work (lane insertion order)."""
+        out = [m for m, h in self._bheaps.items() if h]
+        out.extend(m for m, d in self._bresumes.items()
+                   if d and m not in out)
+        return out
+
+    def n_batch_for(self, model: str) -> int:
+        return len(self._bheaps.get(model, ())) + \
+            len(self._bresumes.get(model, ()))
+
+    def peek_batch(self, model: Optional[str] = None) -> Optional[Request]:
+        lane, kind = self._pick_blane(model)
+        if lane is None:
+            return None
+        return lane[0] if kind == "resume" else lane[0][3]
+
+    def pop_batch_fcfs(self, model: Optional[str] = None) -> Optional[Request]:
         """Earliest deadline first, then arrival order (FCFS within a
         group, §5.3); preempted requests with saved KV resume first."""
-        if self._resume:
-            req = self._resume.popleft()
-        elif self._batch_heap:
-            req = heapq.heappop(self._batch_heap)[3]
-        else:
+        lane, kind = self._pick_blane(model)
+        if lane is None:
             return None
-        self._notify_remove(req)
+        req = lane.popleft() if kind == "resume" else heapq.heappop(lane)[3]
+        self._bcount -= 1
+        if self._listeners:
+            self._notify_remove(req)
         return req
 
-    def iter_batch(self) -> Iterator[Request]:
-        """All queued batch requests in unspecified order (O(n))."""
-        yield from self._resume
-        for entry in self._batch_heap:
-            yield entry[3]
+    def _pick_blane(self, model: Optional[str]):
+        """The lane the next batch pop serves: a resume deque or a heap."""
+        if model is not None:
+            res = self._bresumes.get(model)
+            if res:
+                return res, "resume"
+            h = self._bheaps.get(model)
+            return (h, "heap") if h else (None, None)
+        if self._bresumes:
+            for res in self._bresumes.values():  # any resume lane first
+                if res:
+                    return res, "resume"
+        best = None
+        for h in self._bheaps.values():         # min head across models
+            # seq (slot 2) is globally unique, so the head comparison
+            # always resolves before reaching the Request element
+            if h and (best is None or h[0] < best[0]):
+                best = h
+        return (best, "heap") if best is not None else (None, None)
+
+    def iter_batch(self, model: Optional[str] = None) -> Iterator[Request]:
+        """Queued batch requests in unspecified order (O(n))."""
+        models = (model,) if model is not None else \
+            dict.fromkeys(itertools.chain(self._bheaps, self._bresumes))
+        for m in models:
+            yield from self._bresumes.get(m, ())
+            for entry in self._bheaps.get(m, ()):
+                yield entry[3]
+
+    # ------------------------------------------------ legacy flat views
+    @property
+    def interactive(self) -> List[Request]:
+        """Snapshot of queued interactive requests in global FIFO order.
+
+        O(n log n) debug/compat view — the routing hot path uses
+        ``peek_interactive``/``pop_interactive`` instead.
+        """
+        entries: List[Tuple[int, Request]] = []
+        for lane in self._ilanes.values():
+            entries.extend(lane)
+        entries.sort(key=lambda e: e[0])
+        return [r for _, r in entries]
 
     @property
     def batch(self) -> List[Request]:
-        """Snapshot of queued batch requests, earliest deadline first.
-
-        O(n log n) — for control-loop consumers prefer passing the queue
-        itself (incremental grouping) or ``iter_batch`` over this.
+        """Snapshot of queued batch requests, resume lanes first, then
+        earliest deadline first. O(n log n) — control-loop consumers
+        prefer passing the queue itself (incremental grouping) or
+        ``iter_batch``.
         """
-        out = sorted(self._batch_heap)
-        return list(self._resume) + [e[3] for e in out]
+        out: List[Request] = []
+        for res in self._bresumes.values():
+            out.extend(res)
+        entries: List[Tuple[float, float, int, Request]] = []
+        for h in self._bheaps.values():
+            entries.extend(h)
+        entries.sort()
+        out.extend(e[3] for e in entries)
+        return out
 
     # ------------------------------------------------------------ listeners
-    def attach_batch_listener(self, listener) -> None:
+    def attach_batch_listener(self, listener,
+                              model: Optional[str] = None) -> None:
         """Register an ``on_add(req)`` / ``on_remove(req)`` observer of the
-        batch side; current contents are replayed as adds on attach."""
-        self._listeners.append(listener)
-        for req in self.iter_batch():
+        batch side — all models, or one model's lane when ``model`` is
+        given; current (matching) contents are replayed as adds."""
+        self._listeners.append((listener, model))
+        for req in self.iter_batch(model):
             listener.on_add(req)
 
     def _notify_add(self, req: Request) -> None:
-        for l in self._listeners:
-            l.on_add(req)
+        for listener, model in self._listeners:
+            if model is None or req.model == model:
+                listener.on_add(req)
 
     def _notify_remove(self, req: Request) -> None:
-        for l in self._listeners:
-            l.on_remove(req)
+        for listener, model in self._listeners:
+            if model is None or req.model == model:
+                listener.on_remove(req)
 
     # ------------------------------------------------------------ sizes
     @property
     def n_interactive(self) -> int:
-        return len(self.interactive)
+        return self._icount
 
     @property
     def n_batch(self) -> int:
-        return len(self._batch_heap) + len(self._resume)
+        return self._bcount
 
     def __len__(self) -> int:
-        return self.n_interactive + self.n_batch
+        return self._icount + self._bcount

@@ -34,9 +34,11 @@ class RealInstance:
                  max_slots: int = 6, max_len: int = 128,
                  local_autoscaler: Optional[LocalAutoscaler] = None,
                  static_batch: Optional[int] = None,
-                 load_time: float = 0.0, params=None, seed: int = 0):
+                 load_time: float = 0.0, params=None, seed: int = 0,
+                 model: str = "llama-8b"):
         self.id = next(_inst_ids)
         self.cfg = cfg
+        self.model = model           # served model (multi-model routing key)
         self.itype = itype
         self.state = InstanceState.LOADING
         self.ready_time = now + load_time
@@ -103,6 +105,8 @@ class RealInstance:
     def can_admit(self, req: Request) -> bool:
         if not self.active or self.n_running >= self.max_batch_size:
             return False
+        if req.model != self.model:
+            return False            # never serve a wrong-model request
         return self.engine._free_slot() is not None
 
     def admit(self, req: Request, now: float) -> None:
@@ -178,6 +182,13 @@ class RealCluster:
     def by_type(self, itype: InstanceType) -> List[RealInstance]:
         return [i for i in self.instances if i.itype == itype]
 
+    def by_model(self, model: str, itype: InstanceType) -> List[RealInstance]:
+        return [i for i in self.instances
+                if i.itype == itype and i.model == model]
+
+    def instances_of(self, model: str) -> List[RealInstance]:
+        return [i for i in self.instances if i.model == model]
+
     def active_instances(self) -> List[RealInstance]:
         return [i for i in self.instances if i.active]
 
@@ -191,7 +202,8 @@ class RealCluster:
         inst = RealInstance(self.cfg, itype, now, max_slots=self.max_slots,
                             max_len=self.max_len,
                             load_time=self.load_time,
-                            params=self._shared_params, **inst_kw)
+                            params=self._shared_params, model=model,
+                            **inst_kw)
         self.instances.append(inst)
         self.scale_ups += 1
         self.peak_chips = max(self.peak_chips, self.used_chips())

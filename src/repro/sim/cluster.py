@@ -81,6 +81,7 @@ class SimInstance:
                  load_time: Optional[float] = None):
         self.id = next(_inst_counter)
         self.perf = perf
+        self.model = perf.model_name
         self.itype = itype
         self.state = InstanceState.LOADING
         self.active = False          # mirrors state (hot-path flag)
@@ -177,6 +178,8 @@ class SimInstance:
     def can_admit(self, req: Request) -> bool:
         if not self.active or self.n_running >= self.max_batch_size:
             return False
+        if req.model != self.model:
+            return False            # never serve a wrong-model request
         cap = self.perf.kv_capacity_tokens()
         if math.isfinite(cap):
             # hard admission wall well past the soft preemption inflection
@@ -475,11 +478,16 @@ class SimCluster:
         self.instances: List[SimInstance] = []
         self.scale_ups = 0
         self.scale_downs = 0
+        self.failures = 0            # crash-injected removals (not scaling)
         self.chip_seconds = 0.0
         self.peak_chips = 0
         self._used_chips = 0         # maintained by provision/retire
         self._pools: Dict[InstanceType, List[SimInstance]] = \
             {t: [] for t in InstanceType}
+        # (model, itype) -> live pool; the multi-model routing/control path
+        # (one Algorithm-2 loop per model) reads these instead of filtering
+        self._model_pools: Dict[Tuple[str, InstanceType],
+                                List[SimInstance]] = {}
         self.total_running = 0       # running seqs cluster-wide (O(1) idle check)
         # --- event-core state (unused on the fixed-tick path) ---
         self.event_mode = False
@@ -501,6 +509,22 @@ class SimCluster:
         """Live (maintained) pool list — treat as read-only; copy before
         retiring members while iterating."""
         return self._pools[itype]
+
+    def by_model(self, model: str, itype: InstanceType) -> List[SimInstance]:
+        """Live (model, type) pool — same read-only contract as by_type."""
+        return self._model_pools.setdefault((model, itype), [])
+
+    def instances_of(self, model: str) -> List[SimInstance]:
+        """All live instances serving ``model`` (every type)."""
+        return [i for t in InstanceType
+                for i in self._model_pools.get((model, t), ())]
+
+    def models_present(self) -> List[str]:
+        """Distinct models with at least one live instance."""
+        seen: Dict[str, None] = {}
+        for inst in self.instances:
+            seen.setdefault(inst.model)
+        return list(seen)
 
     def active_instances(self) -> List[SimInstance]:
         return [i for i in self.instances if i.active]
@@ -527,6 +551,7 @@ class SimCluster:
         inst._cluster = self
         self.instances.append(inst)
         self._pools[itype].append(inst)
+        self._model_pools.setdefault((model, itype), []).append(inst)
         self.scale_ups += 1
         self._used_chips += perf.chips
         self.peak_chips = max(self.peak_chips, self._used_chips)
@@ -534,6 +559,21 @@ class SimCluster:
 
     def retire(self, inst: SimInstance) -> List[Request]:
         """Remove an instance; returns displaced requests for requeueing."""
+        displaced = self._remove_instance(inst)
+        self.scale_downs += 1
+        return displaced
+
+    def fail_instance(self, inst: SimInstance) -> List[Request]:
+        """Crash an instance (failure injection): like ``retire`` but the
+        removal is counted as a failure, not an autoscaling action, so the
+        hysteresis metric stays a controller property. In-flight requests
+        lose their on-device KV (``saved_kv=None`` — they must re-prefill
+        elsewhere) and are returned for requeueing."""
+        displaced = self._remove_instance(inst)
+        self.failures += 1
+        return displaced
+
+    def _remove_instance(self, inst: SimInstance) -> List[Request]:
         if self.event_mode:
             inst.advance(self.now)   # settle fluid state first
             self.dirty.add(inst)     # pending finishes still get drained
@@ -559,7 +599,7 @@ class SimCluster:
         inst.active = False
         self.instances.remove(inst)
         self._pools[inst.itype].remove(inst)
-        self.scale_downs += 1
+        self._model_pools[(inst.model, inst.itype)].remove(inst)
         self._used_chips -= inst.perf.chips
         return displaced
 

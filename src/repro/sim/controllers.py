@@ -3,19 +3,29 @@
 A controller's ``control(cluster, queue, now)`` runs every control interval
 and turns backpressure into provision/retire actions; ``route`` places
 queued requests onto instances per the paper's preferential routing.
+
+Multi-model fleets: ``ChironController(models=[...])`` runs one full
+hierarchy per model — a per-model IBP/Theta interactive scaler and a
+per-model Algorithm-2 batch scaler whose request groups are maintained off
+that model's queue lane — while every provision draws from the single
+shared chip budget (``SimCluster.max_chips``). Routing is model-keyed end
+to end: a request is only ever offered to instances of its own model
+(``SimInstance.can_admit`` enforces the invariant as a backstop). Models
+seen in the arrival stream but not configured are registered on the fly.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
 
 from repro.core.baselines import LlumnixAutoscaler
 from repro.core.global_autoscaler import BatchAutoscaler, InteractiveAutoscaler
 from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.waiting_time import WaitingTimeEstimator
 from repro.serving.global_queue import GlobalQueue
-from repro.serving.request import Request, RequestType
+from repro.serving.request import Request
 from repro.sim.cluster import InstanceType, SimCluster, SimInstance
 
 
@@ -33,7 +43,8 @@ def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
 
 class BaseController:
     """Shared routing: interactive -> interactive then mixed (preempting
-    batch); batch -> batch instances then spare mixed capacity.
+    batch); batch -> batch instances then spare mixed capacity; every
+    lookup stays inside the request's own model pools.
 
     ``route`` is the full preferential pass (every fixed tick / control
     tick); the event core additionally calls ``route_interactive`` on every
@@ -47,55 +58,64 @@ class BaseController:
         self.route_interactive(cluster, queue, now)
         if not queue.n_batch:
             return
-        pools = [cluster.by_type(InstanceType.BATCH)]
-        if self.serves_batch_on_mixed:
-            pools.append(cluster.by_type(InstanceType.MIXED))
-        for pool in pools:
-            self.backfill(pool, queue, now)
+        for model in queue.batch_models():
+            pools = [cluster.by_model(model, InstanceType.BATCH)]
+            if self.serves_batch_on_mixed:
+                pools.append(cluster.by_model(model, InstanceType.MIXED))
+            for pool in pools:
+                self.backfill(pool, queue, now)
 
     def route_interactive(self, cluster: SimCluster, queue: GlobalQueue,
                           now: float) -> None:
-        # ---- interactive: zero-queuing
-        while queue.n_interactive:
-            req = queue.interactive[0]
+        if not queue.n_interactive:     # hot path: most events route nothing
+            return
+        # ---- interactive: zero-queuing, one pass per model lane
+        for model in queue.interactive_models():
+            self._route_interactive_model(cluster, queue, model, now)
+
+    def _route_interactive_model(self, cluster: SimCluster,
+                                 queue: GlobalQueue, model: str,
+                                 now: float) -> None:
+        while queue.n_interactive_for(model):
+            req = queue.peek_interactive(model)
             placed = False
-            for pool in (cluster.by_type(InstanceType.INTERACTIVE),
-                         cluster.by_type(InstanceType.MIXED)):
+            for pool in (cluster.by_model(model, InstanceType.INTERACTIVE),
+                         cluster.by_model(model, InstanceType.MIXED)):
                 inst = _best_fit([i for i in pool if i.can_admit(req)])
                 if inst is not None:
-                    inst.admit(queue.pop_interactive(), now)
+                    inst.admit(queue.pop_interactive(model), now)
                     placed = True
                     break
             if not placed:
-                # preempt a batch request on a mixed instance (the O(1)
-                # batch-count guard keeps a saturated all-interactive
-                # cluster from rescanning every batch on every pass)
-                for inst in cluster.by_type(InstanceType.MIXED):
+                # preempt a batch request on a same-model mixed instance
+                # (the O(1) batch-count guard keeps a saturated
+                # all-interactive cluster from rescanning every batch)
+                for inst in cluster.by_model(model, InstanceType.MIXED):
                     if not inst.active or inst.n_running_batch() == 0:
                         continue
                     victim = inst.evict_one_batch(now)
                     if victim is not None:
                         queue.requeue(victim)
-                        inst.admit(queue.pop_interactive(), now)
+                        inst.admit(queue.pop_interactive(model), now)
                         placed = True
                         break
             if not placed:
-                break   # cluster saturated; request waits (SLO at risk)
+                break   # this model's pools saturated; request waits
 
     def backfill(self, insts, queue: GlobalQueue, now: float) -> None:
-        """Fill spare capacity on ``insts`` from the batch queue. The queue
-        pops in service order (resume lane, then earliest deadline / FCFS)
-        at O(log n) per admission — no per-pass sort."""
+        """Fill spare capacity on ``insts`` from their models' batch lanes.
+        The queue pops in service order (resume lane, then earliest
+        deadline / FCFS) at O(log n) per admission — no per-pass sort."""
         for inst in insts:
             if inst.itype == InstanceType.INTERACTIVE:
                 continue             # interactive pool never serves batch
             # cheap slot-full rejection before touching the queue
             while inst.active and inst.n_running < inst.max_batch_size \
-                    and queue.n_batch:
-                req = queue.peek_batch()
+                    and queue.n_batch_for(inst.model):
+                req = queue.peek_batch(inst.model)
                 if not inst.can_admit(req):
                     break
-                inst.admit(queue.pop_batch_fcfs(), now)
+                inst.admit(queue.pop_batch_fcfs(inst.model), now)
 
     def control(self, cluster: SimCluster, queue: GlobalQueue,
                 now: float) -> None:
@@ -104,8 +124,10 @@ class BaseController:
 
 @dataclass
 class ChironController(BaseController):
-    """The paper's hierarchical autoscaler (local + global)."""
+    """The paper's hierarchical autoscaler (local + global), replicated
+    per model when ``models`` lists a fleet."""
     model: str = "llama-8b"
+    models: Optional[Sequence[str]] = None  # multi-model fleet; None = [model]
     theta: float = 1.0 / 3.0
     delta: float = 0.1
     itl_slo_interactive: float = 0.2
@@ -123,15 +145,46 @@ class ChironController(BaseController):
     # observed arrival process every `theta_refresh` seconds.
     auto_theta: bool = False
     theta_refresh: float = 120.0
+    # arrival history kept per model for Theta re-estimation: a rolling
+    # window (recent spikes are what Theta hedges against) that also
+    # bounds memory on million-request replays
+    theta_history: int = 4096
 
     def __post_init__(self):
-        self.interactive_scaler = InteractiveAutoscaler(
-            self.theta, self.delta, self.min_instances)
-        self._batch_scaler: Optional[BatchAutoscaler] = None
-        self._arrivals: List[float] = []
+        self.model_list: List[str] = list(self.models) if self.models \
+            else [self.model]
+        if self.model not in self.model_list:
+            # model= was left at its default (or named a model outside the
+            # fleet): the fleet's first entry becomes the primary
+            self.model = self.model_list[0]
+        self._configured = frozenset(self.model_list)
+        self.interactive_scalers: Dict[str, InteractiveAutoscaler] = {}
+        self._batch_scalers: Dict[str, Optional[BatchAutoscaler]] = {}
+        self._arrivals: Dict[str, List[float]] = {}
+        for m in self.model_list:
+            self._register_model(m)
         self._next_theta_update = self.theta_refresh
 
     # ------------------------------------------------------------ helpers
+    @property
+    def interactive_scaler(self) -> InteractiveAutoscaler:
+        """Legacy single-model accessor (the primary model)."""
+        return self.interactive_scalers[self.model]
+
+    def _register_model(self, model: str) -> None:
+        # discovered (unconfigured) models get no instance floor: once
+        # their traffic drains, their fleet may drop to zero instances
+        floor = self.min_instances if model in self._configured else 0
+        self.interactive_scalers[model] = InteractiveAutoscaler(
+            self.theta, self.delta, floor)
+        self._batch_scalers[model] = None
+        self._arrivals[model] = []
+
+    def _ensure_model(self, model: str) -> None:
+        if model not in self.interactive_scalers:
+            self.model_list.append(model)
+            self._register_model(model)
+
     def _mk_local(self, slo: float) -> Optional[LocalAutoscaler]:
         if not self.local_enabled:
             return None
@@ -139,113 +192,139 @@ class ChironController(BaseController):
                                max_batch=self.max_batch)
 
     def _provision(self, cluster: SimCluster, itype: InstanceType,
-                   now: float) -> Optional[SimInstance]:
+                   now: float, model: Optional[str] = None) -> Optional[SimInstance]:
         slo = self.itl_slo_batch if itype == InstanceType.BATCH \
             else self.itl_slo_interactive
         return cluster.provision(
-            self.model, itype, now,
+            model or self.model, itype, now,
             local_autoscaler=self._mk_local(slo),
             static_batch=None if self.local_enabled else self.static_batch)
 
-    def batch_instance_throughput(self, cluster: SimCluster) -> float:
-        perf = cluster.perf_factory(self.model)
+    def batch_instance_throughput(self, cluster: SimCluster,
+                                  model: Optional[str] = None) -> float:
+        perf = cluster.perf_factory(model or self.model)
         b = perf.optimal_batch(self.itl_slo_batch, mean_ctx=512.0)
         return perf.throughput(b, mean_ctx=512.0)
 
     # ------------------------------------------------------------ control
     def observe_arrival(self, req: Request, now: float) -> None:
+        self._ensure_model(req.model)
         if self.auto_theta and req.is_interactive:
-            self._arrivals.append(now)
+            self._arrivals[req.model].append(now)
 
     def _refresh_theta(self, now: float) -> None:
         if not self.auto_theta or now < self._next_theta_update:
             return
         self._next_theta_update = now + self.theta_refresh
-        if len(self._arrivals) < 20:
-            return
         from repro.sim.workload import arrival_spikes
-
-        class _R:  # arrival_spikes wants .arrival_time
-            __slots__ = ("arrival_time",)
-
-            def __init__(self, t):
-                self.arrival_time = t
-        spikes = arrival_spikes([_R(t) for t in self._arrivals], 30.0)
-        if spikes:
-            import numpy as np
-            tail = float(np.percentile(spikes, 99.0))
-            self.interactive_scaler.theta = 1.0 / max(tail, 1.0)
+        for model, arrivals in self._arrivals.items():
+            if len(arrivals) > self.theta_history:   # rolling window
+                del arrivals[:-self.theta_history]
+            if len(arrivals) < 20:
+                continue
+            spikes = arrival_spikes(np.asarray(arrivals), 30.0)
+            if spikes.size:
+                tail = float(np.percentile(spikes, 99.0))
+                self.interactive_scalers[model].theta = 1.0 / max(tail, 1.0)
 
     def control(self, cluster: SimCluster, queue: GlobalQueue,
                 now: float) -> None:
-        # 0. bootstrap + optional Theta re-estimation from arrival history
+        # 0. bootstrap + optional Theta re-estimation from arrival history.
+        # Configured models always keep a foothold; models discovered from
+        # the arrival stream are provisioned on demand only — a replayed
+        # trace with many transient deployments must not pin a chip per
+        # deployment forever.
         self._refresh_theta(now)
-        if not cluster.instances:
-            self._provision(cluster, InstanceType.MIXED, now)
+        for m in self.model_list:
+            if cluster.instances_of(m):
+                continue
+            if m in self._configured or queue.n_interactive_for(m) \
+                    or queue.n_batch_for(m):
+                self._provision(cluster, InstanceType.MIXED, now, m)
 
         # 1. local autoscaling on every instance
         if self.local_enabled:
             for inst in cluster.active_instances():
                 inst.update_local_autoscaler()
 
-        # 2. interactive/mixed scaling on IBP
+        # 2./3. one global loop per model, all sharing the chip budget.
+        # Drained models (no instances, no queued work — only possible for
+        # discovered ones after the bootstrap above) cost two O(1) checks,
+        # so per-tick work tracks the active fleet, not every model ever
+        # seen in a long replay.
         if self.global_enabled:
-            inter = cluster.by_type(InstanceType.INTERACTIVE)
-            mixed = cluster.by_type(InstanceType.MIXED)
-            n_running = sum(1 for i in inter + mixed if i.runs_interactive())
-            dec = self.interactive_scaler.update(n_running, len(inter),
-                                                 len(mixed))
-            if dec.delta_instances > 0:
-                for _ in range(dec.delta_instances):
-                    if self._provision(cluster, InstanceType.MIXED, now) is None:
-                        break
-            elif dec.delta_instances < 0:
-                idle_mixed = [i for i in cluster.by_type(InstanceType.MIXED)
-                              if i.active and not i.runs_interactive()]
-                idle_mixed.sort(key=lambda i: i.n_running)
-                for inst in idle_mixed[:-dec.delta_instances]:
-                    if len(cluster.by_type(InstanceType.MIXED)) + \
-                            len(cluster.by_type(InstanceType.INTERACTIVE)) \
-                            <= self.min_instances:
-                        break
-                    for r in cluster.retire(inst):
-                        queue.requeue(r)
+            for m in self.model_list:
+                if not cluster.instances_of(m) \
+                        and not queue.n_interactive_for(m) \
+                        and not queue.n_batch_for(m):
+                    continue
+                self._control_model(cluster, queue, m, now)
 
-            # 3. batch scaling on BBP (Algorithm 2)
-            if self._batch_scaler is None:
-                self._batch_scaler = BatchAutoscaler(
-                    self.estimator, self.batch_instance_throughput(cluster),
-                    group_k=self.group_k)
-            spare = sum(i.spare_throughput()
-                        for i in cluster.by_type(InstanceType.MIXED)
-                        if i.active)
-            n_batch_inst = len(cluster.by_type(InstanceType.BATCH))
-            n_active_batch = sum(i.n_running_batch()
-                                 for i in cluster.instances)
-            # pass the queue itself: request groups are maintained
-            # incrementally off its add/remove stream, not re-clustered
-            dec2 = self._batch_scaler.update(
-                queue, now,
-                n_batch_instances=n_batch_inst,
-                spare_mixed_throughput=spare,
-                n_active_batch_requests=n_active_batch)
-            if dec2.retire_all:
-                for inst in list(cluster.by_type(InstanceType.BATCH)):
-                    for r in cluster.retire(inst):
-                        queue.requeue(r)
-            elif dec2.remove_instances > 0:
-                # Algorithm 2 minimality: surrender excess batch instances
-                # while BBP stays 0 — idle/least-loaded (and still-loading)
-                # instances first, displaced requests re-enter the queue
-                victims = sorted(cluster.by_type(InstanceType.BATCH),
-                                 key=lambda i: (i.active, i.n_running))
-                for inst in victims[:dec2.remove_instances]:
-                    for r in cluster.retire(inst):
-                        queue.requeue(r)
-            else:
-                for _ in range(dec2.add_instances):
-                    if self._provision(cluster, InstanceType.BATCH, now) is None:
-                        break
+    def _control_model(self, cluster: SimCluster, queue: GlobalQueue,
+                       model: str, now: float) -> None:
+        # 2. interactive/mixed scaling on this model's IBP
+        inter = cluster.by_model(model, InstanceType.INTERACTIVE)
+        mixed = cluster.by_model(model, InstanceType.MIXED)
+        n_running = sum(1 for i in inter + mixed if i.runs_interactive())
+        dec = self.interactive_scalers[model].update(n_running, len(inter),
+                                                     len(mixed))
+        if dec.delta_instances > 0:
+            for _ in range(dec.delta_instances):
+                if self._provision(cluster, InstanceType.MIXED, now,
+                                   model) is None:
+                    break               # shared chip budget exhausted
+        elif dec.delta_instances < 0:
+            floor = self.min_instances if model in self._configured else 0
+            idle_mixed = [i for i in mixed
+                          if i.active and not i.runs_interactive()]
+            idle_mixed.sort(key=lambda i: i.n_running)
+            for inst in idle_mixed[:-dec.delta_instances]:
+                if len(cluster.by_model(model, InstanceType.MIXED)) + \
+                        len(cluster.by_model(model,
+                                             InstanceType.INTERACTIVE)) \
+                        <= floor:
+                    break
+                for r in cluster.retire(inst):
+                    queue.requeue(r)
+
+        # 3. batch scaling on this model's BBP (Algorithm 2)
+        scaler = self._batch_scalers[model]
+        if scaler is None:
+            scaler = self._batch_scalers[model] = BatchAutoscaler(
+                self.estimator,
+                self.batch_instance_throughput(cluster, model),
+                group_k=self.group_k, model=model)
+        spare = sum(i.spare_throughput()
+                    for i in cluster.by_model(model, InstanceType.MIXED)
+                    if i.active)
+        n_batch_inst = len(cluster.by_model(model, InstanceType.BATCH))
+        n_active_batch = sum(i.n_running_batch()
+                             for i in cluster.instances_of(model))
+        # pass the queue itself: request groups are maintained
+        # incrementally off its per-model add/remove stream
+        dec2 = scaler.update(
+            queue, now,
+            n_batch_instances=n_batch_inst,
+            spare_mixed_throughput=spare,
+            n_active_batch_requests=n_active_batch)
+        if dec2.retire_all:
+            for inst in list(cluster.by_model(model, InstanceType.BATCH)):
+                for r in cluster.retire(inst):
+                    queue.requeue(r)
+        elif dec2.remove_instances > 0:
+            # Algorithm 2 minimality: surrender excess batch instances
+            # while BBP stays 0 — idle/least-loaded (and still-loading)
+            # instances first, displaced requests re-enter the queue
+            victims = sorted(cluster.by_model(model, InstanceType.BATCH),
+                             key=lambda i: (i.active, i.n_running))
+            for inst in victims[:dec2.remove_instances]:
+                for r in cluster.retire(inst):
+                    queue.requeue(r)
+        else:
+            for _ in range(dec2.add_instances):
+                if self._provision(cluster, InstanceType.BATCH, now,
+                                   model) is None:
+                    break               # shared chip budget exhausted
 
     def observe_completion(self, req: Request) -> None:
         self.estimator.output_model.observe(req.output_len)
@@ -253,7 +332,8 @@ class ChironController(BaseController):
 
 @dataclass
 class LlumnixController(BaseController):
-    """Utilization-band autoscaler; SLO-unaware, no queue deferral."""
+    """Utilization-band autoscaler; SLO-unaware, no queue deferral.
+    Single-model baseline (the paper's comparison arm)."""
     model: str = "llama-8b"
     low: float = 0.3
     high: float = 0.8

@@ -1,7 +1,7 @@
 """Experiment metrics: SLO attainment, throughput, GPU efficiency, hysteresis."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
 from repro.serving.request import Request, RequestState, RequestType
@@ -28,12 +28,32 @@ class RunResult:
     scale_ups: int
     scale_downs: int
     duration: float
+    failures: int = 0               # injected instance crashes
+    n_events: int = 0               # event-core loop events (0: fixed tick)
 
     # ------------------------------------------------------------ SLOs
-    def _done(self, rtype=None) -> List[Request]:
-        rs = [r for r in self.requests if rtype is None
-              or r.request_type == rtype]
+    def _done(self, rtype=None, model=None) -> List[Request]:
+        rs = [r for r in self.requests
+              if (rtype is None or r.request_type == rtype)
+              and (model is None or r.model == model)]
         return rs
+
+    def models(self) -> List[str]:
+        """Distinct request models in first-appearance order."""
+        seen: Dict[str, None] = {}
+        for r in self.requests:
+            seen.setdefault(r.model)
+        return list(seen)
+
+    def slo_by_model(self) -> Dict[str, float]:
+        """Per-model SLO attainment (one pass over the requests)."""
+        met: Dict[str, int] = {}
+        tot: Dict[str, int] = {}
+        for r in self.requests:
+            tot[r.model] = tot.get(r.model, 0) + 1
+            if r.slo_met():
+                met[r.model] = met.get(r.model, 0) + 1
+        return {m: met.get(m, 0) / n for m, n in tot.items()}
 
     def slo_attainment(self, rtype=None) -> float:
         rs = self._done(rtype)
@@ -106,7 +126,7 @@ class RunResult:
         return last
 
     def summary(self) -> Dict[str, float]:
-        return {
+        out = {
             "slo_attainment": self.slo_attainment(),
             "slo_interactive": self.slo_attainment(RequestType.INTERACTIVE),
             "slo_batch": self.slo_attainment(RequestType.BATCH),
@@ -118,6 +138,13 @@ class RunResult:
             "hysteresis": self.hysteresis,
             "mean_itl": self.mean_itl(),
         }
+        by_model = self.slo_by_model()
+        if len(by_model) > 1:           # multi-model fleet: per-model SLOs
+            for m, v in by_model.items():
+                out[f"slo_model:{m}"] = v
+        if self.failures:
+            out["failures"] = self.failures
+        return out
 
 
 def decisions_match(a: "RunResult", b: "RunResult", *,

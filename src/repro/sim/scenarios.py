@@ -1,34 +1,44 @@
 """Scenario library: named workload generators beyond the paper's traces.
 
-Each scenario builds a request list exercising a distinct control-plane
-regime — diurnal capacity tracking, spike absorption (Theta), multi-tenant
-SLO mixes, heavy-tail output lengths, and batch-backlog drains — in the
-trace-driven multi-SLO evaluation style of SLOs-Serve (arXiv:2504.08784)
-and the forecast/diurnal workloads of SageServe (arXiv:2502.14617).
+Each scenario builds a columnar :class:`~repro.sim.workload.Trace`
+exercising a distinct control-plane regime — diurnal capacity tracking,
+spike absorption (Theta), multi-tenant SLO mixes, heavy-tail output
+lengths, batch-backlog drains, multi-model fleets, trace replay, and
+instance-failure injection — in the trace-driven multi-SLO evaluation
+style of SLOs-Serve (arXiv:2504.08784) and the forecast/diurnal workloads
+of SageServe (arXiv:2502.14617). Generation is fully vectorized (NumPy
+column fills, no per-request Python loop), so million-request scenarios
+build in well under a second.
 
 Scenarios register into ``SCENARIOS`` and are consumed by
 ``benchmarks/scenario_sweep.py`` (and ``benchmarks/run.py``)::
 
-    from repro.sim.scenarios import SCENARIOS, build
-    reqs, sim_kw = build("diurnal", n_requests=5000, seed=0)
+    from repro.sim.scenarios import SCENARIOS, build, build_trace
+    reqs, sim_kw = build("diurnal", n_requests=5000, seed=0)      # Requests
+    trace, sim_kw = build_trace("trace_replay", n_requests=10**6) # columnar
 
 Every builder takes ``(n_requests, seed, **overrides)`` and returns
-``(requests, sim_kwargs)`` where ``sim_kwargs`` carries a suggested
-``max_time`` for the run.
+``(trace, sim_kwargs)``; ``build`` materializes the trace into ``Request``
+objects for legacy callers while ``build_trace`` hands the columnar form
+straight to ``simulate_events`` (lazy chunked materialization).
+``sim_kwargs`` carries a suggested ``max_time`` and, where relevant,
+a ``failures`` :class:`~repro.sim.simulator.FailurePlan` to pass to
+``simulate_events`` and a ``models`` tuple for configuring a multi-model
+controller (``ChironController(models=...)``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.request import (BATCH_ITL_SLO, Request, RequestType, SLO,
-                                   make_batch, make_interactive)
-from repro.sim.workload import MAX_TOKENS, _token_lengths
+from repro.serving.request import BATCH_ITL_SLO, Request
+from repro.sim.workload import (MAX_TOKENS, Trace, _token_lengths,
+                                make_trace)
 
-SimKwargs = Dict[str, float]
-Builder = Callable[..., Tuple[List[Request], SimKwargs]]
+SimKwargs = Dict[str, object]
+Builder = Callable[..., Tuple[Trace, SimKwargs]]
 
 
 @dataclass
@@ -49,27 +59,38 @@ def register(name: str, description: str, default_n: int = 3000):
     return deco
 
 
-def build(name: str, n_requests: int = 0, seed: int = 0,
-          **overrides) -> Tuple[List[Request], SimKwargs]:
+def build_trace(name: str, n_requests: int = 0, seed: int = 0,
+                **overrides) -> Tuple[Trace, SimKwargs]:
+    """Columnar form — feed the Trace straight to ``simulate_events``."""
     sc = SCENARIOS[name]
     return sc.build(n_requests or sc.default_n, seed, **overrides)
+
+
+def build(name: str, n_requests: int = 0, seed: int = 0,
+          **overrides) -> Tuple[List[Request], SimKwargs]:
+    """Legacy form: materialized ``Request`` objects."""
+    trace, kw = build_trace(name, n_requests, seed, **overrides)
+    return trace.materialize(), kw
 
 
 def _nonhomogeneous_arrivals(rng: np.random.Generator, n: int,
                              rate_fn: Callable[[np.ndarray], np.ndarray],
                              rate_max: float, horizon: float) -> np.ndarray:
     """Thinning sampler for a non-homogeneous Poisson process; returns the
-    first ``n`` accepted arrival times (wraps the horizon if needed)."""
-    out: List[float] = []
+    first ``n`` accepted arrival times (wraps the horizon if needed).
+    Candidates are drawn and thinned in vectorized batches."""
+    chunks: List[np.ndarray] = []
+    got = 0
     t = 0.0
-    while len(out) < n:
+    while got < n:
         # draw candidate gaps in bulk at the envelope rate
         gaps = rng.exponential(1.0 / rate_max, size=max(n, 1024))
         ts = t + np.cumsum(gaps)
-        keep = rng.random(ts.size) < rate_fn(ts % horizon) / rate_max
-        out.extend(ts[keep].tolist())
+        keep = ts[rng.random(ts.size) < rate_fn(ts % horizon) / rate_max]
+        chunks.append(keep)
+        got += keep.size
         t = float(ts[-1])
-    return np.asarray(out[:n])
+    return np.concatenate(chunks)[:n]
 
 
 # --------------------------------------------------------------- scenarios
@@ -79,7 +100,7 @@ def _nonhomogeneous_arrivals(rng: np.random.Generator, n: int,
 def diurnal(n_requests: int, seed: int = 0, *, period: float = 1800.0,
             base_rate: float = 6.0, amplitude: float = 0.85,
             interactive_frac: float = 0.85,
-            batch_ttft_slo: float = 900.0) -> Tuple[List[Request], SimKwargs]:
+            batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
     rng = np.random.default_rng(seed)
     rate_max = base_rate * (1 + amplitude)
 
@@ -89,13 +110,8 @@ def diurnal(n_requests: int, seed: int = 0, *, period: float = 1800.0,
     times = _nonhomogeneous_arrivals(rng, n_requests, rate, rate_max, period)
     ins, outs = _token_lengths(rng, n_requests)
     cls = rng.random(n_requests) < interactive_frac
-    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
-            if cls[i] else
-            make_batch(int(ins[i]), int(outs[i]), float(times[i]),
-                       ttft_slo=batch_ttft_slo)
-            for i in range(n_requests)]
-    reqs.sort(key=lambda r: r.arrival_time)
-    return reqs, {"max_time": float(times[-1]) + 600.0}
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo)
+    return trace, {"max_time": trace.duration + 600.0}
 
 
 @register("burst_spikes",
@@ -105,29 +121,27 @@ def diurnal(n_requests: int, seed: int = 0, *, period: float = 1800.0,
 def burst_spikes(n_requests: int, seed: int = 0, *, n_bursts: int = 8,
                  burst_rate: float = 120.0, base_rate: float = 0.5,
                  gap: float = 300.0,
-                 interactive_frac: float = 1.0) -> Tuple[List[Request], SimKwargs]:
+                 interactive_frac: float = 1.0) -> Tuple[Trace, SimKwargs]:
     rng = np.random.default_rng(seed)
     n_bursts = max(min(n_bursts, n_requests), 1)   # tiny-n guard
     per_burst = max(n_requests // n_bursts, 1)
-    times: List[float] = []
-    t0 = 30.0
-    for _ in range(n_bursts):
-        gaps = rng.exponential(1.0 / burst_rate, per_burst)
-        ts = t0 + np.cumsum(gaps)
-        times.extend(ts.tolist())
-        t0 = float(ts[-1]) + gap
+    # each burst is a Poisson run; bursts are separated by ``gap`` of
+    # silence — cumulative sum over per-burst gap offsets, all vectorized
+    gaps = rng.exponential(1.0 / burst_rate, (n_bursts, per_burst))
+    within = np.cumsum(gaps, axis=1)
+    starts = 30.0 + np.concatenate(
+        ([0.0], np.cumsum(within[:-1, -1] + gap)))
+    times = (starts[:, None] + within).ravel()
+    t_end = float(times[-1])
     # sparse background traffic between bursts
     n_bg = n_requests - per_burst * n_bursts
     if n_bg > 0:
-        times.extend(rng.uniform(0.0, t0, n_bg).tolist())
-    times = np.sort(np.asarray(times))
-    ins, outs = _token_lengths(rng, len(times))
-    cls = rng.random(len(times)) < interactive_frac
-    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
-            if cls[i] else
-            make_batch(int(ins[i]), int(outs[i]), float(times[i]))
-            for i in range(len(times))]
-    return reqs, {"max_time": float(times[-1]) + gap + 300.0}
+        times = np.concatenate([times, rng.uniform(0.0, t_end + gap, n_bg)])
+    n = times.size
+    ins, outs = _token_lengths(rng, n)
+    cls = rng.random(n) < interactive_frac
+    trace = make_trace(times, ins, outs, cls)
+    return trace, {"max_time": trace.duration + gap + 300.0}
 
 
 @register("multi_tenant_slo",
@@ -135,27 +149,24 @@ def burst_spikes(n_requests: int, seed: int = 0, *, n_bursts: int = 8,
           "cluster: premium/standard interactive + urgent/overnight batch",
           default_n=4000)
 def multi_tenant_slo(n_requests: int, seed: int = 0, *,
-                     arrival_rate: float = 12.0) -> Tuple[List[Request], SimKwargs]:
+                     arrival_rate: float = 12.0) -> Tuple[Trace, SimKwargs]:
     rng = np.random.default_rng(seed)
-    # (weight, request_type, ttft_slo, itl_slo)
-    tenants = [
-        (0.35, RequestType.INTERACTIVE, 5.0, 0.1),     # premium chat
-        (0.35, RequestType.INTERACTIVE, 15.0, 0.3),    # standard chat
-        (0.15, RequestType.BATCH, 600.0, BATCH_ITL_SLO),   # urgent batch
-        (0.15, RequestType.BATCH, 3600.0, BATCH_ITL_SLO),  # overnight batch
-    ]
-    gaps = rng.exponential(1.0 / arrival_rate, n_requests)
-    times = np.cumsum(gaps)
+    # (weight, interactive?, ttft_slo, itl_slo)
+    tenants = np.array([
+        (0.35, 1, 5.0, 0.1),       # premium chat
+        (0.35, 1, 15.0, 0.3),      # standard chat
+        (0.15, 0, 600.0, BATCH_ITL_SLO),    # urgent batch
+        (0.15, 0, 3600.0, BATCH_ITL_SLO),   # overnight batch
+    ])
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
     ins, outs = _token_lengths(rng, n_requests)
-    weights = np.asarray([w for w, *_ in tenants])
     choice = rng.choice(len(tenants), size=n_requests,
-                        p=weights / weights.sum())
-    reqs = []
-    for i in range(n_requests):
-        _, rtype, ttft, itl = tenants[int(choice[i])]
-        reqs.append(Request(int(ins[i]), int(outs[i]), rtype,
-                            SLO(ttft, itl), float(times[i])))
-    return reqs, {"max_time": float(times[-1]) + 900.0}
+                        p=tenants[:, 0] / tenants[:, 0].sum())
+    trace = make_trace(times, ins, outs,
+                       tenants[choice, 1].astype(bool),
+                       ttft_slo=tenants[choice, 2],
+                       itl_slo=tenants[choice, 3])
+    return trace, {"max_time": trace.duration + 900.0}
 
 
 @register("heavy_tail",
@@ -164,20 +175,15 @@ def multi_tenant_slo(n_requests: int, seed: int = 0, *,
           default_n=2500)
 def heavy_tail(n_requests: int, seed: int = 0, *, arrival_rate: float = 8.0,
                pareto_shape: float = 1.2,
-               interactive_frac: float = 0.8) -> Tuple[List[Request], SimKwargs]:
+               interactive_frac: float = 0.8) -> Tuple[Trace, SimKwargs]:
     rng = np.random.default_rng(seed)
-    gaps = rng.exponential(1.0 / arrival_rate, n_requests)
-    times = np.cumsum(gaps)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
     ins, _ = _token_lengths(rng, n_requests)
     outs = np.clip((rng.pareto(pareto_shape, n_requests) + 1) * 48,
-                   4, 4 * MAX_TOKENS).astype(int)
+                   4, 4 * MAX_TOKENS).astype(np.int64)
     cls = rng.random(n_requests) < interactive_frac
-    reqs = [make_interactive(int(ins[i]), int(outs[i]), float(times[i]))
-            if cls[i] else
-            make_batch(int(ins[i]), int(outs[i]), float(times[i]),
-                       ttft_slo=1800.0)
-            for i in range(n_requests)]
-    return reqs, {"max_time": float(times[-1]) + 1800.0}
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=1800.0)
+    return trace, {"max_time": trace.duration + 1800.0}
 
 
 @register("backlog_drain",
@@ -186,17 +192,108 @@ def heavy_tail(n_requests: int, seed: int = 0, *, arrival_rate: float = 8.0,
           default_n=4000)
 def backlog_drain(n_requests: int, seed: int = 0, *,
                   backlog_frac: float = 0.8, arrival_rate: float = 10.0,
-                  batch_ttft_slo: float = 1200.0) -> Tuple[List[Request], SimKwargs]:
+                  batch_ttft_slo: float = 1200.0) -> Tuple[Trace, SimKwargs]:
     rng = np.random.default_rng(seed)
     n_backlog = int(n_requests * backlog_frac)
     n_live = n_requests - n_backlog
     ins_b, outs_b = _token_lengths(rng, n_backlog)
-    reqs = [make_batch(int(ins_b[i]), int(outs_b[i]), 0.0,
-                       ttft_slo=batch_ttft_slo) for i in range(n_backlog)]
-    gaps = rng.exponential(1.0 / arrival_rate, n_live)
-    times = np.cumsum(gaps)
+    backlog = make_trace(np.zeros(n_backlog), ins_b, outs_b,
+                         np.zeros(n_backlog, dtype=bool),
+                         batch_ttft_slo=batch_ttft_slo, sort=False)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_live))
     ins_l, outs_l = _token_lengths(rng, n_live)
-    reqs.extend(make_interactive(int(ins_l[i]), int(outs_l[i]),
-                                 float(times[i])) for i in range(n_live))
-    reqs.sort(key=lambda r: r.arrival_time)
-    return reqs, {"max_time": batch_ttft_slo + 1200.0}
+    live = make_trace(times, ins_l, outs_l, np.ones(n_live, dtype=bool),
+                      sort=False)
+    trace = Trace.concat([backlog, live]).sorted_by_arrival()
+    return trace, {"max_time": batch_ttft_slo + 1200.0}
+
+
+@register("multi_model_fleet",
+          "two-model fleet (8B chat + 70B premium) sharing one chip "
+          "budget: per-model IBP/Algorithm-2 loops and model-keyed routing",
+          default_n=4000)
+def multi_model_fleet(n_requests: int, seed: int = 0, *,
+                      models: Sequence[str] = ("llama-8b", "llama-70b"),
+                      model_weights: Sequence[float] = (0.7, 0.3),
+                      arrival_rate: float = 10.0,
+                      interactive_frac: float = 0.85,
+                      batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
+    rng = np.random.default_rng(seed)
+    w = np.asarray(model_weights, dtype=np.float64)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    midx = rng.choice(len(models), size=n_requests,
+                      p=w / w.sum()).astype(np.int32)
+    trace = make_trace(times, ins, outs, cls,
+                       batch_ttft_slo=batch_ttft_slo,
+                       model_idx=midx, models=tuple(models))
+    return trace, {"max_time": trace.duration + 900.0,
+                   "models": tuple(models)}
+
+
+@register("trace_replay",
+          "replay a CSV/JSONL trace (Azure LLM inference style) — or a "
+          "synthetic stand-in with its conversation/code mix when no "
+          "path is given; the 1M-request scale scenario",
+          default_n=20000)
+def trace_replay(n_requests: int, seed: int = 0, *,
+                 path: Optional[str] = None,
+                 arrival_rate: float = 60.0,
+                 code_frac: float = 0.35,
+                 interactive_frac: float = 1.0,
+                 slack: float = 600.0) -> Tuple[Trace, SimKwargs]:
+    if path is not None:
+        from repro.sim.trace_io import load_trace
+        trace = load_trace(path, max_requests=n_requests)
+        # deliberately no "models" kwarg: a production trace may carry
+        # hundreds of transient deployments, and pre-configuring them all
+        # would pin a permanent per-model instance floor — the controller's
+        # on-demand discovery path provisions only models with live work
+        # (pass models=... to the controller yourself for a small fleet)
+        return trace, {"max_time": trace.duration + slack}
+    # Azure-LLM-inference-style stand-in: a conversation class (short
+    # prompts, chatty outputs) and a code class (long prompts, short
+    # completions) under a mildly diurnal rate — the public trace's shape
+    rng = np.random.default_rng(seed)
+    period = max(n_requests / arrival_rate, 600.0)
+
+    def rate(ts: np.ndarray) -> np.ndarray:
+        return arrival_rate * (1 + 0.3 * np.sin(2 * np.pi * ts / period))
+
+    times = _nonhomogeneous_arrivals(rng, n_requests, rate,
+                                     1.3 * arrival_rate, period)
+    is_code = rng.random(n_requests) < code_frac
+    conv_in, conv_out = _token_lengths(rng, n_requests)
+    code_in = np.clip(rng.lognormal(6.3, 0.8, n_requests), 32,
+                      4 * MAX_TOKENS).astype(np.int64)   # median ~545
+    code_out = np.clip(rng.lognormal(4.0, 0.7, n_requests), 4,
+                       MAX_TOKENS).astype(np.int64)      # median ~55
+    ins = np.where(is_code, code_in, conv_in)
+    outs = np.where(is_code, code_out, conv_out)
+    cls = rng.random(n_requests) < interactive_frac
+    trace = make_trace(times, ins, outs, cls)
+    return trace, {"max_time": trace.duration + slack}
+
+
+@register("instance_failures",
+          "steady interactive stream with injected instance crashes: the "
+          "hierarchy must re-provision and re-queue displaced work",
+          default_n=3000)
+def instance_failures(n_requests: int, seed: int = 0, *,
+                      arrival_rate: float = 12.0,
+                      interactive_frac: float = 0.9,
+                      n_failures: int = 4,
+                      batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.simulator import FailurePlan
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo)
+    # crashes spread over the middle of the trace (jittered, seeded): the
+    # fleet is warm when they land and has traffic left to recover for
+    span = trace.duration
+    crash_times = np.sort(span * (0.2 + 0.6 * rng.random(n_failures)))
+    return trace, {"max_time": span + 900.0,
+                   "failures": FailurePlan(crash_times.tolist(), seed=seed)}

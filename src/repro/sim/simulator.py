@@ -2,11 +2,23 @@
 
 The event-driven core (``simulate_events``) drives the cluster off a
 time-ordered event heap — request arrivals, instance-ready transitions,
-per-instance completion estimates, control ticks, and timeline samples —
-so idle spans cost zero work and million-request traces run in seconds.
-The identical ``repro.core`` autoscaler code used by the real engine runs
-in the control loop — only the data plane is simulated (DESIGN.md §4), as
-a fluid model whose composition changes happen exactly at event times.
+per-instance completion estimates, control ticks, injected instance
+failures, and timeline samples — so idle spans cost zero work and
+million-request traces run in seconds. The identical ``repro.core``
+autoscaler code used by the real engine runs in the control loop — only
+the data plane is simulated (DESIGN.md §4), as a fluid model whose
+composition changes happen exactly at event times.
+
+Both engines accept either a materialized ``List[Request]`` or a columnar
+:class:`~repro.sim.workload.Trace`. The event core walks a Trace through a
+chunked cursor that materializes ``Request`` objects lazily in arrival
+order, so a 1M-request replay never builds a million objects up front.
+
+Failure injection: pass ``failures=FailurePlan(times, seed=...)`` and the
+event core crashes a uniformly-drawn active instance at each time — the
+instance is removed (chips freed, ``cluster.failures`` counted separately
+from autoscaling actions), its in-flight requests lose their KV and
+re-queue, and the control hierarchy heals the fleet on its next tick.
 
 ``simulate_fixed_tick`` is the original discrete-time loop (default tick
 0.25 s), kept as the equivalence reference and quantization baseline.
@@ -18,26 +30,97 @@ from __future__ import annotations
 import heapq
 import itertools
 import math
-from typing import Callable, List, Optional
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.serving.global_queue import GlobalQueue
-from repro.serving.request import Request, RequestState
+from repro.serving.request import Request
 from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.metrics import RunResult, TimelinePoint
 from repro.sim.perf_model import PerfModel
+from repro.sim.workload import Trace
 
 # heap-event kinds; the tuple position makes READY sort before COMPLETION
-# at equal timestamps (an instance activates before its estimates fire)
-_READY, _COMPLETION = 0, 1
+# and COMPLETION before FAILURE at equal timestamps (an instance activates
+# before its estimates fire; finishes land before the crash takes them)
+_READY, _COMPLETION, _FAIL = 0, 1, 2
+
+RequestSource = Union[Sequence[Request], Trace]
+
+
+@dataclass
+class FailurePlan:
+    """Crash schedule for failure injection: at each time in ``times`` one
+    uniformly-drawn *active* instance crashes (no-op when none is active).
+    Victim draws come from ``default_rng(seed)`` over the id-sorted active
+    list, so a plan is fully deterministic for a given run."""
+    times: Sequence[float]
+    seed: int = 0
+
+    def sorted_times(self) -> List[float]:
+        return sorted(float(t) for t in self.times)
+
+
+class _RequestCursor:
+    """Arrival-ordered request source over a list or a columnar Trace.
+
+    Trace mode materializes ``Request`` objects in chunks as the arrival
+    loop consumes them — peeking the next arrival time reads the float
+    column directly, so unarrived requests cost no Python objects.
+    """
+
+    def __init__(self, source: RequestSource, chunk: int = 16384):
+        self._chunk = chunk
+        if isinstance(source, Trace):
+            self._trace = source.sorted_by_arrival()
+            self._times = self._trace.arrival
+            self.n = self._trace.n
+            self.all: List[Request] = []
+        else:
+            self._trace = None
+            self.all = sorted(source, key=lambda r: r.arrival_time)
+            self.n = len(self.all)
+        self._i = 0
+
+    @property
+    def exhausted(self) -> bool:
+        return self._i >= self.n
+
+    def peek_time(self) -> float:
+        if self._i >= self.n:
+            return float("inf")
+        if self._trace is not None:
+            return float(self._times[self._i])
+        return self.all[self._i].arrival_time
+
+    def pop(self) -> Request:
+        if self._trace is not None and self._i >= len(self.all):
+            lo = len(self.all)
+            self.all.extend(self._trace.materialize(lo, lo + self._chunk))
+        req = self.all[self._i]
+        self._i += 1
+        return req
+
+    def all_requests(self) -> List[Request]:
+        """Every request (materializing any unserved tail) for RunResult."""
+        if self._trace is not None and len(self.all) < self.n:
+            self.all.extend(self._trace.materialize(len(self.all), self.n))
+        return self.all
 
 
 def _warm_start(controller, cluster: SimCluster, t: float, n: int) -> None:
-    """Pre-provision ``n`` instances, instantly active (shared by engines)."""
-    for _ in range(n):
-        inst = controller._provision(cluster, InstanceType.MIXED, t) \
+    """Pre-provision ``n`` instances, instantly active (shared by engines);
+    multi-model controllers get them round-robin across their fleet."""
+    models = getattr(controller, "model_list", None)
+    for k in range(n):
+        model = models[k % len(models)] if models else \
+            getattr(controller, "model", "llama-8b")
+        inst = controller._provision(cluster, InstanceType.MIXED, t, model) \
             if hasattr(controller, "_provision") else \
-            cluster.provision(controller.model, InstanceType.MIXED, t,
+            cluster.provision(model, InstanceType.MIXED, t,
                               static_batch=getattr(controller, "static_batch",
                                                    64))
         if inst is not None:
@@ -45,21 +128,20 @@ def _warm_start(controller, cluster: SimCluster, t: float, n: int) -> None:
             inst.activate_if_ready(t)
 
 
-def simulate_events(requests: List[Request], controller: BaseController,
+def simulate_events(requests: RequestSource, controller: BaseController,
                     cluster: SimCluster, *, control_interval: float = 1.0,
                     max_time: float = 7200.0, warm_start: int = 0,
                     timeline_every: float = 1.0,
                     completion_grain: float = 0.25,
-                    quantize: float = 0.0) -> RunResult:
+                    quantize: float = 0.0,
+                    failures: Optional[FailurePlan] = None) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
     non-empty ticks yet batches arrivals/completions exactly like a
     ``simulate_fixed_tick`` run at ``dt=quantize`` — the mode the
     engine-equivalence comparison uses."""
     queue = GlobalQueue()
-    pending = sorted(requests, key=lambda r: r.arrival_time)
-    n = len(pending)
-    pi = 0
+    cursor = _RequestCursor(requests)
     t = 0.0
     cluster.event_mode = True
     cluster.now = 0.0
@@ -76,7 +158,14 @@ def simulate_events(requests: List[Request], controller: BaseController,
     control_parked = False
     next_timeline = 0.0
     last_sample_t = 0.0
+    n_events = 0
     eps = 1e-12
+
+    fail_rng = None
+    if failures is not None:
+        fail_rng = np.random.default_rng(failures.seed)
+        for tf in failures.sorted_times():
+            heapq.heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
 
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
@@ -93,11 +182,12 @@ def simulate_events(requests: List[Request], controller: BaseController,
 
     while True:
         # ---- termination: all requests arrived, none queued or running
-        if pi >= n and len(queue) == 0 and cluster.total_running == 0:
+        if cursor.exhausted and len(queue) == 0 and \
+                cluster.total_running == 0:
             break
 
         # ---- next event time across all sources
-        t_next = pending[pi].arrival_time if pi < n else float("inf")
+        t_next = cursor.peek_time()
         if heap and heap[0][0] < t_next:
             t_next = heap[0][0]
         if next_control < t_next:
@@ -115,25 +205,45 @@ def simulate_events(requests: List[Request], controller: BaseController,
         changed = False
 
         # 1. arrivals due at t
-        while pi < n and pending[pi].arrival_time <= t + eps:
-            req = pending[pi]
+        while cursor.peek_time() <= t + eps:
+            req = cursor.pop()
             queue.push(req)
             if hasattr(controller, "observe_arrival"):
                 controller.observe_arrival(req, t)
-            pi += 1
             changed = True
+            n_events += 1
 
         # 2. instance events due at t (ready transitions, completion
-        #    estimates; stale estimates are skipped via the epoch stamp).
-        #    Instances that gained capacity are backfilled directly below.
+        #    estimates, injected crashes; stale estimates are skipped via
+        #    the epoch stamp). Instances that gained capacity are
+        #    backfilled directly below.
         freed = []
         while heap and heap[0][0] <= t + eps:
             _, kind, _, inst, epoch = heapq.heappop(heap)
+            n_events += 1
             if kind == _READY:
                 if inst.state == InstanceState.LOADING:
                     inst.activate_if_ready(t)
                     inst.mark_dirty()
                     freed.append(inst)
+                    changed = True
+            elif kind == _FAIL:
+                # crash a uniformly-drawn active instance (id-sorted list
+                # + seeded rng -> deterministic victim per run)
+                active = [i for i in cluster.instances if i.active]
+                if active:
+                    active.sort(key=lambda i: i.id)
+                    victim = active[int(fail_rng.integers(len(active)))]
+                    if victim in freed:
+                        freed.remove(victim)
+                    displaced = cluster.fail_instance(victim)
+                    # fluid state settled at the crash instant: finishes
+                    # that beat the crash still count, the rest requeue
+                    for r in victim.drain_finished():
+                        controller.observe_completion(r)
+                    for r in displaced:
+                        queue.requeue(r)
+                    cluster.dirty.discard(victim)
                     changed = True
             elif epoch == inst._epoch and inst.state == InstanceState.ACTIVE:
                 inst.advance(t)
@@ -149,6 +259,7 @@ def simulate_events(requests: List[Request], controller: BaseController,
         #    then run the identical production control path
         ran_control = t >= next_control - eps
         if ran_control:
+            n_events += 1
             for inst in cluster.instances:
                 inst.advance(t)
             pre = (len(cluster.instances), cluster.scale_ups,
@@ -170,8 +281,7 @@ def simulate_events(requests: List[Request], controller: BaseController,
             if quiescent:
                 # deterministic controller + unchanged inputs -> nothing can
                 # change before the next arrival; park the control loop
-                next_control = pending[pi].arrival_time if pi < n \
-                    else float("inf")
+                next_control = cursor.peek_time()
                 control_parked = True
             else:
                 next_control = t + control_interval
@@ -209,21 +319,26 @@ def simulate_events(requests: List[Request], controller: BaseController,
 
     if timeline and t > timeline[-1].t:
         _sample(t)
-    return RunResult(requests=requests, timeline=timeline,
+    return RunResult(requests=cursor.all_requests(), timeline=timeline,
                      chip_seconds=cluster.chip_seconds,
                      peak_chips=cluster.peak_chips,
                      scale_ups=cluster.scale_ups,
                      scale_downs=cluster.scale_downs,
-                     duration=t)
+                     duration=t, failures=cluster.failures,
+                     n_events=n_events)
 
 
-def simulate_fixed_tick(requests: List[Request], controller: BaseController,
+def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
                         cluster: SimCluster, *, dt: float = 0.25,
                         control_interval: float = 1.0,
                         max_time: float = 7200.0, warm_start: int = 0,
                         timeline_every: float = 1.0) -> RunResult:
-    """The original discrete-time loop (reference/quantization baseline)."""
+    """The original discrete-time loop (reference/quantization baseline).
+    A Trace input is materialized up front — the reference loop walks
+    every tick anyway, so laziness buys nothing here."""
     queue = GlobalQueue()
+    if isinstance(requests, Trace):
+        requests = requests.sorted_by_arrival().materialize()
     pending = sorted(requests, key=lambda r: r.arrival_time)
     pi = 0
     t = 0.0
@@ -280,28 +395,33 @@ def simulate_fixed_tick(requests: List[Request], controller: BaseController,
                 all(not i.running for i in cluster.instances):
             break
 
-    return RunResult(requests=requests, timeline=timeline,
+    return RunResult(requests=pending, timeline=timeline,
                      chip_seconds=cluster.chip_seconds,
                      peak_chips=cluster.peak_chips,
                      scale_ups=cluster.scale_ups,
                      scale_downs=cluster.scale_downs,
-                     duration=t)
+                     duration=t, failures=cluster.failures)
 
 
-def simulate(requests: List[Request], controller: BaseController,
+def simulate(requests: RequestSource, controller: BaseController,
              cluster: SimCluster, *, dt: float = 0.25,
              control_interval: float = 1.0, max_time: float = 7200.0,
              warm_start: int = 0, timeline_every: float = 1.0,
-             engine: str = "event") -> RunResult:
+             engine: str = "event",
+             failures: Optional[FailurePlan] = None) -> RunResult:
     """Compatibility wrapper: dispatch to the event-driven core (default)
-    or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies).
+    or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies;
+    failure injection needs the event core).
     """
     if engine == "event":
         return simulate_events(requests, controller, cluster,
                                control_interval=control_interval,
                                max_time=max_time, warm_start=warm_start,
-                               timeline_every=timeline_every)
+                               timeline_every=timeline_every,
+                               failures=failures)
     if engine == "fixed":
+        if failures is not None:
+            raise ValueError("failure injection requires engine='event'")
         return simulate_fixed_tick(requests, controller, cluster, dt=dt,
                                    control_interval=control_interval,
                                    max_time=max_time, warm_start=warm_start,

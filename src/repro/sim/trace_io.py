@@ -1,0 +1,181 @@
+"""Trace replay I/O: round-trip ``Trace`` columns to CSV/JSONL files.
+
+Two dialects are understood on load:
+
+- **Native** (what ``save_trace`` writes): one row per request with the
+  canonical columns ``arrival, prompt_len, output_len, interactive,
+  ttft_slo, itl_slo, model``. Round-trips a synthetic scenario exactly.
+- **Azure-LLM-inference style** (azure-public-dataset): ``TIMESTAMP,
+  ContextTokens, GeneratedTokens`` — ISO timestamps are vectorized through
+  ``numpy.datetime64`` and normalized so the trace starts at t=0; missing
+  class/SLO columns are filled from the defaults below.
+
+Column names are matched case-insensitively against the alias table, so
+``arrival_time``/``time``/``TIMESTAMP`` all land on the arrival column and
+``ContextTokens``/``input_tokens``/``prompt_len`` on the prompt column.
+
+Format is picked by extension: ``.jsonl`` -> JSON lines, anything else is
+parsed as CSV.
+"""
+from __future__ import annotations
+
+import csv
+import json
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.request import BATCH_TTFT_SLO
+from repro.sim.workload import DEFAULT_MODEL, Trace, make_trace
+
+# canonical column -> accepted aliases (lowercased)
+_ALIASES: Dict[str, Sequence[str]] = {
+    "arrival": ("arrival", "arrival_time", "timestamp", "time", "t"),
+    "prompt_len": ("prompt_len", "contexttokens", "context_tokens",
+                   "input_tokens", "prompt_tokens", "input_len"),
+    "output_len": ("output_len", "generatedtokens", "generated_tokens",
+                   "output_tokens", "gen_tokens"),
+    "interactive": ("interactive", "is_interactive", "class",
+                    "request_type", "type"),
+    "ttft_slo": ("ttft_slo", "slo_ttft"),
+    "itl_slo": ("itl_slo", "slo_itl"),
+    "model": ("model", "model_name", "deployment"),
+}
+
+_INTERACTIVE_WORDS = {"1", "true", "interactive", "chat", "conversation"}
+
+
+def _canon(name: str) -> Optional[str]:
+    low = name.strip().lower()
+    for canon, aliases in _ALIASES.items():
+        if low in aliases:
+            return canon
+    return None
+
+
+def save_trace(trace: Trace, path: str) -> None:
+    """Write a trace in the native schema (CSV or ``.jsonl``)."""
+    models = trace.models
+    cols = zip(trace.arrival.tolist(), trace.prompt_len.tolist(),
+               trace.output_len.tolist(), trace.interactive.tolist(),
+               trace.ttft_slo.tolist(), trace.itl_slo.tolist(),
+               trace.model_idx.tolist())
+    with open(path, "w") as f:
+        if path.endswith(".jsonl"):
+            for t, p, o, c, tt, il, m in cols:
+                f.write(json.dumps({
+                    "arrival": t, "prompt_len": p, "output_len": o,
+                    "interactive": bool(c), "ttft_slo": tt, "itl_slo": il,
+                    "model": models[m]}) + "\n")
+        else:
+            w = csv.writer(f, lineterminator="\n")   # RFC-4180 quoting
+            w.writerow(["arrival", "prompt_len", "output_len",
+                        "interactive", "ttft_slo", "itl_slo", "model"])
+            for t, p, o, c, tt, il, m in cols:
+                w.writerow([repr(t), p, o, int(c), repr(tt), repr(il),
+                            models[m]])
+
+
+def _parse_arrivals(raw: List[str]) -> np.ndarray:
+    """Float seconds, or ISO timestamps normalized to seconds from t0."""
+    try:
+        return np.asarray(raw, dtype=np.float64)
+    except ValueError:
+        ts = np.array(raw, dtype="datetime64[us]")
+        return (ts - ts.min()) / np.timedelta64(1, "s")
+
+
+def _parse_interactive(raw: List[str]) -> np.ndarray:
+    vals = np.array([v.strip().lower() for v in raw])
+    return np.isin(vals, list(_INTERACTIVE_WORDS))
+
+
+def _columns_to_trace(cols: Dict[str, List], n: int, *,
+                      interactive_default: bool,
+                      batch_ttft_slo: float,
+                      model_default: str) -> Trace:
+    if "arrival" not in cols or "prompt_len" not in cols \
+            or "output_len" not in cols:
+        missing = {"arrival", "prompt_len", "output_len"} - set(cols)
+        raise ValueError(f"trace is missing required columns: {sorted(missing)}")
+    arrival = _parse_arrivals([str(v) for v in cols["arrival"]])
+    prompt = np.asarray(cols["prompt_len"], dtype=np.float64).astype(np.int64)
+    output = np.asarray(cols["output_len"], dtype=np.float64).astype(np.int64)
+    if "interactive" in cols:
+        first = cols["interactive"][0]
+        if isinstance(first, (bool, np.bool_, int, float)):
+            interactive = np.asarray(cols["interactive"]).astype(bool)
+        else:
+            interactive = _parse_interactive([str(v) for v in
+                                              cols["interactive"]])
+    else:
+        interactive = np.full(n, interactive_default, dtype=bool)
+    ttft = np.asarray(cols["ttft_slo"], dtype=np.float64) \
+        if "ttft_slo" in cols else None
+    itl = np.asarray(cols["itl_slo"], dtype=np.float64) \
+        if "itl_slo" in cols else None
+    if "model" in cols:
+        names = np.array([str(v) for v in cols["model"]])
+        models, model_idx = np.unique(names, return_inverse=True)
+        models = tuple(models.tolist())
+        model_idx = np.asarray(model_idx, dtype=np.int32)
+    else:
+        models, model_idx = (model_default,), None
+    # make_trace owns the class-mask SLO defaulting and the sort — one
+    # rule for generated and loaded traces alike
+    return make_trace(arrival, prompt, output, interactive,
+                      ttft_slo=ttft, itl_slo=itl,
+                      batch_ttft_slo=batch_ttft_slo,
+                      model_idx=model_idx, models=models)
+
+
+def load_trace(path: str, *, interactive_default: bool = True,
+               batch_ttft_slo: float = BATCH_TTFT_SLO,
+               model_default: str = DEFAULT_MODEL,
+               max_requests: int = 0) -> Trace:
+    """Load a CSV/JSONL trace into a sorted :class:`Trace`.
+
+    ``max_requests > 0`` truncates after sorting (head of the trace).
+    Unknown columns are ignored; missing class/SLO/model columns are
+    filled from the defaults.
+    """
+    if path.endswith(".jsonl"):
+        cols: Dict[str, List] = {}
+        n = 0
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                for k, v in row.items():
+                    ck = _canon(k)
+                    if ck is not None:
+                        cols.setdefault(ck, []).append(v)
+                n += 1
+    else:
+        with open(path, newline="") as f:
+            reader = csv.reader(f)           # RFC-4180: quoted fields safe
+            header = next(reader, [])
+            keys = [_canon(h) for h in header]
+            raw: List[List[str]] = [[] for _ in header]
+            n = 0
+            for row in reader:
+                if not row:
+                    continue
+                for slot, v in zip(raw, row):
+                    slot.append(v)
+                n += 1
+        cols = {k: v for k, v in zip(keys, raw) if k is not None}
+    if n == 0:
+        raise ValueError(f"empty trace file: {path}")
+    # ragged rows leave short columns behind; fail loudly rather than shift
+    for k, v in cols.items():
+        if len(v) != n:
+            raise ValueError(f"column {k!r} has {len(v)} values for {n} rows")
+    tr = _columns_to_trace(cols, n, interactive_default=interactive_default,
+                           batch_ttft_slo=batch_ttft_slo,
+                           model_default=model_default)
+    if max_requests and tr.n > max_requests:
+        tr = tr.head(max_requests)
+    return tr

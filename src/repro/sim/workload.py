@@ -1,19 +1,40 @@
-"""Workload generation: ShareGPT-like token distributions + arrival processes.
+"""Workload generation: columnar traces + ShareGPT-like token distributions.
 
 The paper's traces use 3,500 ShareGPT requests (Fig. 8 token distributions)
 with Poisson arrivals for the main experiments and Gamma arrivals (varying
 CV) for the burstiness robustness analysis (§6.3, Fig. 17).
+
+The workload plane is columnar: a :class:`Trace` is a struct-of-arrays
+(NumPy) view of a request stream — arrival times, token lengths, request
+class, per-request SLOs, and a model column for multi-model fleets — and
+every generator here fills those arrays with vectorized draws, never a
+per-request Python loop. ``Request`` objects are only materialized at the
+simulator boundary (``Trace.materialize`` / the event core's chunked
+cursor), which is what keeps 1M+ request traces generable in milliseconds.
+
+Trace schema (one row per request):
+
+  arrival      float64  seconds from trace start, non-decreasing
+  prompt_len   int64    input tokens
+  output_len   int64    output tokens (ground truth)
+  interactive  bool     True -> interactive class, False -> batch
+  ttft_slo     float64  per-request TTFT SLO (seconds)
+  itl_slo      float64  per-request ITL SLO (seconds/token)
+  model_idx    int32    index into ``models`` (the model vocabulary)
+
+``repro.sim.trace_io`` round-trips this schema to CSV/JSONL (including
+Azure-LLM-inference-style traces).
 """
 from __future__ import annotations
 
-import math
-from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.serving.request import (Request, RequestType, SLO, make_batch,
-                                   make_interactive)
+from repro.serving.request import (BATCH_ITL_SLO, BATCH_TTFT_SLO,
+                                   INTERACTIVE_ITL_SLO, INTERACTIVE_TTFT_SLO,
+                                   Request, RequestType, SLO)
 
 # ShareGPT-ish lognormal parameters (Fig. 8: median input ~100 tokens with a
 # heavy tail; outputs somewhat longer)
@@ -21,7 +42,163 @@ INPUT_MU, INPUT_SIGMA = 4.6, 1.0      # median ~100, mean ~165
 OUTPUT_MU, OUTPUT_SIGMA = 5.2, 0.9    # median ~180, mean ~270
 MAX_TOKENS = 2048
 
+DEFAULT_MODEL = "llama-8b"
 
+
+# =========================================================== columnar trace
+@dataclass
+class Trace:
+    """Struct-of-arrays request stream (see module docstring for schema).
+
+    All columns share one length; ``models`` is the model vocabulary that
+    ``model_idx`` indexes. Construction normalizes dtypes; use
+    :meth:`sorted_by_arrival` before handing a trace to the simulator.
+    """
+    arrival: np.ndarray
+    prompt_len: np.ndarray
+    output_len: np.ndarray
+    interactive: np.ndarray
+    ttft_slo: np.ndarray
+    itl_slo: np.ndarray
+    model_idx: np.ndarray
+    models: Tuple[str, ...] = (DEFAULT_MODEL,)
+
+    def __post_init__(self):
+        self.arrival = np.asarray(self.arrival, dtype=np.float64)
+        n = self.arrival.shape[0]
+        self.prompt_len = np.asarray(self.prompt_len, dtype=np.int64)
+        self.output_len = np.asarray(self.output_len, dtype=np.int64)
+        self.interactive = np.asarray(self.interactive, dtype=bool)
+        self.ttft_slo = np.asarray(self.ttft_slo, dtype=np.float64)
+        self.itl_slo = np.asarray(self.itl_slo, dtype=np.float64)
+        self.model_idx = np.asarray(self.model_idx, dtype=np.int32)
+        self.models = tuple(self.models)
+        for name in ("prompt_len", "output_len", "interactive",
+                     "ttft_slo", "itl_slo", "model_idx"):
+            if getattr(self, name).shape != (n,):
+                raise ValueError(f"Trace column {name!r} has shape "
+                                 f"{getattr(self, name).shape}, want ({n},)")
+        if n and (self.model_idx.min() < 0
+                  or self.model_idx.max() >= len(self.models)):
+            raise ValueError("Trace.model_idx out of range of models")
+
+    # ------------------------------------------------------------ basics
+    @property
+    def n(self) -> int:
+        return int(self.arrival.shape[0])
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def duration(self) -> float:
+        return float(self.arrival[-1]) if self.n else 0.0
+
+    def sorted_by_arrival(self) -> "Trace":
+        """Stable-sorted copy (no-op view reuse when already sorted)."""
+        if self.n == 0 or bool(np.all(np.diff(self.arrival) >= 0)):
+            return self
+        order = np.argsort(self.arrival, kind="stable")
+        return self.take(order)
+
+    def take(self, idx) -> "Trace":
+        return Trace(self.arrival[idx], self.prompt_len[idx],
+                     self.output_len[idx], self.interactive[idx],
+                     self.ttft_slo[idx], self.itl_slo[idx],
+                     self.model_idx[idx], self.models)
+
+    def head(self, n: int) -> "Trace":
+        return self.take(slice(0, n))
+
+    @staticmethod
+    def concat(traces: Sequence["Trace"]) -> "Trace":
+        """Concatenate traces, merging model vocabularies."""
+        models: List[str] = []
+        remaps = []
+        for tr in traces:
+            remap = np.empty(len(tr.models), dtype=np.int32)
+            for i, m in enumerate(tr.models):
+                if m not in models:
+                    models.append(m)
+                remap[i] = models.index(m)
+            remaps.append(remap)
+        return Trace(
+            np.concatenate([t.arrival for t in traces]),
+            np.concatenate([t.prompt_len for t in traces]),
+            np.concatenate([t.output_len for t in traces]),
+            np.concatenate([t.interactive for t in traces]),
+            np.concatenate([t.ttft_slo for t in traces]),
+            np.concatenate([t.itl_slo for t in traces]),
+            np.concatenate([r[t.model_idx] for t, r in zip(traces, remaps)]),
+            tuple(models))
+
+    # ----------------------------------------------------- materialization
+    def materialize(self, lo: int = 0, hi: Optional[int] = None) -> List[Request]:
+        """Build ``Request`` objects for rows [lo, hi) — the only place the
+        columnar plane crosses into per-object land. Batched callers (the
+        event core's cursor) use the slice bounds to stay lazy."""
+        hi = self.n if hi is None else min(hi, self.n)
+        arr = self.arrival[lo:hi].tolist()
+        ins = self.prompt_len[lo:hi].tolist()
+        outs = self.output_len[lo:hi].tolist()
+        inter = self.interactive[lo:hi].tolist()
+        ttft = self.ttft_slo[lo:hi].tolist()
+        itl = self.itl_slo[lo:hi].tolist()
+        midx = self.model_idx[lo:hi].tolist()
+        models = self.models
+        it, ba = RequestType.INTERACTIVE, RequestType.BATCH
+        return [Request(p, o, it if c else ba, SLO(tt, il), t,
+                        model=models[m])
+                for t, p, o, c, tt, il, m
+                in zip(arr, ins, outs, inter, ttft, itl, midx)]
+
+    @classmethod
+    def from_requests(cls, reqs: Sequence[Request]) -> "Trace":
+        """Columnarize a request list (round-trip / legacy ingestion)."""
+        models: List[str] = []
+        midx = np.empty(len(reqs), dtype=np.int32)
+        for i, r in enumerate(reqs):
+            if r.model not in models:
+                models.append(r.model)
+            midx[i] = models.index(r.model)
+        return cls(
+            np.array([r.arrival_time for r in reqs], dtype=np.float64),
+            np.array([r.prompt_len for r in reqs], dtype=np.int64),
+            np.array([r.output_len for r in reqs], dtype=np.int64),
+            np.array([r.is_interactive for r in reqs], dtype=bool),
+            np.array([r.slo.ttft for r in reqs], dtype=np.float64),
+            np.array([r.slo.itl for r in reqs], dtype=np.float64),
+            midx, tuple(models) or (DEFAULT_MODEL,))
+
+
+def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
+               output_len: np.ndarray, interactive: np.ndarray, *,
+               ttft_slo: Union[float, np.ndarray, None] = None,
+               itl_slo: Union[float, np.ndarray, None] = None,
+               batch_ttft_slo: float = BATCH_TTFT_SLO,
+               model_idx: Optional[np.ndarray] = None,
+               models: Sequence[str] = (DEFAULT_MODEL,),
+               sort: bool = True) -> Trace:
+    """Assemble a Trace from columns, filling SLO columns from the class
+    mask (interactive -> paper defaults; batch -> ``batch_ttft_slo``)."""
+    interactive = np.asarray(interactive, dtype=bool)
+    n = interactive.shape[0]
+    if ttft_slo is None:
+        ttft_slo = np.where(interactive, INTERACTIVE_TTFT_SLO, batch_ttft_slo)
+    elif np.ndim(ttft_slo) == 0:        # Python or NumPy scalar: broadcast
+        ttft_slo = np.full(n, float(ttft_slo))
+    if itl_slo is None:
+        itl_slo = np.where(interactive, INTERACTIVE_ITL_SLO, BATCH_ITL_SLO)
+    elif np.ndim(itl_slo) == 0:
+        itl_slo = np.full(n, float(itl_slo))
+    if model_idx is None:
+        model_idx = np.zeros(n, dtype=np.int32)
+    tr = Trace(arrival, prompt_len, output_len, interactive,
+               ttft_slo, itl_slo, model_idx, tuple(models))
+    return tr.sorted_by_arrival() if sort else tr
+
+
+# ============================================================== generation
 @dataclass
 class WorkloadSpec:
     n_requests: int = 3500
@@ -29,7 +206,7 @@ class WorkloadSpec:
     interactive_frac: float = 1.0     # 1.0 = W_A; <1 adds batch requests
     process: str = "poisson"          # poisson | gamma
     cv: float = 1.0                   # Gamma coefficient of variation
-    model: str = "llama-8b"
+    model: str = DEFAULT_MODEL
     batch_ttft_slo: float = 3600.0
     seed: int = 0
     # batch-queue mode (W_B): dump `batch_queue_size` batch requests at t=0
@@ -39,7 +216,7 @@ class WorkloadSpec:
 def _token_lengths(rng: np.random.Generator, n: int):
     ins = np.clip(rng.lognormal(INPUT_MU, INPUT_SIGMA, n), 4, MAX_TOKENS)
     outs = np.clip(rng.lognormal(OUTPUT_MU, OUTPUT_SIGMA, n), 4, MAX_TOKENS)
-    return ins.astype(int), outs.astype(int)
+    return ins.astype(np.int64), outs.astype(np.int64)
 
 
 def _interarrival(rng: np.random.Generator, spec: WorkloadSpec, n: int) -> np.ndarray:
@@ -51,56 +228,78 @@ def _interarrival(rng: np.random.Generator, spec: WorkloadSpec, n: int) -> np.nd
     return rng.gamma(k, mean * spec.cv ** 2, n)
 
 
-def generate(spec: WorkloadSpec) -> List[Request]:
+def generate_trace(spec: WorkloadSpec) -> Trace:
+    """Fully vectorized trace generation — no per-request Python work.
+
+    Draw order matches the historical ``generate`` exactly (batch-queue
+    token lengths, live token lengths, gaps, class coin flips) so seeds
+    reproduce the same workloads they always did.
+    """
     rng = np.random.default_rng(spec.seed)
-    reqs: List[Request] = []
+    parts: List[Trace] = []
 
     if spec.batch_queue_size > 0:
         ins, outs = _token_lengths(rng, spec.batch_queue_size)
-        for i in range(spec.batch_queue_size):
-            reqs.append(make_batch(int(ins[i]), int(outs[i]), 0.0,
-                                   model=spec.model,
-                                   ttft_slo=spec.batch_ttft_slo))
+        parts.append(make_trace(
+            np.zeros(spec.batch_queue_size), ins, outs,
+            np.zeros(spec.batch_queue_size, dtype=bool),
+            batch_ttft_slo=spec.batch_ttft_slo,
+            models=(spec.model,), sort=False))
 
     n = spec.n_requests
     ins, outs = _token_lengths(rng, n)
-    gaps = _interarrival(rng, spec, n)
-    t = np.cumsum(gaps)
+    t = np.cumsum(_interarrival(rng, spec, n))
     classes = rng.random(n) < spec.interactive_frac
-    for i in range(n):
-        if classes[i]:
-            reqs.append(make_interactive(int(ins[i]), int(outs[i]),
-                                         float(t[i]), model=spec.model))
-        else:
-            reqs.append(make_batch(int(ins[i]), int(outs[i]), float(t[i]),
-                                   model=spec.model,
-                                   ttft_slo=spec.batch_ttft_slo))
-    reqs.sort(key=lambda r: r.arrival_time)
-    return reqs
+    parts.append(make_trace(t, ins, outs, classes,
+                            batch_ttft_slo=spec.batch_ttft_slo,
+                            models=(spec.model,), sort=False))
+    out = parts[0] if len(parts) == 1 else Trace.concat(parts)
+    return out.sorted_by_arrival()
 
 
-def arrival_spikes(reqs: List[Request], interval: float = 30.0) -> List[float]:
+def generate(spec: WorkloadSpec) -> List[Request]:
+    """Historical API: generate and materialize (small/medium traces)."""
+    return generate_trace(spec).materialize()
+
+
+# ======================================================== arrival analysis
+def _arrival_column(source) -> np.ndarray:
+    """Arrival times from a Trace, an ndarray/sequence of floats, or a
+    sequence of Request-likes (anything with ``.arrival_time``)."""
+    if isinstance(source, Trace):
+        return source.arrival
+    if isinstance(source, np.ndarray):
+        return source.astype(np.float64, copy=False)
+    src = list(source)
+    if not src:
+        return np.empty(0)
+    if hasattr(src[0], "arrival_time"):
+        return np.fromiter((r.arrival_time for r in src), dtype=np.float64,
+                           count=len(src))
+    return np.asarray(src, dtype=np.float64)
+
+
+def arrival_spikes(source, interval: float = 30.0) -> np.ndarray:
     """Paper §2.3: ratio of arrival rate between consecutive intervals of
-    length = model load time. Used by the Theta-from-history heuristic."""
-    if not reqs:
-        return []
-    end = max(r.arrival_time for r in reqs)
-    nbins = int(end / interval) + 1
-    counts = [0] * nbins
-    for r in reqs:
-        counts[int(r.arrival_time / interval)] += 1
-    spikes = []
-    for a, b in zip(counts, counts[1:]):
-        if a > 0:
-            spikes.append(b / a)
-    return spikes
+    length = model load time. Used by the Theta-from-history heuristic.
+
+    Vectorized: one ``np.bincount`` over the arrival column, a shifted
+    ratio, and a mask — O(n + bins) with no per-request Python loop.
+    """
+    times = _arrival_column(source)
+    if times.size == 0:
+        return np.empty(0)
+    counts = np.bincount((times / interval).astype(np.int64))
+    prev, nxt = counts[:-1], counts[1:]
+    mask = prev > 0
+    return nxt[mask] / prev[mask]
 
 
-def theta_from_history(reqs: List[Request], interval: float = 30.0,
+def theta_from_history(source, interval: float = 30.0,
                        pct: float = 99.0) -> float:
     """Theta = 1 / tail-spike (paper §5.2 example: spike 3x -> Theta=1/3)."""
-    spikes = arrival_spikes(reqs, interval)
-    if not spikes:
+    spikes = arrival_spikes(source, interval)
+    if spikes.size == 0:
         return 1.0 / 3.0
     tail = float(np.percentile(spikes, pct))
     return 1.0 / max(tail, 1.0)

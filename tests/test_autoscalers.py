@@ -54,6 +54,38 @@ def test_local_batch_stays_bounded(itl, thr):
         assert 1 <= s.max_batch_size <= 256
 
 
+def test_ewma_throughput_makes_ceiling_grain_robust():
+    """ROADMAP robustness item (fig19_equiv regression): tick-grain noise
+    on the throughput samples must not move Algorithm 1's batch-size
+    ceiling — the EWMA input (plus the proportional mild step) keeps the
+    noisy fixed point within a few percent of the clean one, where raw
+    sampling used to collapse it (different ceilings per engine grain)."""
+    import numpy as np
+    pm = PerfModel("llama-8b")
+    slo, ctx = 0.2, 1024.0
+
+    def closed_loop(alpha, noise, seed=0, iters=300):
+        rng = np.random.default_rng(seed)
+        s = LocalAutoscaler(itl_slo=slo, init_batch=8, max_batch=4096,
+                            thr_ewma_alpha=alpha)
+        for _ in range(iters):
+            b = s.max_batch_size
+            eps = 1.0 + noise * rng.uniform(-1, 1)
+            s.update(LocalMetrics(observed_itl=pm.itl(b, ctx),
+                                  throughput=pm.throughput(b, ctx) * eps,
+                                  itl_slo=slo))
+        tail = s.history[-50:]
+        return sum(tail) / len(tail)
+
+    clean = closed_loop(0.5, 0.0)
+    errs_smooth = [abs(closed_loop(0.5, 0.03, seed) - clean) / clean
+                   for seed in range(3)]
+    errs_raw = [abs(closed_loop(1.0, 0.03, seed) - clean) / clean
+                for seed in range(3)]
+    assert max(errs_smooth) < 0.10, errs_smooth
+    assert max(errs_smooth) <= max(errs_raw) + 1e-9
+
+
 def test_local_converges_against_perf_model():
     """Closed loop against the analytic data plane: Algorithm 1 must settle
     near the true optimum (paper Fig. 11/12 behaviour)."""

@@ -102,9 +102,11 @@ def _drain(n: int) -> float:
 def test_heap_queue_drains_50k_without_quadratic_blowup():
     """O(n log n) drain: 10x the requests must cost far less than the
     ~100x a quadratic (sort-per-pop) queue pays; absolute bound as a
-    backstop against environmental noise."""
+    backstop against environmental noise. Best-of-3 on both sides keeps
+    allocator/GC jitter (worst after the JAX-heavy modules run first in
+    the full suite) from flaking a structural guard."""
     _drain(5_000)                       # warm-up (allocator, caches)
-    small = max(_drain(5_000), 1e-3)
-    big = _drain(50_000)
+    small = max(min(_drain(5_000) for _ in range(3)), 1e-3)
+    big = min(_drain(50_000) for _ in range(3))
     assert big < 30.0 * small, (small, big)
     assert big < 2.0, f"50k drain took {big:.2f}s"

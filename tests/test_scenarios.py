@@ -1,0 +1,79 @@
+"""Scenario registry smoke: every scenario builds columnar and completes
+on the event core; the three trace-plane scenarios (multi_model_fleet,
+trace_replay, instance_failures) get behaviour checks."""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController
+from repro.sim.scenarios import SCENARIOS, build, build_trace
+from repro.sim.simulator import (FailurePlan, default_perf_factory,
+                                 simulate_events)
+from repro.sim.trace_io import save_trace
+from repro.sim.workload import Trace
+
+NEW_SCENARIOS = ("multi_model_fleet", "trace_replay", "instance_failures")
+
+
+def _run(trace, kw, max_chips=200, **extra):
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
+    return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
+                           warm_start=2, failures=kw.get("failures"),
+                           **extra)
+
+
+def test_registry_contains_trace_plane_scenarios():
+    for name in NEW_SCENARIOS:
+        assert name in SCENARIOS, name
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_smoke(name):
+    """Small-n end-to-end: columnar build, event core, all work finishes."""
+    trace, kw = build_trace(name, n_requests=250, seed=1)
+    assert isinstance(trace, Trace)
+    assert np.all(np.diff(trace.arrival) >= 0)
+    res = _run(trace, kw)
+    assert res.completion_rate() == 1.0, name
+    # legacy list path agrees on shape
+    reqs, _ = build(name, n_requests=250, seed=1)
+    assert len(reqs) == trace.n
+
+
+def test_multi_model_fleet_reports_per_model_slo():
+    trace, kw = build_trace("multi_model_fleet", n_requests=500, seed=2)
+    assert len(trace.models) >= 2
+    assert len(set(trace.model_idx.tolist())) >= 2
+    res = _run(trace, kw, max_chips=400)
+    assert res.completion_rate() == 1.0
+    s = res.summary()
+    per_model = {k: v for k, v in s.items() if k.startswith("slo_model:")}
+    assert len(per_model) >= 2
+    assert set(per_model) == {f"slo_model:{m}" for m in kw["models"]}
+
+
+def test_trace_replay_from_file(tmp_path):
+    """trace_replay(path=...) replays a saved trace byte-for-byte."""
+    synth, kw = build_trace("trace_replay", n_requests=300, seed=3)
+    p = str(tmp_path / "replay.csv")
+    save_trace(synth, p)
+    replay, kw2 = build_trace("trace_replay", n_requests=300, seed=99,
+                              path=p)
+    assert np.array_equal(replay.arrival, synth.arrival)
+    assert np.array_equal(replay.prompt_len, synth.prompt_len)
+    res = _run(replay, kw2)
+    assert res.completion_rate() == 1.0
+
+
+def test_instance_failures_scenario_injects_and_recovers():
+    trace, kw = build_trace("instance_failures", n_requests=500, seed=4)
+    assert isinstance(kw["failures"], FailurePlan)
+    res = _run(trace, kw)
+    assert res.failures >= 1
+    assert res.completion_rate() == 1.0
+    # seed determinism end to end (same trace seed -> same plan -> same run)
+    trace_b, kw_b = build_trace("instance_failures", n_requests=500, seed=4)
+    res_b = _run(trace_b, kw_b)
+    assert res.summary() == res_b.summary()
