@@ -21,7 +21,8 @@ Three sections:
   superlinear growth.
 
 Env knobs: ``SCENARIO_SWEEP_N`` (speedup trace size, default 100000),
-``SCENARIO_SWEEP_LEGACY_BUDGET`` (seconds, default 120).
+``SCENARIO_SWEEP_LEGACY_BUDGET`` (seconds, default 120),
+``SCENARIO_SWEEP_REPEATS`` (best-of-k scenario timing, default 3).
 """
 from __future__ import annotations
 
@@ -38,7 +39,7 @@ from repro.sim.cluster import SimCluster
 from repro.sim.metrics import decisions_match
 from repro.sim.scenarios import SCENARIOS, build, build_trace
 from repro.sim.simulator import (default_perf_factory, simulate_events,
-                                 simulate_fixed_tick)
+                                 simulate_fixed_tick, simulate_fleet)
 from repro.sim.workload import WorkloadSpec, generate
 
 
@@ -172,26 +173,49 @@ def run():
     rows = []
     json_rows = []
 
-    # ---- scenario library on the event core (columnar build)
+    # ---- scenario library on the event core (columnar build); fleet
+    # scenarios run their Fleet through the multi-cluster loop instead.
+    # Runs are deterministic, so each scenario repeats and keeps the
+    # fastest wall time — events/s feeds the cross-PR trend gate
+    # (scripts/bench_trend.py) and must not encode background load.
+    repeats = int(os.environ.get("SCENARIO_SWEEP_REPEATS", "3"))
     for name, sc in sorted(SCENARIOS.items()):
-        trace, kw = build_trace(name, seed=3)
-        cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
-        ctrl = chiron(models=kw["models"]) if "models" in kw else chiron()
-        t0 = time.perf_counter()
-        res = simulate_events(trace, ctrl, cluster,
-                              max_time=kw["max_time"], warm_start=2,
-                              failures=kw.get("failures"))
-        wall = time.perf_counter() - t0
+        wall = float("inf")
+        for _ in range(max(repeats, 1)):
+            trace, kw = build_trace(name, seed=3)
+            t0 = time.perf_counter()
+            if "fleet" in kw:
+                res = simulate_fleet(trace, kw["fleet"](),
+                                     max_time=kw["max_time"], warm_start=1,
+                                     failures=kw.get("failures"),
+                                     degradations=kw.get("degradations"))
+            else:
+                cluster = SimCluster(default_perf_factory(),
+                                     max_chips=MAX_CHIPS)
+                ctrl = chiron(models=kw["models"]) if "models" in kw \
+                    else chiron()
+                res = simulate_events(trace, ctrl, cluster,
+                                      max_time=kw["max_time"], warm_start=2,
+                                      failures=kw.get("failures"),
+                                      degradations=kw.get("degradations"))
+            wall = min(wall, time.perf_counter() - t0)
         extra = {}
         if res.failures:
             extra["failures"] = res.failures
+        if res.degradations:
+            extra["degradations"] = res.degradations
+        if res.clusters:
+            extra["migrations"] = res.migrations
+            extra["egress_gb"] = round(res.egress_bytes / 1e9, 4)
+            extra["batch_shares"] = "|".join(
+                f"{c.name}={c.served_batch}" for c in res.clusters)
         rows.append(Row(f"scenario/{name}", wall * 1e6,
                         n=trace.n, dur_s=round(res.duration),
                         peak_chips=res.peak_chips,
                         hysteresis=round(res.hysteresis, 2),
                         events_per_s=round(res.n_events / max(wall, 1e-9)),
                         **extra, **_finish_stats(res, res.requests)))
-        json_rows.append({
+        jrow = {
             "scenario": name, "n_requests": trace.n,
             "wall_s": round(wall, 3),
             "events": res.n_events,
@@ -205,7 +229,26 @@ def run():
             "peak_chips": res.peak_chips,
             "hysteresis": round(res.hysteresis, 3),
             "failures": res.failures,
-        })
+            "degradations": res.degradations,
+        }
+        if res.clusters:
+            jrow["migrations"] = res.migrations
+            jrow["handbacks"] = res.handbacks
+            jrow["egress_gb"] = round(res.egress_bytes / 1e9, 5)
+            jrow["egress_cost_usd"] = round(res.egress_cost_usd, 5)
+            jrow["fleet_cost_usd"] = round(
+                sum(c.cost_usd() for c in res.clusters), 3)
+            jrow["clusters"] = {
+                c.name: {"region": c.region,
+                         "accelerator": c.accelerator,
+                         "gpu_hours": round(c.gpu_hours(), 3),
+                         "peak_chips": c.peak_chips,
+                         "served_interactive": c.served_interactive,
+                         "served_batch": c.served_batch,
+                         "slo_interactive": round(c.slo_interactive(), 4),
+                         "remote_served": c.remote_served}
+                for c in res.clusters}
+        json_rows.append(jrow)
 
     # machine-readable perf trajectory (tracked across PRs)
     out_path = os.path.join(os.path.dirname(os.path.dirname(

@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Cross-PR scenario-benchmark trend gate.
+
+Diffs a freshly-generated ``BENCH_scenarios.json`` (written by
+``benchmarks/scenario_sweep.py``) against the previously committed one and
+**fails (exit 1) when any scenario's events/s regressed by more than the
+threshold** (default 20%). New scenarios (present only in the new file)
+and removed ones are reported but never fail the gate; SLO/completion
+changes are surfaced for eyeballs, not gated (they are workload
+properties, not perf).
+
+Usage::
+
+    python scripts/bench_trend.py                  # old = git HEAD's copy
+    python scripts/bench_trend.py old.json new.json
+    BENCH_TREND_THRESHOLD=0.3 python scripts/bench_trend.py
+"""
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH = "BENCH_scenarios.json"
+
+
+def _load_committed() -> dict:
+    """The last committed BENCH_scenarios.json (git show HEAD:...)."""
+    out = subprocess.run(["git", "show", f"HEAD:{BENCH}"], cwd=ROOT,
+                         capture_output=True, text=True)
+    if out.returncode != 0:
+        raise SystemExit(f"bench_trend: no committed {BENCH} at HEAD "
+                         f"({out.stderr.strip()}); pass two paths instead")
+    return json.loads(out.stdout)
+
+
+def _rows(doc: dict) -> dict:
+    return {r["scenario"]: r for r in doc.get("scenarios", [])}
+
+
+def main(argv) -> int:
+    threshold = float(os.environ.get("BENCH_TREND_THRESHOLD", "0.2"))
+    if len(argv) == 2:
+        with open(argv[0]) as f:
+            old = json.load(f)
+        with open(argv[1]) as f:
+            new = json.load(f)
+    elif not argv:
+        old = _load_committed()
+        with open(os.path.join(ROOT, BENCH)) as f:
+            new = json.load(f)
+    else:
+        print(__doc__)
+        return 2
+
+    old_rows, new_rows = _rows(old), _rows(new)
+    failures = []
+    print(f"{'scenario':28s} {'old ev/s':>10s} {'new ev/s':>10s} "
+          f"{'delta':>8s}  note")
+    for name in sorted(set(old_rows) | set(new_rows)):
+        o, n = old_rows.get(name), new_rows.get(name)
+        if o is None:
+            print(f"{name:28s} {'-':>10s} {n['events_per_s']:10.0f} "
+                  f"{'':>8s}  new scenario")
+            continue
+        if n is None:
+            print(f"{name:28s} {o['events_per_s']:10.0f} {'-':>10s} "
+                  f"{'':>8s}  removed")
+            continue
+        delta = n["events_per_s"] / max(o["events_per_s"], 1e-9) - 1.0
+        note = ""
+        if delta < -threshold:
+            note = f"REGRESSION (> {threshold:.0%})"
+            failures.append((name, delta))
+        for k in ("slo_attainment", "completion_rate"):
+            if abs(n.get(k, 1.0) - o.get(k, 1.0)) > 1e-6:
+                note += f" {k}: {o.get(k)} -> {n.get(k)}"
+        print(f"{name:28s} {o['events_per_s']:10.0f} "
+              f"{n['events_per_s']:10.0f} {delta:+8.1%}  {note}")
+
+    if failures:
+        print(f"\nbench_trend: FAIL — {len(failures)} scenario(s) regressed "
+              f"past {threshold:.0%}: "
+              + ", ".join(f"{n} ({d:+.1%})" for n, d in failures),
+              file=sys.stderr)
+        return 1
+    print(f"\nbench_trend: ok ({len(new_rows)} scenarios, "
+          f"threshold {threshold:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -17,13 +17,15 @@ FAST_TESTS = [
     "tests/test_autoscalers.py",
     "tests/test_configs.py",
     "tests/test_event_sim.py",
+    "tests/test_fleet.py",           # multi-cluster placement/routing plane,
+                                     # degradation, deterministic multi_region
     "tests/test_global_queue.py",
     "tests/test_request_groups.py",
     "tests/test_scenarios.py",       # scenario smoke incl. multi_model_fleet,
                                      # trace_replay, instance_failures
     "tests/test_simulator.py",
     "tests/test_system.py",
-    "tests/test_trace_plane.py",     # columnar Trace + trace I/O + fleets
+    "tests/test_trace_plane.py",     # columnar Trace + trace I/O + streaming
     "tests/test_waiting_time.py",
 ]
 

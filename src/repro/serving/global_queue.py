@@ -170,6 +170,32 @@ class GlobalQueue:
                 best = h
         return (best, "heap") if best is not None else (None, None)
 
+    def drain_model(self, model: str) -> List[Request]:
+        """Remove and return every queued request for ``model`` — its
+        interactive lane, batch heap, and resume lane — preserving service
+        order within each class (interactive first). The fleet plane uses
+        this for migration hand-back: a cluster losing a model's placement
+        surrenders that model's queued work for re-routing."""
+        out: List[Request] = []
+        lane = self._ilanes.pop(model, None)
+        if lane:
+            out.extend(r for _, r in lane)
+            self._icount -= len(lane)
+        res = self._bresumes.pop(model, None)
+        if res:
+            for r in res:
+                out.append(r)
+                self._bcount -= 1
+                self._notify_remove(r)
+        heap = self._bheaps.pop(model, None)
+        if heap:
+            heap.sort()                      # deadline/FCFS service order
+            for entry in heap:
+                out.append(entry[3])
+                self._bcount -= 1
+                self._notify_remove(entry[3])
+        return out
+
     def iter_batch(self, model: Optional[str] = None) -> Iterator[Request]:
         """Queued batch requests in unspecified order (O(n))."""
         models = (model,) if model is not None else \

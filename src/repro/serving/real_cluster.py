@@ -21,7 +21,7 @@ from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.backpressure import LocalMetrics
 from repro.serving.engine import Engine, StepStats
 from repro.serving.request import Request, RequestState, RequestType
-from repro.sim.cluster import InstanceState, InstanceType
+from repro.sim.cluster import SLOW_SUSPECT_RATIO, InstanceState, InstanceType
 from repro.sim.perf_model import PerfModel
 
 _inst_ids = itertools.count(1000)
@@ -52,6 +52,19 @@ class RealInstance:
                                              else static_batch or max_slots),
                              dtype=jnp.float32)
         self._last_stats: Optional[StepStats] = None
+        # slow-node health protocol (SimInstance parity): the routing
+        # layer reads ``suspected_slow``; a real deployment would EWMA
+        # observed step time against a per-hardware baseline, but the
+        # reduced CPU engines here have no meaningful expected-ITL model,
+        # so real instances never self-report degradation
+        self.health_ewma = 1.0
+
+    def update_health(self, alpha: float = 0.5) -> None:
+        pass
+
+    @property
+    def suspected_slow(self) -> bool:
+        return self.health_ewma > SLOW_SUSPECT_RATIO
 
     # ------------------------------------------------ protocol: state
     def activate_if_ready(self, now: float) -> None:

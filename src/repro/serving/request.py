@@ -51,6 +51,9 @@ class Request:
     arrival_time: float = 0.0
     req_id: int = field(default_factory=lambda: next(_req_counter))
     model: str = "llama-8b"
+    # originating region (multi-cluster fleets): the router measures
+    # network latency / egress from here; None = single-region workload
+    origin: Optional[str] = None
 
     # lifecycle
     state: RequestState = RequestState.QUEUED

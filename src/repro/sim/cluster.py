@@ -43,6 +43,10 @@ _inst_counter = itertools.count()
 # tokens per tick (itl > dt: the tick loop makes no progress either)
 _STALLED_ITL = 1e12
 
+# health-EWMA ratio (observed ITL / healthy-model ITL) above which an
+# instance is suspected slow and routed around (slow-node degradation)
+SLOW_SUSPECT_RATIO = 1.8
+
 
 class InstanceType(enum.Enum):
     INTERACTIVE = "interactive"
@@ -91,6 +95,12 @@ class SimInstance:
         self.static_batch = static_batch
         self.running: Dict[int, SimSeq] = {}    # req_id -> seq (ins. order)
         self.created_at = now
+        # slow-node degradation: ground-truth ITL inflation (set by the
+        # injection event) and the *observed* health signal the control
+        # plane detects it with — an EWMA of observed-vs-model ITL ratio
+        # updated at control ticks. Routing avoids suspected instances.
+        self.slow_factor = 1.0
+        self.health_ewma = 1.0
         # O(1) aggregates over ``running`` (the routing/control hot path
         # queries these every pass; scanning the batch would be O(B))
         self._kv_tokens = 0.0        # fixed-tick: sum of ctx_tokens
@@ -151,7 +161,8 @@ class SimInstance:
     def current_itl(self) -> float:
         if not self.running:
             return 0.0
-        return self.perf.itl(self.n_running, max(self.mean_ctx(), 1.0))
+        return self.perf.itl(self.n_running, max(self.mean_ctx(), 1.0)) \
+            * self.slow_factor
 
     def current_throughput(self) -> float:
         if not self.running:
@@ -163,8 +174,25 @@ class SimInstance:
         spare = self.max_batch_size - self.n_running
         if spare <= 0:
             return 0.0
-        itl = self.perf.itl(self.max_batch_size, max(self.mean_ctx(), 512.0))
+        itl = self.perf.itl(self.max_batch_size, max(self.mean_ctx(), 512.0)) \
+            * self.slow_factor
         return spare / itl
+
+    def update_health(self, alpha: float = 0.5) -> None:
+        """EWMA the observed-vs-model ITL ratio (the detection signal for
+        slow-node degradation; called once per control tick). In the fluid
+        model the observed ITL is exactly ``model * slow_factor``, so the
+        ratio needs no second perf evaluation. Idle instances update too
+        (a health probe): routing refuses suspected instances, so without
+        this a drained victim could never clear its flag after recovery
+        and would strand healthy capacity forever."""
+        if not self.active:
+            return
+        self.health_ewma += alpha * (self.slow_factor - self.health_ewma)
+
+    @property
+    def suspected_slow(self) -> bool:
+        return self.health_ewma > SLOW_SUSPECT_RATIO
 
     def runs_interactive(self) -> bool:
         return self._n_interactive > 0
@@ -313,7 +341,8 @@ class SimInstance:
         if dt <= 0 or not self.active or not self.running:
             return
         self.mark_dirty()
-        itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0))
+        itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0)) \
+            * self.slow_factor
         q = self._cluster.quantize if self._cluster else 0.0
         if q > 0:
             # fixed-tick parity: int(q/itl) tokens per tick, no carry
@@ -404,7 +433,8 @@ class SimInstance:
                     (s.request.output_len - s.gen_base) - vfin) > 1e-6:
                 heapq.heappop(dh)
                 continue
-            itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0))
+            itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0)) \
+                * self.slow_factor
             q = self._cluster.quantize if self._cluster else 0.0
             if q > 0:
                 per_tick = int(q / itl + 1e-9)
@@ -423,7 +453,7 @@ class SimInstance:
         if not self.active or not self.running:
             return [], 0
         b = self.n_running
-        itl = self.perf.itl(b, max(self.mean_ctx(), 1.0))
+        itl = self.perf.itl(b, max(self.mean_ctx(), 1.0)) * self.slow_factor
         finished: List[Request] = []
         tokens_out = 0
         for s in list(self.running.values()):
@@ -479,6 +509,7 @@ class SimCluster:
         self.scale_ups = 0
         self.scale_downs = 0
         self.failures = 0            # crash-injected removals (not scaling)
+        self.degradations = 0        # slow-node injections (instance kept)
         self.chip_seconds = 0.0
         self.peak_chips = 0
         self._used_chips = 0         # maintained by provision/retire
@@ -562,6 +593,24 @@ class SimCluster:
         displaced = self._remove_instance(inst)
         self.scale_downs += 1
         return displaced
+
+    def degrade_instance(self, inst: SimInstance, factor: float,
+                         now: float) -> None:
+        """Slow-node injection: inflate the victim's ITL by ``factor``
+        without removing it. Fluid state is settled first so only future
+        decode progress runs slow; in-flight work stays put (the partial
+        failure mode crashes cannot model)."""
+        if self.event_mode:
+            inst.advance(now)        # settle at the healthy rate first
+        inst.slow_factor = factor
+        inst.mark_dirty()            # completion estimates must re-fire
+        self.degradations += 1
+
+    def recover_instance(self, inst: SimInstance, now: float) -> None:
+        if self.event_mode:
+            inst.advance(now)        # settle at the degraded rate first
+        inst.slow_factor = 1.0
+        inst.mark_dirty()
 
     def fail_instance(self, inst: SimInstance) -> List[Request]:
         """Crash an instance (failure injection): like ``retire`` but the

@@ -34,11 +34,16 @@ def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
     least-loaded spreading — keeps interactive requests concentrated so
     IBP counts genuinely-busy instances and mixed spare capacity stays
     spare (otherwise every mixed instance 'runs interactive' and the
-    interactive scaler over-provisions 3x its own additions)."""
+    interactive scaler over-provisions 3x its own additions).
+
+    Instances whose health EWMA marks them suspected-slow are routed
+    around whenever a healthy candidate exists — degradation detection
+    must not strand requests, so a fully-degraded pool still serves."""
     cands = [i for i in insts if i.active]
     if not cands:
         return None
-    return max(cands, key=lambda i: i.slot_utilization())
+    healthy = [i for i in cands if not i.suspected_slow]
+    return max(healthy or cands, key=lambda i: i.slot_utilization())
 
 
 class BaseController:
@@ -109,6 +114,9 @@ class BaseController:
         for inst in insts:
             if inst.itype == InstanceType.INTERACTIVE:
                 continue             # interactive pool never serves batch
+            if inst.suspected_slow:
+                continue             # route around degraded nodes; the
+                                     # batch scaler re-adds the capacity
             # cheap slot-full rejection before touching the queue
             while inst.active and inst.n_running < inst.max_batch_size \
                     and queue.n_batch_for(inst.model):
@@ -142,9 +150,13 @@ class ChironController(BaseController):
     group_k: int = 0                    # -1 disables request groups (Fig. 6)
     # paper §5.2: Theta is chosen from historical arrival spikes (tail
     # spike 3x -> Theta = 1/3). auto_theta re-estimates it online from the
-    # observed arrival process every `theta_refresh` seconds.
+    # observed arrival process every `theta_refresh` seconds — per model:
+    # each model runs its own refresh clock, and `theta_refresh_per_model`
+    # overrides the cadence for models whose arrival processes drift on a
+    # different timescale than the fleet default.
     auto_theta: bool = False
     theta_refresh: float = 120.0
+    theta_refresh_per_model: Optional[Dict[str, float]] = None
     # arrival history kept per model for Theta re-estimation: a rolling
     # window (recent spikes are what Theta hedges against) that also
     # bounds memory on million-request replays
@@ -157,13 +169,19 @@ class ChironController(BaseController):
             # model= was left at its default (or named a model outside the
             # fleet): the fleet's first entry becomes the primary
             self.model = self.model_list[0]
-        self._configured = frozenset(self.model_list)
+        self._configured = set(self.model_list)
         self.interactive_scalers: Dict[str, InteractiveAutoscaler] = {}
         self._batch_scalers: Dict[str, Optional[BatchAutoscaler]] = {}
         self._arrivals: Dict[str, List[float]] = {}
+        # per-model waiting-time estimators: models with divergent output
+        # distributions must not pollute each other's QLM fit. The primary
+        # model keeps the `estimator` field itself (legacy single-model
+        # behaviour is bit-identical).
+        self.estimators: Dict[str, WaitingTimeEstimator] = {
+            self.model: self.estimator}
+        self._next_theta_update: Dict[str, float] = {}
         for m in self.model_list:
             self._register_model(m)
-        self._next_theta_update = self.theta_refresh
 
     # ------------------------------------------------------------ helpers
     @property
@@ -179,11 +197,37 @@ class ChironController(BaseController):
             self.theta, self.delta, floor)
         self._batch_scalers[model] = None
         self._arrivals[model] = []
+        self._next_theta_update[model] = self._theta_cadence(model)
+
+    def _theta_cadence(self, model: str) -> float:
+        if self.theta_refresh_per_model \
+                and model in self.theta_refresh_per_model:
+            return self.theta_refresh_per_model[model]
+        return self.theta_refresh
+
+    def _estimator_for(self, model: str) -> WaitingTimeEstimator:
+        est = self.estimators.get(model)
+        if est is None:
+            est = self.estimators[model] = WaitingTimeEstimator(
+                quantile_z=self.estimator.quantile_z)
+        return est
 
     def _ensure_model(self, model: str) -> None:
         if model not in self.interactive_scalers:
             self.model_list.append(model)
             self._register_model(model)
+
+    def set_model_placed(self, model: str, placed: bool) -> None:
+        """Placement pin from a fleet-level placer: a placed model keeps
+        the configured instance floor (a warm foothold); unplacing drops
+        the floor to zero so the model's local fleet drains away."""
+        self._ensure_model(model)
+        if placed:
+            self._configured.add(model)
+        else:
+            self._configured.discard(model)
+        self.interactive_scalers[model].min_instances = \
+            self.min_instances if placed else 0
 
     def _mk_local(self, slo: float) -> Optional[LocalAutoscaler]:
         if not self.local_enabled:
@@ -213,11 +257,16 @@ class ChironController(BaseController):
             self._arrivals[req.model].append(now)
 
     def _refresh_theta(self, now: float) -> None:
-        if not self.auto_theta or now < self._next_theta_update:
+        """Per-model Theta re-estimation: every model runs its own refresh
+        clock (its own cadence), so a model whose arrival process shifts
+        quickly is not held hostage by the fleet-wide schedule."""
+        if not self.auto_theta:
             return
-        self._next_theta_update = now + self.theta_refresh
         from repro.sim.workload import arrival_spikes
         for model, arrivals in self._arrivals.items():
+            if now < self._next_theta_update[model]:
+                continue
+            self._next_theta_update[model] = now + self._theta_cadence(model)
             if len(arrivals) > self.theta_history:   # rolling window
                 del arrivals[:-self.theta_history]
             if len(arrivals) < 20:
@@ -242,9 +291,11 @@ class ChironController(BaseController):
                     or queue.n_batch_for(m):
                 self._provision(cluster, InstanceType.MIXED, now, m)
 
-        # 1. local autoscaling on every instance
-        if self.local_enabled:
-            for inst in cluster.active_instances():
+        # 1. local autoscaling + health tracking on every instance (the
+        # health EWMA is the slow-node detection signal routing reads)
+        for inst in cluster.active_instances():
+            inst.update_health()
+            if self.local_enabled:
                 inst.update_local_autoscaler()
 
         # 2./3. one global loop per model, all sharing the chip budget.
@@ -291,7 +342,7 @@ class ChironController(BaseController):
         scaler = self._batch_scalers[model]
         if scaler is None:
             scaler = self._batch_scalers[model] = BatchAutoscaler(
-                self.estimator,
+                self._estimator_for(model),
                 self.batch_instance_throughput(cluster, model),
                 group_k=self.group_k, model=model)
         spare = sum(i.spare_throughput()
@@ -327,7 +378,9 @@ class ChironController(BaseController):
                     break               # shared chip budget exhausted
 
     def observe_completion(self, req: Request) -> None:
-        self.estimator.output_model.observe(req.output_len)
+        # per-model output-length fit: each model's QLM estimator only
+        # sees its own completions
+        self._estimator_for(req.model).output_model.observe(req.output_len)
 
 
 @dataclass

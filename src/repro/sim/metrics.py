@@ -1,7 +1,8 @@
-"""Experiment metrics: SLO attainment, throughput, GPU efficiency, hysteresis."""
+"""Experiment metrics: SLO attainment, throughput, GPU efficiency,
+hysteresis — plus per-cluster/per-region rollups for fleet runs."""
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Tuple
 
 from repro.serving.request import Request, RequestState, RequestType
@@ -20,6 +21,48 @@ class TimelinePoint:
 
 
 @dataclass
+class ClusterStats:
+    """Per-cluster rollup of a fleet run (attributed at completion time —
+    the cluster whose instance finished the request gets the credit)."""
+    name: str
+    region: str = ""
+    accelerator: str = ""
+    cost_per_chip_hour: float = 1.0
+    chip_seconds: float = 0.0
+    peak_chips: int = 0
+    scale_ups: int = 0
+    scale_downs: int = 0
+    failures: int = 0
+    degradations: int = 0
+    served_interactive: int = 0
+    served_batch: int = 0
+    slo_met_interactive: int = 0
+    slo_met_batch: int = 0
+    # cross-region assignment events (routing, drain re-routes, and
+    # saturation hand-offs each count — a re-routed request's prompt
+    # crosses a region boundary again, so it may tally more than once)
+    remote_served: int = 0
+    migrations_in: int = 0        # model placements copied into here
+    migrations_out: int = 0       # placements drained away
+    handbacks: int = 0            # saturated-queue work re-routed elsewhere
+    egress_bytes: float = 0.0     # bytes this cluster's region sent out
+
+    def gpu_hours(self) -> float:
+        return self.chip_seconds / 3600.0
+
+    def cost_usd(self) -> float:
+        return self.gpu_hours() * self.cost_per_chip_hour
+
+    def slo_interactive(self) -> float:
+        return self.slo_met_interactive / self.served_interactive \
+            if self.served_interactive else 1.0
+
+    def slo_batch(self) -> float:
+        return self.slo_met_batch / self.served_batch \
+            if self.served_batch else 1.0
+
+
+@dataclass
 class RunResult:
     requests: List[Request]
     timeline: List[TimelinePoint]
@@ -30,6 +73,13 @@ class RunResult:
     duration: float
     failures: int = 0               # injected instance crashes
     n_events: int = 0               # event-core loop events (0: fixed tick)
+    degradations: int = 0           # injected slow-node events
+    # --- fleet runs (simulate_fleet) ---
+    clusters: List[ClusterStats] = field(default_factory=list)
+    migrations: int = 0             # placement copies scheduled
+    handbacks: int = 0              # saturated work re-routed
+    egress_bytes: float = 0.0       # cross-region bytes (weights + tokens)
+    egress_cost_usd: float = 0.0
 
     # ------------------------------------------------------------ SLOs
     def _done(self, rtype=None, model=None) -> List[Request]:
@@ -144,6 +194,26 @@ class RunResult:
                 out[f"slo_model:{m}"] = v
         if self.failures:
             out["failures"] = self.failures
+        if self.degradations:
+            out["degradations"] = self.degradations
+        if self.clusters:               # fleet run: per-cluster/region rollups
+            out["migrations"] = self.migrations
+            out["handbacks"] = self.handbacks
+            out["egress_gb"] = self.egress_bytes / 1e9
+            out["egress_cost_usd"] = self.egress_cost_usd
+            out["fleet_cost_usd"] = sum(c.cost_usd() for c in self.clusters)
+            total_batch = sum(c.served_batch for c in self.clusters)
+            regions: Dict[str, float] = {}
+            for c in self.clusters:
+                out[f"cluster:{c.name}:gpu_hours"] = c.gpu_hours()
+                out[f"cluster:{c.name}:peak_chips"] = c.peak_chips
+                out[f"cluster:{c.name}:slo_interactive"] = c.slo_interactive()
+                out[f"cluster:{c.name}:batch_share"] = \
+                    c.served_batch / total_batch if total_batch else 0.0
+                regions[c.region] = regions.get(c.region, 0.0) \
+                    + c.gpu_hours()
+            for r, gh in regions.items():
+                out[f"region:{r}:gpu_hours"] = gh
         return out
 
 

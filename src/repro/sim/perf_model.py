@@ -49,7 +49,15 @@ _LOAD_BW = 2e9               # bytes/s host->HBM per chip during model load
 
 @dataclass
 class PerfModel:
-    """Latency/throughput/memory responses for one (model, instance) pair."""
+    """Latency/throughput/memory responses for one (model, instance) pair.
+
+    Accelerator variants (heterogeneous fleets): the ``*_scale`` fields
+    derate or boost the v5e-class baseline constants per chip generation —
+    a fleet cluster built on a faster part passes ``flops_scale`` /
+    ``hbm_bw_scale`` / ``hbm_bytes_scale`` > 1 and every latency, capacity,
+    and throughput response shifts coherently (see
+    ``repro.sim.fleet.ACCELERATORS``).
+    """
     model_name: str
     chips: int = 0
     cfg: ModelConfig = None
@@ -60,6 +68,10 @@ class PerfModel:
     prefix_hit_tokens: int = 512
     spec_draft_overhead: float = 0.15
     spec_accept_speedup: float = 2.0
+    # accelerator-generation scaling vs the v5e-class baseline constants
+    flops_scale: float = 1.0
+    hbm_bw_scale: float = 1.0
+    hbm_bytes_scale: float = 1.0
 
     def __post_init__(self):
         self.cfg = self.cfg or get_config(self.model_name)
@@ -70,14 +82,16 @@ class PerfModel:
         # The hot-path responses (itl / can_admit) run millions of times per
         # simulation; fold every shape-derived constant once.
         self._kv_per_tok = self._kv_bytes_per_token()
-        free = self.chips * HBM_BYTES - self.weight_bytes
+        free = self.chips * HBM_BYTES * self.hbm_bytes_scale \
+            - self.weight_bytes
         self._kv_cap = float("inf") if self._kv_per_tok <= 0 else \
             max(free, 0) * 0.9 / self._kv_per_tok   # 10% activation headroom
-        mem_bw = self.chips * HBM_BW * MBU
+        mem_bw = self.chips * HBM_BW * self.hbm_bw_scale * MBU
+        self._flops_per_s = self.chips * PEAK_FLOPS * self.flops_scale \
+            * MFU_DECODE
         self._mem_t_base = self.weight_bytes / mem_bw
         self._mem_t_per_kvtok = self._kv_per_tok / mem_bw
-        self._comp_t_per_seq = 2 * self.n_active / \
-            (self.chips * PEAK_FLOPS * MFU_DECODE)
+        self._comp_t_per_seq = 2 * self.n_active / self._flops_per_s
         self._coll_t = 0.0
         if self.chips > 1:
             coll_bytes = 2 * self.cfg.d_model * BYTES_PER_PARAM * \
@@ -107,7 +121,7 @@ class PerfModel:
         if self.prefix_caching:
             eff_len = max(prompt_len - self.prefix_hit_tokens, 16)
         flops = 2 * self.n_active * eff_len
-        return flops / (self.chips * PEAK_FLOPS * MFU_DECODE) + STEP_OVERHEAD
+        return flops / self._flops_per_s + STEP_OVERHEAD
 
     def itl(self, batch_size: int, mean_ctx: float = 1024.0) -> float:
         """Inter-token latency at a given running batch size."""

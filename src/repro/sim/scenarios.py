@@ -3,8 +3,10 @@
 Each scenario builds a columnar :class:`~repro.sim.workload.Trace`
 exercising a distinct control-plane regime — diurnal capacity tracking,
 spike absorption (Theta), multi-tenant SLO mixes, heavy-tail output
-lengths, batch-backlog drains, multi-model fleets, trace replay, and
-instance-failure injection — in the trace-driven multi-SLO evaluation
+lengths, batch-backlog drains, multi-model fleets, trace replay,
+instance-failure injection, slow-node degradation, and the multi-cluster
+fleet plane (region-aware routing, batch consolidation, spillover,
+heterogeneous accelerators) — in the trace-driven multi-SLO evaluation
 style of SLOs-Serve (arXiv:2504.08784) and the forecast/diurnal workloads
 of SageServe (arXiv:2502.14617). Generation is fully vectorized (NumPy
 column fills, no per-request Python loop), so million-request scenarios
@@ -22,9 +24,14 @@ Every builder takes ``(n_requests, seed, **overrides)`` and returns
 objects for legacy callers while ``build_trace`` hands the columnar form
 straight to ``simulate_events`` (lazy chunked materialization).
 ``sim_kwargs`` carries a suggested ``max_time`` and, where relevant,
-a ``failures`` :class:`~repro.sim.simulator.FailurePlan` to pass to
-``simulate_events`` and a ``models`` tuple for configuring a multi-model
-controller (``ChironController(models=...)``).
+a ``failures`` :class:`~repro.sim.simulator.FailurePlan` /
+``degradations`` :class:`~repro.sim.simulator.DegradationPlan` to pass to
+``simulate_events``, a ``models`` tuple for configuring a multi-model
+controller (``ChironController(models=...)``), and — for the fleet
+scenarios — a zero-arg ``fleet`` factory building the
+:class:`~repro.sim.fleet.Fleet` that ``simulate_fleet`` drives (the trace
+itself stays single-cluster-compatible: origins are simply ignored by the
+single-cluster engines).
 """
 from __future__ import annotations
 
@@ -239,12 +246,25 @@ def multi_model_fleet(n_requests: int, seed: int = 0, *,
           default_n=20000)
 def trace_replay(n_requests: int, seed: int = 0, *,
                  path: Optional[str] = None,
+                 stream: bool = False,
+                 chunk_requests: int = 65536,
+                 max_time: Optional[float] = None,
                  arrival_rate: float = 60.0,
                  code_frac: float = 0.35,
                  interactive_frac: float = 1.0,
                  slack: float = 600.0) -> Tuple[Trace, SimKwargs]:
     if path is not None:
-        from repro.sim.trace_io import load_trace
+        from repro.sim.trace_io import load_trace, stream_trace
+        if stream:
+            # windowed replay: the file (gzip ok) is parsed in chunks as
+            # the simulation consumes it — the multi-day-trace mode. The
+            # horizon is unknowable without reading the whole file, so
+            # pass ``max_time`` yourself to cap a run (default: run to
+            # completion).
+            src = stream_trace(path, chunk_requests=chunk_requests,
+                               max_requests=n_requests)
+            return src, {"max_time": float("inf") if max_time is None
+                         else max_time}
         trace = load_trace(path, max_requests=n_requests)
         # deliberately no "models" kwarg: a production trace may carry
         # hundreds of transient deployments, and pre-configuring them all
@@ -274,6 +294,148 @@ def trace_replay(n_requests: int, seed: int = 0, *,
     cls = rng.random(n_requests) < interactive_frac
     trace = make_trace(times, ins, outs, cls)
     return trace, {"max_time": trace.duration + slack}
+
+
+@register("slow_nodes",
+          "steady interactive stream with injected slow-node degradation "
+          "(ITL inflation, not removal): detection via the health EWMA, "
+          "routing must steer around the victims until they recover",
+          default_n=3000)
+def slow_nodes(n_requests: int, seed: int = 0, *,
+               arrival_rate: float = 12.0,
+               interactive_frac: float = 0.9,
+               n_degradations: int = 3,
+               factor: float = 4.0,
+               duration: float = 240.0,
+               batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.simulator import DegradationPlan
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo)
+    span = trace.duration
+    deg_times = np.sort(span * (0.15 + 0.6 * rng.random(n_degradations)))
+    return trace, {"max_time": span + 900.0,
+                   "degradations": DegradationPlan(
+                       deg_times.tolist(), factor=factor,
+                       duration=duration, seed=seed)}
+
+
+# ---------------------------------------------------------- fleet scenarios
+def _origin_column(rng: np.random.Generator, n: int,
+                   origins: Sequence[str],
+                   weights: Sequence[float]) -> np.ndarray:
+    w = np.asarray(weights, dtype=np.float64)
+    return rng.choice(len(origins), size=n, p=w / w.sum()).astype(np.int32)
+
+
+@register("multi_region",
+          "three regional clusters (cheap economy chips in us) under the "
+          "fleet plane: the placer consolidates batch onto the cheapest "
+          "cluster while each region's interactive traffic serves locally",
+          default_n=3000)
+def multi_region(n_requests: int, seed: int = 0, *,
+                 arrival_rate: float = 12.0,
+                 interactive_frac: float = 0.7,
+                 batch_ttft_slo: float = 900.0,
+                 chips_per_cluster: int = 160) -> Tuple[Trace, SimKwargs]:
+    regions = ("us", "eu", "ap")
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    oidx = _origin_column(rng, n_requests, regions, (0.4, 0.35, 0.25))
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo,
+                       origin_idx=oidx, origins=regions)
+
+    def fleet():
+        from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology
+        specs = [
+            ClusterSpec("us-central", "us", max_chips=chips_per_cluster,
+                        accelerator="v4e"),     # cheapest $/token
+            ClusterSpec("eu-west", "eu", max_chips=chips_per_cluster),
+            ClusterSpec("ap-south", "ap", max_chips=chips_per_cluster),
+        ]
+        topo = FleetTopology(regions, latency={
+            ("us", "eu"): 0.06, ("us", "ap"): 0.11, ("eu", "ap"): 0.09})
+        return Fleet(specs, topo, models=("llama-8b",))
+
+    return trace, {"max_time": trace.duration + 900.0, "fleet": fleet}
+
+
+@register("regional_spillover",
+          "a small regional cluster hit by an origin-local spike that "
+          "exceeds its chip budget: the router must spill interactive "
+          "work to the neighbouring region and hand it back afterwards",
+          default_n=3000)
+def regional_spillover(n_requests: int, seed: int = 0, *,
+                       base_rate: float = 4.0, spike_rate: float = 240.0,
+                       spike_frac: float = 0.5,
+                       small_chips: int = 4,
+                       big_chips: int = 240) -> Tuple[Trace, SimKwargs]:
+    regions = ("us", "eu")
+    rng = np.random.default_rng(seed)
+    n_spike = int(n_requests * spike_frac)
+    n_base = n_requests - n_spike
+    base_t = np.cumsum(rng.exponential(1.0 / base_rate, n_base))
+    ins_b, outs_b = _token_lengths(rng, n_base)
+    base = make_trace(base_t, ins_b, outs_b, np.ones(n_base, dtype=bool),
+                      origin_idx=_origin_column(rng, n_base, regions,
+                                                (0.7, 0.3)),
+                      origins=regions, sort=False)
+    # the spike lands mid-trace, entirely us-origin, far above what the
+    # small us cluster can absorb
+    t0 = 0.4 * float(base_t[-1])
+    spike_t = t0 + np.cumsum(rng.exponential(1.0 / spike_rate, n_spike))
+    ins_s, outs_s = _token_lengths(rng, n_spike)
+    spike = make_trace(spike_t, ins_s, outs_s, np.ones(n_spike, dtype=bool),
+                       origin_idx=np.zeros(n_spike, dtype=np.int32),
+                       origins=regions, sort=False)
+    trace = Trace.concat([base, spike]).sorted_by_arrival()
+
+    def fleet():
+        from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology
+        specs = [ClusterSpec("us-edge", "us", max_chips=small_chips),
+                 ClusterSpec("eu-hub", "eu", max_chips=big_chips)]
+        topo = FleetTopology(regions, latency={("us", "eu"): 0.07})
+        return Fleet(specs, topo, models=("llama-8b",))
+
+    return trace, {"max_time": trace.duration + 900.0, "fleet": fleet}
+
+
+@register("heterogeneous_accelerators",
+          "one region, three chip generations (premium/baseline/economy): "
+          "cost-per-token routing should pack batch onto the economy part "
+          "and keep interactive latency on the fast parts",
+          default_n=3000)
+def heterogeneous_accelerators(n_requests: int, seed: int = 0, *,
+                               arrival_rate: float = 12.0,
+                               interactive_frac: float = 0.55,
+                               batch_ttft_slo: float = 900.0) \
+        -> Tuple[Trace, SimKwargs]:
+    regions = ("us",)
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo,
+                       origin_idx=np.zeros(n_requests, dtype=np.int32),
+                       origins=regions)
+
+    def fleet():
+        from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology
+        specs = [
+            ClusterSpec("us-premium", "us", max_chips=64,
+                        accelerator="v5p"),
+            ClusterSpec("us-baseline", "us", max_chips=128,
+                        accelerator="v5e"),
+            ClusterSpec("us-economy", "us", max_chips=192,
+                        accelerator="v4e"),
+        ]
+        return Fleet(specs, FleetTopology(regions), models=("llama-8b",))
+
+    return trace, {"max_time": trace.duration + 900.0, "fleet": fleet}
 
 
 @register("instance_failures",

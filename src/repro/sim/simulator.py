@@ -19,6 +19,14 @@ event core crashes a uniformly-drawn active instance at each time — the
 instance is removed (chips freed, ``cluster.failures`` counted separately
 from autoscaling actions), its in-flight requests lose their KV and
 re-queue, and the control hierarchy heals the fleet on its next tick.
+``degradations=DegradationPlan(...)`` is the partial-failure sibling: the
+victim stays up but its ITL inflates by a factor for a while; the control
+plane detects it through the health EWMA and routes around it.
+
+Multi-cluster fleets: ``simulate_fleet`` drives a ``repro.sim.fleet``
+Fleet — several clusters, each with its own queue and Chiron hierarchy —
+off one shared event heap, adding cross-region network-delay events for
+routed arrivals and placement warm-up events for model migrations.
 
 ``simulate_fixed_tick`` is the original discrete-time loop (default tick
 0.25 s), kept as the equivalence reference and quantization baseline.
@@ -31,7 +39,7 @@ import heapq
 import itertools
 import math
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -41,14 +49,15 @@ from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.metrics import RunResult, TimelinePoint
 from repro.sim.perf_model import PerfModel
-from repro.sim.workload import Trace
+from repro.sim.workload import Trace, TraceStream
 
 # heap-event kinds; the tuple position makes READY sort before COMPLETION
 # and COMPLETION before FAILURE at equal timestamps (an instance activates
-# before its estimates fire; finishes land before the crash takes them)
-_READY, _COMPLETION, _FAIL = 0, 1, 2
+# before its estimates fire; finishes land before the crash takes them).
+# _NET (cross-region arrival) and _WARM (placement warm-up) are fleet-only.
+_READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM = range(7)
 
-RequestSource = Union[Sequence[Request], Trace]
+RequestSource = Union[Sequence[Request], Trace, TraceStream]
 
 
 @dataclass
@@ -64,33 +73,71 @@ class FailurePlan:
         return sorted(float(t) for t in self.times)
 
 
+@dataclass
+class DegradationPlan:
+    """Slow-node schedule: at each time in ``times`` one uniformly-drawn
+    *healthy* active instance has its ITL inflated by ``factor`` for
+    ``duration`` seconds (then it recovers). Unlike a crash the instance
+    keeps its work — the failure mode is silent throughput loss, which the
+    control plane must *detect* (health EWMA) rather than observe as a
+    membership change. Victim draws are seeded like :class:`FailurePlan`."""
+    times: Sequence[float]
+    factor: float = 4.0
+    duration: float = 300.0
+    seed: int = 0
+
+    def sorted_times(self) -> List[float]:
+        return sorted(float(t) for t in self.times)
+
+
 class _RequestCursor:
-    """Arrival-ordered request source over a list or a columnar Trace.
+    """Arrival-ordered request source over a list, a columnar Trace, or a
+    chunked :class:`TraceStream`.
 
     Trace mode materializes ``Request`` objects in chunks as the arrival
     loop consumes them — peeking the next arrival time reads the float
-    column directly, so unarrived requests cost no Python objects.
+    column directly, so unarrived requests cost no Python objects. Stream
+    mode pulls the next file chunk only when the previous one is consumed,
+    so a multi-day replay never holds the whole file columnar.
     """
 
     def __init__(self, source: RequestSource, chunk: int = 16384):
         self._chunk = chunk
+        self._trace = None
+        self._stream = None
         if isinstance(source, Trace):
             self._trace = source.sorted_by_arrival()
             self._times = self._trace.arrival
             self.n = self._trace.n
             self.all: List[Request] = []
+        elif isinstance(source, TraceStream):
+            self._stream = source
+            self.n = 0                   # grows as chunks are pulled
+            self.all = []
         else:
-            self._trace = None
             self.all = sorted(source, key=lambda r: r.arrival_time)
             self.n = len(self.all)
         self._i = 0
 
+    def _pull_chunk(self) -> bool:
+        """Stream mode: materialize the next chunk; False at EOF."""
+        try:
+            tr = next(self._stream)
+        except StopIteration:
+            self._stream = None
+            return False
+        self.all.extend(tr.materialize())
+        self.n += tr.n
+        return True
+
     @property
     def exhausted(self) -> bool:
+        if self._i >= self.n and self._stream is not None:
+            self._pull_chunk()
         return self._i >= self.n
 
     def peek_time(self) -> float:
-        if self._i >= self.n:
+        if self.exhausted:
             return float("inf")
         if self._trace is not None:
             return float(self._times[self._i])
@@ -108,6 +155,8 @@ class _RequestCursor:
         """Every request (materializing any unserved tail) for RunResult."""
         if self._trace is not None and len(self.all) < self.n:
             self.all.extend(self._trace.materialize(len(self.all), self.n))
+        while self._stream is not None:
+            self._pull_chunk()
         return self.all
 
 
@@ -134,7 +183,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     timeline_every: float = 1.0,
                     completion_grain: float = 0.25,
                     quantize: float = 0.0,
-                    failures: Optional[FailurePlan] = None) -> RunResult:
+                    failures: Optional[FailurePlan] = None,
+                    degradations: Optional[DegradationPlan] = None) \
+        -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
     non-empty ticks yet batches arrivals/completions exactly like a
@@ -166,6 +217,11 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         fail_rng = np.random.default_rng(failures.seed)
         for tf in failures.sorted_times():
             heapq.heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
+    deg_rng = None
+    if degradations is not None:
+        deg_rng = np.random.default_rng(degradations.seed)
+        for td in degradations.sorted_times():
+            heapq.heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
 
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
@@ -223,7 +279,10 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             n_events += 1
             if kind == _READY:
                 if inst.state == InstanceState.LOADING:
-                    inst.activate_if_ready(t)
+                    # the event was scheduled at ready_time exactly; t may
+                    # sit an epsilon below it (accumulated control-clock
+                    # float error) and the event must not be lost
+                    inst.activate_if_ready(max(t, inst.ready_time))
                     inst.mark_dirty()
                     freed.append(inst)
                     changed = True
@@ -244,6 +303,23 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     for r in displaced:
                         queue.requeue(r)
                     cluster.dirty.discard(victim)
+                    changed = True
+            elif kind == _DEGRADE:
+                # slow a uniformly-drawn healthy active instance; recovery
+                # is scheduled as its own event
+                cands = [i for i in cluster.instances
+                         if i.active and i.slow_factor == 1.0]
+                if cands:
+                    cands.sort(key=lambda i: i.id)
+                    victim = cands[int(deg_rng.integers(len(cands)))]
+                    cluster.degrade_instance(victim, degradations.factor, t)
+                    heapq.heappush(heap, (t + degradations.duration,
+                                          _RECOVER, next(ev_seq), victim, 0))
+                    changed = True
+            elif kind == _RECOVER:
+                if inst.state != InstanceState.RETIRED \
+                        and inst.slow_factor != 1.0:
+                    cluster.recover_instance(inst, t)
                     changed = True
             elif epoch == inst._epoch and inst.state == InstanceState.ACTIVE:
                 inst.advance(t)
@@ -325,7 +401,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                      scale_ups=cluster.scale_ups,
                      scale_downs=cluster.scale_downs,
                      duration=t, failures=cluster.failures,
-                     n_events=n_events)
+                     n_events=n_events,
+                     degradations=cluster.degradations)
 
 
 def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
@@ -408,25 +485,331 @@ def simulate(requests: RequestSource, controller: BaseController,
              control_interval: float = 1.0, max_time: float = 7200.0,
              warm_start: int = 0, timeline_every: float = 1.0,
              engine: str = "event",
-             failures: Optional[FailurePlan] = None) -> RunResult:
+             failures: Optional[FailurePlan] = None,
+             degradations: Optional[DegradationPlan] = None) -> RunResult:
     """Compatibility wrapper: dispatch to the event-driven core (default)
     or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies;
-    failure injection needs the event core).
+    failure/degradation injection needs the event core).
     """
     if engine == "event":
         return simulate_events(requests, controller, cluster,
                                control_interval=control_interval,
                                max_time=max_time, warm_start=warm_start,
                                timeline_every=timeline_every,
-                               failures=failures)
+                               failures=failures, degradations=degradations)
     if engine == "fixed":
-        if failures is not None:
+        if failures is not None or degradations is not None:
             raise ValueError("failure injection requires engine='event'")
         return simulate_fixed_tick(requests, controller, cluster, dt=dt,
                                    control_interval=control_interval,
                                    max_time=max_time, warm_start=warm_start,
                                    timeline_every=timeline_every)
     raise ValueError(f"unknown engine {engine!r} (want 'event' or 'fixed')")
+
+
+def simulate_fleet(requests: RequestSource, fleet, *,
+                   control_interval: float = 1.0, max_time: float = 7200.0,
+                   warm_start: int = 0, timeline_every: float = 5.0,
+                   completion_grain: float = 0.25,
+                   failures: Optional[FailurePlan] = None,
+                   degradations: Optional[DegradationPlan] = None) \
+        -> RunResult:
+    """Multi-cluster event loop: one shared heap drives every cluster in a
+    :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
+    hierarchy (the paper's two tiers), under the fleet's Router/GlobalPlacer
+    (the third tier).
+
+    Beyond the single-cluster event kinds, the heap carries cross-region
+    network-delay events (a routed arrival reaches a remote cluster's
+    queue only after the origin->region latency — TTFT accounting then
+    includes the hop for free) and placement warm-up events (a migrated
+    model serves only after its weights transferred and loaded).
+    ``warm_start`` pre-provisions that many instances *per cluster* over
+    the models initially resident there. Failure/degradation victims are
+    drawn uniformly over the whole fleet's active instances.
+
+    Reported ``peak_chips`` is the sum of per-cluster peaks (budgets are
+    disjoint, so coincident peaks are what capacity planning needs).
+    """
+    cursor = _RequestCursor(requests)
+    clusters = list(fleet.clusters)
+    by_sim = {id(fc.cluster): fc for fc in clusters}
+    t = 0.0
+    for fc in clusters:
+        fc.cluster.event_mode = True
+        fc.cluster.now = 0.0
+        fc.cluster.completion_grain = completion_grain
+        _warm_start(fc.controller, fc.cluster, t, warm_start)
+
+    heap: list = []                  # (time, kind, seq, payload, epoch)
+    ev_seq = itertools.count()
+    ready_scheduled: set = set()     # instance ids with a READY event pushed
+    timeline: List[TimelinePoint] = []
+    next_control = 0.0
+    next_place = fleet.placer.interval
+    control_parked = False
+    next_timeline = 0.0
+    last_sample_t = 0.0
+    n_events = 0
+    pending_net = 0                  # in-flight cross-region arrivals
+    eps = 1e-12
+
+    fail_rng = None
+    if failures is not None:
+        fail_rng = np.random.default_rng(failures.seed)
+        for tf in failures.sorted_times():
+            heapq.heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
+    deg_rng = None
+    if degradations is not None:
+        deg_rng = np.random.default_rng(degradations.seed)
+        for td in degradations.sorted_times():
+            heapq.heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
+
+    def emit_warm(delay: float, payload) -> None:
+        heapq.heappush(heap, (t + max(delay, 0.0), _WARM,
+                              next(ev_seq), payload, 0))
+
+    def _enqueue(fc, req: Request, now: float) -> None:
+        fc.queue.push(req)
+        fc.controller.observe_arrival(req, now)
+
+    def _dispatch(req: Request, now: float) -> None:
+        nonlocal pending_net
+        fc, delay = fleet.route(req, now)
+        if delay > eps:
+            heapq.heappush(heap, (now + delay, _NET, next(ev_seq),
+                                  (req, fc), 0))
+            pending_net += 1
+        else:
+            _enqueue(fc, req, now)
+
+    def _all_active():
+        out = [i for fc in clusters for i in fc.cluster.instances
+               if i.active]
+        out.sort(key=lambda i: i.id)
+        return out
+
+    def _sample(now: float) -> None:
+        nonlocal last_sample_t, next_timeline
+        toks = sum(fc.cluster.take_tokens() for fc in clusters)
+        rate = toks / max(now - last_sample_t, 1e-9)
+        timeline.append(TimelinePoint(
+            now,
+            sum(len(fc.cluster.by_type(InstanceType.INTERACTIVE))
+                for fc in clusters),
+            sum(len(fc.cluster.by_type(InstanceType.MIXED))
+                for fc in clusters),
+            sum(len(fc.cluster.by_type(InstanceType.BATCH))
+                for fc in clusters),
+            sum(fc.cluster.used_chips() for fc in clusters),
+            sum(fc.queue.n_interactive for fc in clusters),
+            sum(fc.queue.n_batch for fc in clusters), rate))
+        last_sample_t = now
+        next_timeline = now + timeline_every
+
+    while True:
+        # ---- termination: everything arrived, landed, and finished
+        if cursor.exhausted and pending_net == 0 and \
+                all(len(fc.queue) == 0 and fc.cluster.total_running == 0
+                    for fc in clusters):
+            break
+
+        # ---- next event time across all sources
+        t_next = cursor.peek_time()
+        if heap and heap[0][0] < t_next:
+            t_next = heap[0][0]
+        if next_control < t_next:
+            t_next = next_control
+        if not control_parked:
+            if next_place < t_next:
+                t_next = next_place
+            if next_timeline < t_next:
+                t_next = next_timeline
+        if t_next > max_time or t_next == float("inf"):
+            for fc in clusters:
+                fc.cluster.advance_time(max_time)
+            t = max_time
+            break
+        t = t_next
+        for fc in clusters:
+            fc.cluster.advance_time(t)
+        changed = False
+        freed: Dict[int, List] = {}      # id(fc) -> instances w/ capacity
+
+        # 1. arrivals due at t: forecast observation, then route — local
+        #    arrivals enqueue now, cross-region ones after the network hop
+        while cursor.peek_time() <= t + eps:
+            req = cursor.pop()
+            fleet.observe_arrival(req, t)
+            _dispatch(req, t)
+            changed = True
+            n_events += 1
+
+        # 2. heap events due at t
+        while heap and heap[0][0] <= t + eps:
+            _, kind, _, payload, epoch = heapq.heappop(heap)
+            n_events += 1
+            if kind == _NET:
+                req, fc = payload
+                pending_net -= 1
+                _enqueue(fc, req, t)
+                changed = True
+            elif kind == _WARM:
+                fleet.on_warm(payload, t)
+                changed = True
+            elif kind == _READY:
+                inst = payload
+                if inst.state == InstanceState.LOADING:
+                    # scheduled at ready_time exactly; t may sit an epsilon
+                    # below it (see simulate_events) — never lose the event
+                    inst.activate_if_ready(max(t, inst.ready_time))
+                    inst.mark_dirty()
+                    freed.setdefault(id(by_sim[id(inst._cluster)]),
+                                     []).append(inst)
+                    changed = True
+            elif kind == _FAIL:
+                active = _all_active()
+                if active:
+                    victim = active[int(fail_rng.integers(len(active)))]
+                    fc = by_sim[id(victim._cluster)]
+                    flist = freed.get(id(fc))
+                    if flist and victim in flist:
+                        flist.remove(victim)
+                    displaced = fc.cluster.fail_instance(victim)
+                    for r in victim.drain_finished():
+                        fc.controller.observe_completion(r)
+                        fleet.observe_completion(r, fc, t)
+                    for r in displaced:
+                        fc.queue.requeue(r)
+                    fc.cluster.dirty.discard(victim)
+                    changed = True
+            elif kind == _DEGRADE:
+                cands = [i for i in _all_active() if i.slow_factor == 1.0]
+                if cands:
+                    victim = cands[int(deg_rng.integers(len(cands)))]
+                    victim._cluster.degrade_instance(
+                        victim, degradations.factor, t)
+                    heapq.heappush(heap, (t + degradations.duration,
+                                          _RECOVER, next(ev_seq), victim, 0))
+                    changed = True
+            elif kind == _RECOVER:
+                inst = payload
+                if inst.state != InstanceState.RETIRED \
+                        and inst.slow_factor != 1.0:
+                    inst._cluster.recover_instance(inst, t)
+                    changed = True
+            else:                        # completion estimate
+                inst = payload
+                if epoch == inst._epoch \
+                        and inst.state == InstanceState.ACTIVE:
+                    inst.advance(t)
+                    freed.setdefault(id(by_sim[id(inst._cluster)]),
+                                     []).append(inst)
+                    changed = True
+
+        # a parked control loop resumes as soon as anything happens
+        if control_parked and changed:
+            next_control = t
+            control_parked = False
+
+        # 3. control tick: every cluster runs its own Chiron hierarchy on
+        #    its own queue against its own chip budget
+        ran_control = t >= next_control - eps
+        if ran_control:
+            n_events += 1
+            pre = post = 0
+            for fc in clusters:
+                for inst in fc.cluster.instances:
+                    inst.advance(t)
+                pre += len(fc.cluster.instances) + fc.cluster.scale_ups \
+                    + fc.cluster.scale_downs
+                fc.controller.control(fc.cluster, fc.queue, t)
+                for inst in fc.cluster.instances:
+                    if inst.state == InstanceState.LOADING and \
+                            inst.id not in ready_scheduled:
+                        heapq.heappush(heap, (inst.ready_time, _READY,
+                                              next(ev_seq), inst, 0))
+                        ready_scheduled.add(inst.id)
+                post += len(fc.cluster.instances) + fc.cluster.scale_ups \
+                    + fc.cluster.scale_downs
+            quiescent = (pre == post and pending_net == 0
+                         and all(len(fc.queue) == 0
+                                 and fc.cluster.total_running == 0
+                                 and all(i.state != InstanceState.LOADING
+                                         for i in fc.cluster.instances)
+                                 for fc in clusters))
+            if quiescent:
+                # nothing can change before the next arrival (warm-up
+                # events still fire off the heap); park the control and
+                # placer clocks
+                next_control = cursor.peek_time()
+                control_parked = True
+            else:
+                next_control = t + control_interval
+
+        # 4. placement review (tier 3): forecast-driven residency changes,
+        #    batch-target selection, saturation hand-back
+        if not control_parked and t >= next_place - eps:
+            n_events += 1
+            for req, fc, delay in fleet.review(t, emit_warm):
+                if delay > eps:
+                    heapq.heappush(heap, (t + delay, _NET, next(ev_seq),
+                                          (req, fc), 0))
+                    pending_net += 1
+                else:
+                    _enqueue(fc, req, t)
+                changed = True
+            next_place = t + fleet.placer.interval
+
+        # 5. routing per cluster (full pass at control ticks, incremental
+        #    zero-queuing + freed-instance backfill in between)
+        for fc in clusters:
+            if ran_control:
+                fc.controller.route(fc.cluster, fc.queue, t)
+            else:
+                fc.controller.route_interactive(fc.cluster, fc.queue, t)
+                flist = freed.get(id(fc))
+                if flist and fc.queue.n_batch:
+                    if len(flist) > 1:
+                        flist.sort(key=lambda i:
+                                   i.itype != InstanceType.BATCH)
+                    fc.controller.backfill(flist, fc.queue, t)
+
+        # 6. sweep dirty instances: completions surface to the owning
+        #    cluster's controller and the fleet rollup, estimates re-arm
+        for fc in clusters:
+            for inst in fc.cluster.drain_dirty():
+                for r in inst.drain_finished():
+                    fc.controller.observe_completion(r)
+                    fleet.observe_completion(r, fc, t)
+                if inst.state == InstanceState.ACTIVE:
+                    eta = inst.next_event_in()
+                    if eta != float("inf"):
+                        inst._epoch += 1
+                        heapq.heappush(heap, (t + eta, _COMPLETION,
+                                              next(ev_seq), inst,
+                                              inst._epoch))
+
+        # 7. timeline sample (suppressed while parked — state is frozen)
+        if not control_parked and t >= next_timeline - eps:
+            _sample(t)
+
+    if timeline and t > timeline[-1].t:
+        _sample(t)
+    stats = fleet.finalize()
+    return RunResult(
+        requests=cursor.all_requests(), timeline=timeline,
+        chip_seconds=sum(fc.cluster.chip_seconds for fc in clusters),
+        peak_chips=sum(fc.cluster.peak_chips for fc in clusters),
+        scale_ups=sum(fc.cluster.scale_ups for fc in clusters),
+        scale_downs=sum(fc.cluster.scale_downs for fc in clusters),
+        duration=t,
+        failures=sum(fc.cluster.failures for fc in clusters),
+        degradations=sum(fc.cluster.degradations for fc in clusters),
+        n_events=n_events, clusters=stats,
+        migrations=fleet.migrations, handbacks=fleet.handbacks,
+        egress_bytes=fleet.egress_bytes,
+        egress_cost_usd=fleet.egress_cost_usd)
 
 
 def default_perf_factory(**perf_kw) -> Callable[[str], PerfModel]:

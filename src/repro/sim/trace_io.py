@@ -15,18 +15,26 @@ Column names are matched case-insensitively against the alias table, so
 ``ContextTokens``/``input_tokens``/``prompt_len`` on the prompt column.
 
 Format is picked by extension: ``.jsonl`` -> JSON lines, anything else is
-parsed as CSV.
+parsed as CSV; a trailing ``.gz`` on either transparently gzips the file
+(``save_trace``/``load_trace``/``stream_trace`` all honour it).
+
+Multi-day production traces stream through :func:`stream_trace`: the file
+is parsed in fixed-size request chunks yielded as a
+:class:`~repro.sim.workload.TraceStream`, so replaying never holds the
+whole file (or its columns) in memory. Streamed files must already be
+arrival-sorted — the stream validates chunk boundaries.
 """
 from __future__ import annotations
 
 import csv
+import gzip
 import json
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
 from repro.serving.request import BATCH_TTFT_SLO
-from repro.sim.workload import DEFAULT_MODEL, Trace, make_trace
+from repro.sim.workload import DEFAULT_MODEL, Trace, TraceStream, make_trace
 
 # canonical column -> accepted aliases (lowercased)
 _ALIASES: Dict[str, Sequence[str]] = {
@@ -40,6 +48,7 @@ _ALIASES: Dict[str, Sequence[str]] = {
     "ttft_slo": ("ttft_slo", "slo_ttft"),
     "itl_slo": ("itl_slo", "slo_itl"),
     "model": ("model", "model_name", "deployment"),
+    "origin": ("origin", "origin_region", "region", "source_region"),
 }
 
 _INTERACTIVE_WORDS = {"1", "true", "interactive", "chat", "conversation"}
@@ -53,27 +62,47 @@ def _canon(name: str) -> Optional[str]:
     return None
 
 
+def _fmt_path(path: str) -> str:
+    """Extension used for format dispatch (``.gz`` is transparent)."""
+    return path[:-3] if path.endswith(".gz") else path
+
+
+def _open(path: str, mode: str):
+    if path.endswith(".gz"):
+        return gzip.open(path, mode + "t")
+    return open(path, mode, newline="" if mode == "r" else None)
+
+
 def save_trace(trace: Trace, path: str) -> None:
-    """Write a trace in the native schema (CSV or ``.jsonl``)."""
+    """Write a trace in the native schema (CSV or ``.jsonl``; ``.gz``
+    compresses)."""
     models = trace.models
+    origins = trace.origins
     cols = zip(trace.arrival.tolist(), trace.prompt_len.tolist(),
                trace.output_len.tolist(), trace.interactive.tolist(),
                trace.ttft_slo.tolist(), trace.itl_slo.tolist(),
-               trace.model_idx.tolist())
-    with open(path, "w") as f:
-        if path.endswith(".jsonl"):
-            for t, p, o, c, tt, il, m in cols:
-                f.write(json.dumps({
-                    "arrival": t, "prompt_len": p, "output_len": o,
-                    "interactive": bool(c), "ttft_slo": tt, "itl_slo": il,
-                    "model": models[m]}) + "\n")
+               trace.model_idx.tolist(), trace.origin_idx.tolist())
+    with _open(path, "w") as f:
+        if _fmt_path(path).endswith(".jsonl"):
+            for t, p, o, c, tt, il, m, g in cols:
+                row = {"arrival": t, "prompt_len": p, "output_len": o,
+                       "interactive": bool(c), "ttft_slo": tt,
+                       "itl_slo": il, "model": models[m]}
+                if origins:
+                    row["origin"] = origins[g]
+                f.write(json.dumps(row) + "\n")
         else:
             w = csv.writer(f, lineterminator="\n")   # RFC-4180 quoting
-            w.writerow(["arrival", "prompt_len", "output_len",
-                        "interactive", "ttft_slo", "itl_slo", "model"])
-            for t, p, o, c, tt, il, m in cols:
-                w.writerow([repr(t), p, o, int(c), repr(tt), repr(il),
-                            models[m]])
+            header = ["arrival", "prompt_len", "output_len",
+                      "interactive", "ttft_slo", "itl_slo", "model"]
+            if origins:
+                header.append("origin")
+            w.writerow(header)
+            for t, p, o, c, tt, il, m, g in cols:
+                row = [repr(t), p, o, int(c), repr(tt), repr(il), models[m]]
+                if origins:
+                    row.append(origins[g])
+                w.writerow(row)
 
 
 def _parse_arrivals(raw: List[str]) -> np.ndarray:
@@ -121,61 +150,125 @@ def _columns_to_trace(cols: Dict[str, List], n: int, *,
         model_idx = np.asarray(model_idx, dtype=np.int32)
     else:
         models, model_idx = (model_default,), None
+    if "origin" in cols:
+        onames = np.array([str(v) for v in cols["origin"]])
+        origins, origin_idx = np.unique(onames, return_inverse=True)
+        origins = tuple(origins.tolist())
+        origin_idx = np.asarray(origin_idx, dtype=np.int32)
+    else:
+        origins, origin_idx = (), None
     # make_trace owns the class-mask SLO defaulting and the sort — one
     # rule for generated and loaded traces alike
     return make_trace(arrival, prompt, output, interactive,
                       ttft_slo=ttft, itl_slo=itl,
                       batch_ttft_slo=batch_ttft_slo,
-                      model_idx=model_idx, models=models)
+                      model_idx=model_idx, models=models,
+                      origin_idx=origin_idx, origins=origins)
+
+
+def _read_columns(rows):
+    """Accumulate parsed rows into ``(canonical columns, n)`` (ragged
+    rows fail loudly)."""
+    cols: Dict[str, List] = {}
+    n = 0
+    for row in rows:
+        for k, v in row.items():
+            cols.setdefault(k, []).append(v)
+        n += 1
+    # ragged rows leave short columns behind; fail loudly rather than shift
+    for k, v in cols.items():
+        if len(v) != n:
+            raise ValueError(f"column {k!r} has {len(v)} values for {n} rows")
+    return cols, n
+
+
+def _iter_rows(path: str):
+    """Yield one ``{canonical column -> raw value}`` dict per data row,
+    parsing the file incrementally (shared by load and stream paths)."""
+    if _fmt_path(path).endswith(".jsonl"):
+        with _open(path, "r") as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                row = json.loads(line)
+                out = {}
+                for k, v in row.items():
+                    ck = _canon(k)
+                    if ck is not None:
+                        out[ck] = v
+                yield out
+    else:
+        with _open(path, "r") as f:
+            reader = csv.reader(f)           # RFC-4180: quoted fields safe
+            header = next(reader, [])
+            keys = [_canon(h) for h in header]
+            for row in reader:
+                if not row:
+                    continue
+                yield {k: v for k, v in zip(keys, row) if k is not None}
 
 
 def load_trace(path: str, *, interactive_default: bool = True,
                batch_ttft_slo: float = BATCH_TTFT_SLO,
                model_default: str = DEFAULT_MODEL,
                max_requests: int = 0) -> Trace:
-    """Load a CSV/JSONL trace into a sorted :class:`Trace`.
+    """Load a CSV/JSONL trace (optionally ``.gz``) into a sorted
+    :class:`Trace`.
 
     ``max_requests > 0`` truncates after sorting (head of the trace).
     Unknown columns are ignored; missing class/SLO/model columns are
     filled from the defaults.
     """
-    if path.endswith(".jsonl"):
-        cols: Dict[str, List] = {}
-        n = 0
-        with open(path) as f:
-            for line in f:
-                line = line.strip()
-                if not line:
-                    continue
-                row = json.loads(line)
-                for k, v in row.items():
-                    ck = _canon(k)
-                    if ck is not None:
-                        cols.setdefault(ck, []).append(v)
-                n += 1
-    else:
-        with open(path, newline="") as f:
-            reader = csv.reader(f)           # RFC-4180: quoted fields safe
-            header = next(reader, [])
-            keys = [_canon(h) for h in header]
-            raw: List[List[str]] = [[] for _ in header]
-            n = 0
-            for row in reader:
-                if not row:
-                    continue
-                for slot, v in zip(raw, row):
-                    slot.append(v)
-                n += 1
-        cols = {k: v for k, v in zip(keys, raw) if k is not None}
+    cols, n = _read_columns(_iter_rows(path))
     if n == 0:
         raise ValueError(f"empty trace file: {path}")
-    # ragged rows leave short columns behind; fail loudly rather than shift
-    for k, v in cols.items():
-        if len(v) != n:
-            raise ValueError(f"column {k!r} has {len(v)} values for {n} rows")
     tr = _columns_to_trace(cols, n, interactive_default=interactive_default,
                            batch_ttft_slo=batch_ttft_slo,
                            model_default=model_default)
     if max_requests and tr.n > max_requests:
         tr = tr.head(max_requests)
     return tr
+
+
+def stream_trace(path: str, *, chunk_requests: int = 65536,
+                 interactive_default: bool = True,
+                 batch_ttft_slo: float = BATCH_TTFT_SLO,
+                 model_default: str = DEFAULT_MODEL,
+                 max_requests: int = 0) -> TraceStream:
+    """Stream a CSV/JSONL trace (optionally ``.gz``) as arrival-ordered
+    :class:`Trace` chunks of ``chunk_requests`` rows.
+
+    The windowed loader for multi-day production traces: at no point is
+    the whole file resident — each chunk's columns are built and handed
+    to the consumer (the event core's request cursor accepts the stream
+    directly) before the next chunk is parsed. The file must already be
+    arrival-sorted; ``TraceStream`` raises on an out-of-order chunk
+    boundary. ``max_requests > 0`` stops after that many rows.
+    """
+    if chunk_requests <= 0:
+        raise ValueError("chunk_requests must be positive")
+
+    def chunks() -> Iterator[Trace]:
+        buf: List[Dict] = []
+        served = 0
+        for row in _iter_rows(path):
+            buf.append(row)
+            if max_requests and served + len(buf) >= max_requests:
+                buf = buf[:max_requests - served]
+                break
+            if len(buf) >= chunk_requests:
+                cols, n = _read_columns(buf)
+                yield _columns_to_trace(
+                    cols, n, interactive_default=interactive_default,
+                    batch_ttft_slo=batch_ttft_slo,
+                    model_default=model_default)
+                served += n
+                buf = []
+        if buf:
+            cols, n = _read_columns(buf)
+            yield _columns_to_trace(
+                cols, n, interactive_default=interactive_default,
+                batch_ttft_slo=batch_ttft_slo, model_default=model_default)
+
+    return TraceStream(chunks())

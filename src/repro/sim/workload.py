@@ -21,9 +21,12 @@ Trace schema (one row per request):
   ttft_slo     float64  per-request TTFT SLO (seconds)
   itl_slo      float64  per-request ITL SLO (seconds/token)
   model_idx    int32    index into ``models`` (the model vocabulary)
+  origin_idx   int32    index into ``origins`` (originating regions;
+                        empty ``origins`` = single-region workload)
 
 ``repro.sim.trace_io`` round-trips this schema to CSV/JSONL (including
-Azure-LLM-inference-style traces).
+Azure-LLM-inference-style traces) and streams multi-day files in
+arrival-ordered chunks (:class:`TraceStream`).
 """
 from __future__ import annotations
 
@@ -62,6 +65,8 @@ class Trace:
     itl_slo: np.ndarray
     model_idx: np.ndarray
     models: Tuple[str, ...] = (DEFAULT_MODEL,)
+    origin_idx: Optional[np.ndarray] = None   # None/empty origins = no column
+    origins: Tuple[str, ...] = ()
 
     def __post_init__(self):
         self.arrival = np.asarray(self.arrival, dtype=np.float64)
@@ -73,14 +78,21 @@ class Trace:
         self.itl_slo = np.asarray(self.itl_slo, dtype=np.float64)
         self.model_idx = np.asarray(self.model_idx, dtype=np.int32)
         self.models = tuple(self.models)
+        self.origins = tuple(self.origins)
+        if self.origin_idx is None:
+            self.origin_idx = np.zeros(n, dtype=np.int32)
+        self.origin_idx = np.asarray(self.origin_idx, dtype=np.int32)
         for name in ("prompt_len", "output_len", "interactive",
-                     "ttft_slo", "itl_slo", "model_idx"):
+                     "ttft_slo", "itl_slo", "model_idx", "origin_idx"):
             if getattr(self, name).shape != (n,):
                 raise ValueError(f"Trace column {name!r} has shape "
                                  f"{getattr(self, name).shape}, want ({n},)")
         if n and (self.model_idx.min() < 0
                   or self.model_idx.max() >= len(self.models)):
             raise ValueError("Trace.model_idx out of range of models")
+        if n and self.origins and (self.origin_idx.min() < 0 or
+                                   self.origin_idx.max() >= len(self.origins)):
+            raise ValueError("Trace.origin_idx out of range of origins")
 
     # ------------------------------------------------------------ basics
     @property
@@ -105,23 +117,35 @@ class Trace:
         return Trace(self.arrival[idx], self.prompt_len[idx],
                      self.output_len[idx], self.interactive[idx],
                      self.ttft_slo[idx], self.itl_slo[idx],
-                     self.model_idx[idx], self.models)
+                     self.model_idx[idx], self.models,
+                     self.origin_idx[idx], self.origins)
 
     def head(self, n: int) -> "Trace":
         return self.take(slice(0, n))
 
     @staticmethod
     def concat(traces: Sequence["Trace"]) -> "Trace":
-        """Concatenate traces, merging model vocabularies."""
-        models: List[str] = []
-        remaps = []
-        for tr in traces:
-            remap = np.empty(len(tr.models), dtype=np.int32)
-            for i, m in enumerate(tr.models):
-                if m not in models:
-                    models.append(m)
-                remap[i] = models.index(m)
-            remaps.append(remap)
+        """Concatenate traces, merging model (and origin) vocabularies."""
+        def merge(vocabs, idx_cols):
+            merged: List[str] = []
+            remapped = []
+            for vocab, idx in zip(vocabs, idx_cols):
+                remap = np.empty(len(vocab), dtype=np.int32)
+                for i, name in enumerate(vocab):
+                    if name not in merged:
+                        merged.append(name)
+                    remap[i] = merged.index(name)
+                remapped.append(remap[idx])
+            return tuple(merged), remapped
+
+        models, midx = merge([t.models for t in traces],
+                             [t.model_idx for t in traces])
+        # an origin-less trace (empty vocabulary) folds in as origin ""
+        if any(t.origins for t in traces):
+            origins, oidx = merge([t.origins or ("",) for t in traces],
+                                  [t.origin_idx for t in traces])
+        else:
+            origins, oidx = (), [t.origin_idx for t in traces]
         return Trace(
             np.concatenate([t.arrival for t in traces]),
             np.concatenate([t.prompt_len for t in traces]),
@@ -129,8 +153,8 @@ class Trace:
             np.concatenate([t.interactive for t in traces]),
             np.concatenate([t.ttft_slo for t in traces]),
             np.concatenate([t.itl_slo for t in traces]),
-            np.concatenate([r[t.model_idx] for t, r in zip(traces, remaps)]),
-            tuple(models))
+            np.concatenate(midx), models,
+            np.concatenate(oidx), origins)
 
     # ----------------------------------------------------- materialization
     def materialize(self, lo: int = 0, hi: Optional[int] = None) -> List[Request]:
@@ -146,21 +170,30 @@ class Trace:
         itl = self.itl_slo[lo:hi].tolist()
         midx = self.model_idx[lo:hi].tolist()
         models = self.models
+        origins = self.origins or None
+        oidx = self.origin_idx[lo:hi].tolist()
         it, ba = RequestType.INTERACTIVE, RequestType.BATCH
         return [Request(p, o, it if c else ba, SLO(tt, il), t,
-                        model=models[m])
-                for t, p, o, c, tt, il, m
-                in zip(arr, ins, outs, inter, ttft, itl, midx)]
+                        model=models[m],
+                        origin=origins[g] if origins else None)
+                for t, p, o, c, tt, il, m, g
+                in zip(arr, ins, outs, inter, ttft, itl, midx, oidx)]
 
     @classmethod
     def from_requests(cls, reqs: Sequence[Request]) -> "Trace":
         """Columnarize a request list (round-trip / legacy ingestion)."""
         models: List[str] = []
+        origins: List[str] = []
         midx = np.empty(len(reqs), dtype=np.int32)
+        oidx = np.zeros(len(reqs), dtype=np.int32)
         for i, r in enumerate(reqs):
             if r.model not in models:
                 models.append(r.model)
             midx[i] = models.index(r.model)
+            if r.origin is not None:
+                if r.origin not in origins:
+                    origins.append(r.origin)
+                oidx[i] = origins.index(r.origin)
         return cls(
             np.array([r.arrival_time for r in reqs], dtype=np.float64),
             np.array([r.prompt_len for r in reqs], dtype=np.int64),
@@ -168,7 +201,8 @@ class Trace:
             np.array([r.is_interactive for r in reqs], dtype=bool),
             np.array([r.slo.ttft for r in reqs], dtype=np.float64),
             np.array([r.slo.itl for r in reqs], dtype=np.float64),
-            midx, tuple(models) or (DEFAULT_MODEL,))
+            midx, tuple(models) or (DEFAULT_MODEL,),
+            oidx, tuple(origins))
 
 
 def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
@@ -178,6 +212,8 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
                batch_ttft_slo: float = BATCH_TTFT_SLO,
                model_idx: Optional[np.ndarray] = None,
                models: Sequence[str] = (DEFAULT_MODEL,),
+               origin_idx: Optional[np.ndarray] = None,
+               origins: Sequence[str] = (),
                sort: bool = True) -> Trace:
     """Assemble a Trace from columns, filling SLO columns from the class
     mask (interactive -> paper defaults; batch -> ``batch_ttft_slo``)."""
@@ -194,8 +230,42 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
     if model_idx is None:
         model_idx = np.zeros(n, dtype=np.int32)
     tr = Trace(arrival, prompt_len, output_len, interactive,
-               ttft_slo, itl_slo, model_idx, tuple(models))
+               ttft_slo, itl_slo, model_idx, tuple(models),
+               origin_idx, tuple(origins))
     return tr.sorted_by_arrival() if sort else tr
+
+
+class TraceStream:
+    """Arrival-ordered stream of :class:`Trace` chunks.
+
+    The windowed replay path for traces too large to hold columnar in
+    memory: ``repro.sim.trace_io.stream_trace`` yields file chunks, the
+    event core's request cursor consumes them one at a time, and chunk
+    boundaries are validated to be non-decreasing in arrival time (a
+    streamed file must already be arrival-sorted — there is no global
+    sort without the whole file).
+    """
+
+    def __init__(self, chunks):
+        self._it = iter(chunks)
+        self._last_t = -np.inf
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Trace:
+        chunk = next(self._it)
+        while chunk.n == 0:
+            chunk = next(self._it)
+        chunk = chunk.sorted_by_arrival()   # sort BEFORE the boundary
+        # check, or an unsorted chunk's early rows would sneak past it
+        if float(chunk.arrival[0]) < self._last_t:
+            raise ValueError(
+                "TraceStream chunks are not globally arrival-sorted: chunk "
+                f"starts at t={float(chunk.arrival[0]):.3f} after "
+                f"t={self._last_t:.3f}")
+        self._last_t = float(chunk.arrival[-1])
+        return chunk
 
 
 # ============================================================== generation

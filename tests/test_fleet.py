@@ -1,0 +1,335 @@
+"""Fleet plane: router SLO-headroom decisions, migration warm-up delay
+semantics, per-cluster budget isolation, placement drain, slow-node
+degradation (detection + route-around), per-model controller clocks, and
+the deterministic ``multi_region`` end-to-end acceptance run."""
+import numpy as np
+import pytest
+
+from repro.serving.global_queue import GlobalQueue
+from repro.serving.request import make_batch, make_interactive
+from repro.sim.cluster import InstanceType, SimCluster
+from repro.sim.controllers import ChironController, _best_fit
+from repro.sim.fleet import (ACCELERATORS, ClusterSpec, Fleet, FleetTopology,
+                             GlobalPlacer, Region)
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (DegradationPlan, default_perf_factory,
+                                 simulate_events, simulate_fleet)
+
+MODEL = "llama-8b"
+
+
+def _fleet(specs, regions=None, **kw):
+    regions = regions or sorted({s.region for s in specs})
+    topo = FleetTopology([Region(r) for r in regions])
+    return Fleet(specs, topo, models=(MODEL,), **kw)
+
+
+def _fill_instance(fc, n=4, now=0.0):
+    """One active instance with ``n`` slots, all occupied."""
+    inst = fc.cluster.provision(MODEL, InstanceType.MIXED, now,
+                                static_batch=n)
+    inst.ready_time = now
+    inst.activate_if_ready(now)
+    for k in range(n):
+        inst.admit(make_interactive(64, 32, now), now)
+    return inst
+
+
+# ------------------------------------------------------------------ router
+def test_router_interactive_prefers_origin_region():
+    fleet = _fleet([ClusterSpec("us-a", "us", max_chips=40),
+                    ClusterSpec("eu-a", "eu", max_chips=40)])
+    fc, delay = fleet.route(make_interactive(100, 50, 0.0), 0.0)
+    # no origin -> first topology region ("eu" sorts first here)
+    assert fc.region == fleet.topology.regions[0]
+    req = make_interactive(100, 50, 0.0)
+    req.origin = "us"
+    fc, delay = fleet.route(req, 0.0)
+    assert fc.name == "us-a"
+    assert delay == fleet.topology.intra_latency
+    assert fc.stats.remote_served == 0
+
+
+def test_router_interactive_spills_over_on_saturation():
+    fleet = _fleet([ClusterSpec("us-a", "us", max_chips=4),
+                    ClusterSpec("eu-a", "eu", max_chips=40)])
+    us = fleet.by_name["us-a"]
+    _fill_instance(us, n=4)      # all slots busy, budget exhausted
+    assert us.interactive_headroom(MODEL) == 0
+    req = make_interactive(100, 50, 0.0)
+    req.origin = "us"
+    fc, delay = fleet.route(req, 0.0)
+    assert fc.name == "eu-a"                  # spillover
+    assert delay == fleet.topology.latency("us", "eu")
+    assert fc.stats.remote_served == 1
+    assert fleet.egress_bytes > 0             # prompt crossed a region
+
+
+def test_router_batch_picks_cheapest_then_backpressure_positive():
+    fleet = _fleet([ClusterSpec("us-base", "us", accelerator="v5e",
+                                max_chips=40),
+                    ClusterSpec("us-econ", "us", accelerator="v4e",
+                                max_chips=8)])
+    econ, base = fleet.by_name["us-econ"], fleet.by_name["us-base"]
+    assert econ.batch_cost_per_mtoken(MODEL) < \
+        base.batch_cost_per_mtoken(MODEL)
+    fc, _ = fleet.route(make_batch(100, 50, 0.0), 0.0)
+    assert fc.name == "us-econ"               # cheapest per token
+    # saturate the economy cluster's queue far past its headroom: the
+    # router must route batch to the next-cheapest positive cluster
+    for k in range(int(econ.batch_headroom(MODEL)) + 500):
+        econ.queue.push(make_batch(100, 50, 0.0))
+    assert econ.batch_headroom(MODEL) < 0
+    fc, _ = fleet.route(make_batch(100, 50, 0.0), 0.0)
+    assert fc.name == "us-base"
+
+
+def test_best_fit_routes_around_suspected_slow_instances():
+    cluster = SimCluster(default_perf_factory(), max_chips=40)
+    a = cluster.provision(MODEL, InstanceType.MIXED, 0.0, static_batch=8)
+    b = cluster.provision(MODEL, InstanceType.MIXED, 0.0, static_batch=8)
+    for i in (a, b):
+        i.ready_time = 0.0
+        i.activate_if_ready(0.0)
+    # b is busier (packing would pick it) but suspected slow
+    b.admit(make_interactive(64, 32, 0.0), 0.0)
+    b.health_ewma = 3.0
+    assert _best_fit([a, b]) is a
+    # with no healthy candidate the degraded pool still serves
+    a.health_ewma = 3.0
+    assert _best_fit([a, b]) is b
+
+
+# --------------------------------------------------------------- migration
+def test_migration_warm_up_delay_semantics():
+    fleet = _fleet([ClusterSpec("us-a", "us", max_chips=40),
+                    ClusterSpec("eu-a", "eu", max_chips=40)],
+                   placement={MODEL: ["us-a"]})
+    eu = fleet.by_name["eu-a"]
+    assert eu.resident == {}
+    req = make_interactive(100, 50, 0.0)
+    req.origin = "eu"
+    fc, _ = fleet.route(req, 0.0)
+    assert fc.name == "us-a"                  # only resident copy
+
+    warms = []
+    egress_before = fleet.egress_bytes
+    fleet.placer.ensure_resident(MODEL, eu, 0.0,
+                                 lambda d, p: warms.append((d, p)))
+    assert eu.resident[MODEL] == "warming"
+    assert fleet.migrations == 1
+    perf = eu.perf_factory(MODEL)
+    (delay, payload), = warms
+    # warm-up = cross-region weight transfer + model load, with the
+    # weights' egress charged to the source cluster
+    assert delay == pytest.approx(perf.model_load_time()
+                                  + perf.weight_bytes
+                                  / fleet.placer.wan_bw)
+    assert fleet.egress_bytes - egress_before == perf.weight_bytes
+    assert fleet.by_name["us-a"].stats.egress_bytes == perf.weight_bytes
+
+    # while warming the router still avoids the cluster...
+    fc, _ = fleet.route(req, 1.0)
+    assert fc.name == "us-a"
+    # re-ensuring is a no-op (no double migration)
+    fleet.placer.ensure_resident(MODEL, eu, 1.0,
+                                 lambda d, p: warms.append((d, p)))
+    assert fleet.migrations == 1 and len(warms) == 1
+    # ...and serves only after the warm-up event fires
+    fleet.on_warm(payload, delay)
+    assert eu.resident[MODEL] == "active"
+    assert MODEL in eu.controller._configured
+    fc, _ = fleet.route(req, delay)
+    assert fc.name == "eu-a"
+
+
+def test_placer_drains_idle_placement_and_hands_back_queue():
+    fleet = _fleet([ClusterSpec("us-a", "us", max_chips=40),
+                    ClusterSpec("eu-a", "eu", max_chips=40)])
+    placer = fleet.placer
+    eu = fleet.by_name["eu-a"]
+    # demand exists only in us; eu sits idle through drain_strikes reviews
+    now = 0.0
+    for round_ in range(placer.drain_strikes + 1):
+        for k in range(60):
+            req = make_interactive(100, 50, now)
+            req.origin = "us"
+            placer.observe_arrival(req, now)
+        now += placer.interval
+        placer.review(now, lambda d, p: None)
+    assert MODEL not in eu.resident           # drained
+    assert MODEL not in eu.controller._configured
+    assert eu.stats.migrations_out == 1
+    # the us placement survives (never the last active copy, and needed)
+    assert fleet.by_name["us-a"].resident[MODEL] == "active"
+
+
+def test_drain_redispatch_accounts_from_source_and_drops_saved_kv():
+    """Work leaving a drained cluster pays the hop from *that* cluster
+    (not the request's origin) and loses its host-saved KV — another
+    cluster's hosts never held it, so the restart must re-prefill."""
+    from repro.sim.fleet import TOKEN_BYTES
+    fleet = _fleet([ClusterSpec("us-a", "us", max_chips=40),
+                    ClusterSpec("eu-a", "eu", max_chips=40)])
+    eu = fleet.by_name["eu-a"]
+    req = make_batch(200, 50, 0.0)
+    req.origin = "us"                 # origin-side latency would be 0
+    req.saved_kv = ("sim", 123.0)     # preempted here, KV on eu hosts
+    eu.queue.requeue(req)
+    (r, dest, delay), = fleet.drain(MODEL, eu, 0.0)
+    assert r is req and r.saved_kv is None
+    assert dest.name == "us-a"
+    assert delay == fleet.topology.latency("eu", "us")   # hop from eu
+    assert eu.stats.egress_bytes == 200 * TOKEN_BYTES
+    assert MODEL not in eu.resident
+
+
+def test_queue_drain_model_empties_every_lane():
+    q = GlobalQueue()
+    i1 = make_interactive(10, 5, 0.0, model="a")
+    b1 = make_batch(10, 5, 0.0, model="a")
+    b2 = make_batch(10, 5, 1.0, model="a")
+    other = make_batch(10, 5, 0.0, model="b")
+    for r in (i1, b1, b2, other):
+        q.push(r)
+    out = q.drain_model("a")
+    assert [r.req_id for r in out] == [i1.req_id, b1.req_id, b2.req_id]
+    assert q.n_interactive == 0 and q.n_batch == 1
+    assert q.pop_batch_fcfs("b") is other
+
+
+# ----------------------------------------------------------- degradation
+def test_degradation_inflates_itl_and_is_detected():
+    cluster = SimCluster(default_perf_factory(), max_chips=40)
+    inst = cluster.provision(MODEL, InstanceType.MIXED, 0.0, static_batch=8)
+    inst.ready_time = 0.0
+    inst.activate_if_ready(0.0)
+    inst.admit(make_interactive(64, 128, 0.0), 0.0)
+    healthy_itl = inst.current_itl()
+    cluster.degrade_instance(inst, 4.0, 0.0)
+    assert inst.current_itl() == pytest.approx(4.0 * healthy_itl)
+    assert cluster.degradations == 1
+    assert not inst.suspected_slow
+    for _ in range(4):                        # control ticks accumulate EWMA
+        inst.update_health()
+    assert inst.suspected_slow
+    cluster.recover_instance(inst, 1.0)
+    assert inst.current_itl() == pytest.approx(healthy_itl)
+    for _ in range(6):
+        inst.update_health()
+    assert not inst.suspected_slow            # detection clears
+
+
+def test_recovered_idle_instance_clears_suspicion():
+    """Routing refuses suspected instances, so a victim that drained its
+    work must still decay its health flag after recovery — otherwise the
+    healthy capacity would be stranded forever."""
+    cluster = SimCluster(default_perf_factory(), max_chips=40)
+    inst = cluster.provision(MODEL, InstanceType.MIXED, 0.0, static_batch=8)
+    inst.ready_time = 0.0
+    inst.activate_if_ready(0.0)
+    inst.health_ewma = 4.0                    # quarantined, then drained
+    cluster.recover_instance(inst, 1.0)       # no running work
+    assert inst.n_running == 0
+    for _ in range(4):                        # idle control ticks probe it
+        inst.update_health()
+    assert not inst.suspected_slow
+
+
+def test_slow_nodes_scenario_deterministic_and_survives():
+    trace, kw = build_trace("slow_nodes", n_requests=500, seed=4)
+    assert isinstance(kw["degradations"], DegradationPlan)
+
+    def run():
+        t, k = build_trace("slow_nodes", n_requests=500, seed=4)
+        return simulate_events(
+            t, ChironController(),
+            SimCluster(default_perf_factory(), max_chips=200),
+            max_time=k["max_time"], warm_start=2,
+            degradations=k["degradations"])
+
+    res_a, res_b = run(), run()
+    assert res_a.degradations >= 1
+    assert res_a.completion_rate() == 1.0
+    assert res_a.summary() == res_b.summary()
+    assert "degradations" in res_a.summary()
+
+
+# ------------------------------------------------- per-model controller
+def test_per_model_estimators_do_not_share_output_fits():
+    ctrl = ChironController(models=["llama-8b", "llama-70b"])
+    for _ in range(30):
+        ctrl.observe_completion(make_batch(10, 100, 0.0, model="llama-8b"))
+        ctrl.observe_completion(make_batch(10, 1000, 0.0,
+                                           model="llama-70b"))
+    mu8 = ctrl._estimator_for("llama-8b").output_model.mu
+    mu70 = ctrl._estimator_for("llama-70b").output_model.mu
+    assert mu8 == pytest.approx(100.0)
+    assert mu70 == pytest.approx(1000.0)
+    # the primary model keeps the legacy `estimator` field itself
+    assert ctrl._estimator_for("llama-8b") is ctrl.estimator
+
+
+def test_per_model_theta_refresh_cadence():
+    ctrl = ChironController(models=["llama-8b", "llama-70b"],
+                            auto_theta=True, theta_refresh=100.0,
+                            theta_refresh_per_model={"llama-70b": 10.0})
+    assert ctrl._next_theta_update == {"llama-8b": 100.0,
+                                       "llama-70b": 10.0}
+    ctrl._refresh_theta(10.0)
+    # only the fast-cadence model's clock advanced
+    assert ctrl._next_theta_update == {"llama-8b": 100.0,
+                                       "llama-70b": 20.0}
+    ctrl._refresh_theta(100.0)
+    assert ctrl._next_theta_update == {"llama-8b": 200.0,
+                                       "llama-70b": 110.0}
+
+
+# --------------------------------------------------------- fleet end-to-end
+def test_per_cluster_budget_isolation():
+    trace, kw = build_trace("regional_spillover", n_requests=800, seed=3)
+    fleet = kw["fleet"]()
+    res = simulate_fleet(trace, fleet, max_time=kw["max_time"],
+                         warm_start=1)
+    assert res.completion_rate() == 1.0
+    for fc in fleet.clusters:
+        assert fc.stats.peak_chips <= fc.spec.max_chips
+    # the spike exceeded the small cluster: its budget pinned at its own
+    # cap while the big cluster absorbed the spill
+    us = fleet.by_name["us-edge"]
+    assert us.stats.peak_chips <= us.spec.max_chips == 4
+
+
+def test_multi_region_deterministic():
+    def run():
+        trace, kw = build_trace("multi_region", n_requests=600, seed=7)
+        return simulate_fleet(trace, kw["fleet"](),
+                              max_time=kw["max_time"], warm_start=1)
+    assert run().summary() == run().summary()
+
+
+def test_multi_region_consolidates_batch_and_keeps_interactive_slo():
+    """The acceptance run: batch work lands on the cheapest cluster while
+    interactive SLO attainment matches the single-cluster baseline on the
+    same trace, with migration/egress counters in the summary."""
+    trace, kw = build_trace("multi_region", n_requests=2000, seed=11)
+    fleet = kw["fleet"]()
+    res = simulate_fleet(trace, fleet, max_time=kw["max_time"],
+                         warm_start=1)
+    assert res.completion_rate() == 1.0
+    s = res.summary()
+    for key in ("migrations", "egress_gb", "fleet_cost_usd"):
+        assert key in s
+    cheapest = min(fleet.clusters,
+                   key=lambda fc: fc.batch_cost_per_mtoken(MODEL))
+    assert cheapest.name == "us-central"
+    assert s[f"cluster:{cheapest.name}:batch_share"] >= 0.6
+
+    # single-cluster baseline: same trace, one cluster holding the whole
+    # fleet's chip budget and no network hops
+    total_chips = sum(fc.spec.max_chips for fc in fleet.clusters)
+    base = simulate_events(
+        trace, ChironController(),
+        SimCluster(default_perf_factory(), max_chips=total_chips),
+        max_time=kw["max_time"], warm_start=3)
+    assert s["slo_interactive"] >= base.summary()["slo_interactive"]
