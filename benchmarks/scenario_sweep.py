@@ -250,6 +250,39 @@ def run():
                 for c in res.clusters}
         json_rows.append(jrow)
 
+    # ---- opt-in million-request replay (SCENARIO_SWEEP_MILLION=1): the
+    # scale point the columnar hot path is sized for. One run (no
+    # best-of: it is long), recorded like any scenario so bench_trend's
+    # wall-clock gate tracks it once a baseline is committed.
+    if os.environ.get("SCENARIO_SWEEP_MILLION"):
+        n_m = int(os.environ.get("SCENARIO_SWEEP_MILLION_N", "1000000"))
+        trace, kw = build_trace("trace_replay", n_requests=n_m, seed=3)
+        cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)
+        t0 = time.perf_counter()
+        res = simulate_events(trace, chiron(), cluster,
+                              max_time=kw["max_time"], warm_start=2)
+        wall = time.perf_counter() - t0
+        rows.append(Row("scenario/million_replay", wall * 1e6, n=trace.n,
+                        wall_s=round(wall, 2),
+                        events_per_s=round(res.n_events / wall),
+                        **_finish_stats(res, res.requests)))
+        json_rows.append({
+            "scenario": "million_replay", "n_requests": trace.n,
+            "wall_s": round(wall, 3),
+            "events": res.n_events,
+            "events_per_s": round(res.n_events / wall, 1),
+            "sim_duration_s": round(res.duration, 1),
+            "slo_attainment": round(res.slo_attainment(), 4),
+            "slo_by_model": {m: round(v, 4)
+                             for m, v in res.slo_by_model().items()},
+            "completion_rate": round(res.completion_rate(), 4),
+            "gpu_hours": round(res.gpu_hours(), 3),
+            "peak_chips": res.peak_chips,
+            "hysteresis": round(res.hysteresis, 3),
+            "failures": res.failures,
+            "degradations": res.degradations,
+        })
+
     # machine-readable perf trajectory (tracked across PRs)
     out_path = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "BENCH_scenarios.json")

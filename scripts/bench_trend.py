@@ -4,10 +4,14 @@
 Diffs a freshly-generated ``BENCH_scenarios.json`` (written by
 ``benchmarks/scenario_sweep.py``) against the previously committed one and
 **fails (exit 1) when any scenario's events/s regressed by more than the
-threshold** (default 20%). New scenarios (present only in the new file)
-and removed ones are reported but never fail the gate; SLO/completion
-changes are surfaced for eyeballs, not gated (they are workload
-properties, not perf).
+threshold** (default 20%). The replay scenarios (``trace_replay``,
+``million_replay``) are additionally gated on absolute **wall-clock**
+(>20% slower fails) — they are the scale points the columnar hot path is
+sized for, and events/s alone can mask a wall regression if the event
+count drifts. New scenarios (present only in the new file) and removed
+ones are reported but never fail the gate; SLO/completion changes are
+surfaced for eyeballs, not gated (they are workload properties, not
+perf).
 
 Usage::
 
@@ -72,6 +76,12 @@ def main(argv) -> int:
         if delta < -threshold:
             note = f"REGRESSION (> {threshold:.0%})"
             failures.append((name, delta))
+        if name in ("trace_replay", "million_replay"):
+            dwall = n.get("wall_s", 0.0) / max(o.get("wall_s", 0.0), 1e-9) \
+                - 1.0
+            if dwall > threshold:
+                note += f" WALL REGRESSION ({dwall:+.1%})"
+                failures.append((name, -dwall))
         for k in ("slo_attainment", "completion_rate"):
             if abs(n.get(k, 1.0) - o.get(k, 1.0)) > 1e-6:
                 note += f" {k}: {o.get(k)} -> {n.get(k)}"

@@ -20,6 +20,8 @@ FAST_TESTS = [
     "tests/test_fleet.py",           # multi-cluster placement/routing plane,
                                      # degradation, deterministic multi_region
     "tests/test_global_queue.py",
+    "tests/test_ledger.py",          # columnar ledger + decision
+                                     # equivalence vs the reference path
     "tests/test_request_groups.py",
     "tests/test_scenarios.py",       # scenario smoke incl. multi_model_fleet,
                                      # trace_replay, instance_failures

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Profile the simulator on any registered scenario.
+
+cProfile the event core (or the fleet loop for fleet scenarios) over one
+scenario build and print the top-N functions by tottime and cumtime —
+the first tool to reach for before touching the hot path (see the
+"profiling the simulator" walkthrough in tests/README.md).
+
+Usage::
+
+    python scripts/profile_sim.py                         # trace_replay
+    python scripts/profile_sim.py diurnal
+    python scripts/profile_sim.py trace_replay -n 100000
+    python scripts/profile_sim.py burst_spikes --top 40 --sort cumulative
+    python scripts/profile_sim.py multi_region --plain    # no profiler,
+                                                          # wall + ev/s only
+
+``--plain`` runs without instrumentation (cProfile inflates Python-call
+costs ~2x, so confirm wall-clock wins un-instrumented).
+"""
+from __future__ import annotations
+
+import argparse
+import cProfile
+import io
+import os
+import pstats
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.sim.cluster import SimCluster                     # noqa: E402
+from repro.sim.controllers import ChironController           # noqa: E402
+from repro.sim.scenarios import SCENARIOS, build_trace       # noqa: E402
+from repro.sim.simulator import (default_perf_factory,       # noqa: E402
+                                 simulate_events, simulate_fleet)
+
+
+def run_scenario(name: str, n_requests: int, seed: int, max_chips: int):
+    trace, kw = build_trace(name, n_requests=n_requests, seed=seed)
+    if "fleet" in kw:
+        return simulate_fleet(trace, kw["fleet"](),
+                              max_time=kw["max_time"], warm_start=1,
+                              failures=kw.get("failures"),
+                              degradations=kw.get("degradations"))
+    cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
+                           warm_start=2, failures=kw.get("failures"),
+                           degradations=kw.get("degradations"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("scenario", nargs="?", default="trace_replay",
+                    choices=sorted(SCENARIOS))
+    ap.add_argument("-n", "--n-requests", type=int, default=0,
+                    help="override the scenario's default request count")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--max-chips", type=int, default=400)
+    ap.add_argument("--top", type=int, default=25,
+                    help="rows per pstats table")
+    ap.add_argument("--sort", default="tottime",
+                    choices=["tottime", "cumulative", "ncalls"])
+    ap.add_argument("--plain", action="store_true",
+                    help="no profiler: wall time + events/s only")
+    args = ap.parse_args()
+
+    if args.plain:
+        t0 = time.perf_counter()
+        res = run_scenario(args.scenario, args.n_requests, args.seed,
+                           args.max_chips)
+        wall = time.perf_counter() - t0
+        print(f"{args.scenario}: {wall:.3f}s wall, {res.n_events} events, "
+              f"{res.n_events / wall:,.0f} events/s, "
+              f"completion={res.completion_rate():.4f}")
+        return 0
+
+    pr = cProfile.Profile()
+    t0 = time.perf_counter()
+    pr.enable()
+    res = run_scenario(args.scenario, args.n_requests, args.seed,
+                       args.max_chips)
+    pr.disable()
+    wall = time.perf_counter() - t0
+    print(f"{args.scenario}: {wall:.3f}s wall (profiled), "
+          f"{res.n_events} events, {res.n_events / wall:,.0f} events/s")
+    out = io.StringIO()
+    pstats.Stats(pr, stream=out).sort_stats(args.sort).print_stats(args.top)
+    print(out.getvalue())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

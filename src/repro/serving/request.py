@@ -9,6 +9,13 @@ from typing import List, Optional
 _req_counter = itertools.count()
 
 
+def request_id_counter():
+    """The shared ``req_id`` source — bulk constructors (columnar
+    ``Trace.materialize``) draw from the same counter the dataclass
+    default does, so ids stay globally unique either way."""
+    return _req_counter
+
+
 class RequestType(enum.Enum):
     INTERACTIVE = "interactive"
     BATCH = "batch"
@@ -67,6 +74,10 @@ class Request:
     # optional explicit prompt token ids (enables prefix caching; the
     # engine synthesizes random tokens when absent)
     prompt_tokens: Optional[object] = None
+    # columnar ledger row id (repro.sim.ledger.RequestLedger): the event
+    # core records this request's outcomes by integer row instead of — in
+    # addition to — mutating the object; -1 = not tracked by a ledger
+    row: int = -1
 
     @property
     def deadline(self) -> float:

@@ -22,6 +22,25 @@ Two data-plane drivers share the same instance state:
 Control-plane queries (``can_admit``, ``mean_ctx``, ``runs_interactive``,
 ``min_itl_slo``…) are all O(1) via maintained aggregates; the routing hot
 path never scans a batch.
+
+The vectorized instance plane (:class:`InstancePlane`) mirrors every
+instance's fluid scalars — virtual clock, catch-up time, running/decoding
+counts, KV aggregates, slow factor — plus its cached ``PerfModel`` ITL
+coefficients into struct-of-arrays NumPy columns, kept in sync
+incrementally by the mutation sites. The control-tick catch-up
+(``SimCluster.catch_up``) then advances every instance without a pending
+intrinsic event in **one array pass** (identical arithmetic to the scalar
+``advance``, so decisions are bit-for-bit equivalent) and falls back to
+the per-object path only for instances whose prefill/finish heap actually
+crosses the tick. Below ``SimCluster.vec_min`` live instances the scalar
+loop wins on NumPy fixed costs and is used instead — the plane is the
+production-scale path, not a small-fleet tax.
+
+Outcome recording is columnar too: when ``SimCluster.ledger`` is set (the
+event engines install a :class:`repro.sim.ledger.RequestLedger`), every
+``Request`` attribute write in the hot path (first token, finish, state,
+tokens) lands in the ledger at ``Request.row`` as well, so run metrics
+reduce over arrays instead of a million objects.
 """
 from __future__ import annotations
 
@@ -29,15 +48,23 @@ import enum
 import heapq
 import itertools
 import math
-from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.backpressure import LocalMetrics
 from repro.serving.request import Request, RequestState, RequestType
-from repro.sim.perf_model import PerfModel
+from repro.sim import ledger as _ledger
+from repro.sim.perf_model import STEP_OVERHEAD, PerfModel
 
 _inst_counter = itertools.count()
+
+_INF = float("inf")
+
+
+def _by_id(inst) -> int:
+    return inst.id
 
 # decode rate used when the quantized tick emulation truncates to zero
 # tokens per tick (itl > dt: the tick loop makes no progress either)
@@ -60,22 +87,199 @@ class InstanceState(enum.Enum):
     RETIRED = "retired"
 
 
-@dataclass(eq=False)
 class SimSeq:
-    request: Request
-    ctx_tokens: float            # prompt + generated so far (KV footprint)
-    prefill_left: float          # seconds of prefill work remaining
-    gen_f: float = 0.0           # fractional tokens generated
-    # --- event-core fluid state ---
-    decoding: bool = False
-    prefill_done_t: float = 0.0  # absolute sim time prefill completes
-    v0: float = 0.0              # instance vclock at decode entry
-    gen_base: float = 0.0        # gen_f  - vclock while decoding
-    ctx_base: float = 0.0        # ctx    - vclock while decoding
+    """One running sequence (slotted: allocated once per admission)."""
+
+    __slots__ = ("request", "ctx_tokens", "prefill_left", "gen_f",
+                 "decoding", "prefill_done_t", "v0", "gen_base", "ctx_base")
+
+    def __init__(self, request: Request, ctx_tokens: float,
+                 prefill_left: float, gen_f: float = 0.0):
+        self.request = request
+        self.ctx_tokens = ctx_tokens     # prompt + generated (KV footprint)
+        self.prefill_left = prefill_left  # seconds of prefill work left
+        self.gen_f = gen_f               # fractional tokens generated
+        # --- event-core fluid state ---
+        self.decoding = False
+        self.prefill_done_t = 0.0        # absolute sim time prefill done
+        self.v0 = 0.0                    # instance vclock at decode entry
+        self.gen_base = 0.0              # gen_f - vclock while decoding
+        self.ctx_base = 0.0              # ctx   - vclock while decoding
 
     @property
     def done(self) -> bool:
         return self.request.tokens_generated >= self.request.output_len
+
+
+class InstancePlane:
+    """Struct-of-arrays mirror of per-instance fluid state + cached ITL
+    coefficients (see module docstring). Slots are allocated at provision
+    and freed at retirement; mutation sites keep the columns in sync via
+    ``SimInstance._sync_plane`` so ``catch_up`` can advance the whole
+    fleet in one vectorized pass.
+    """
+
+    def __init__(self, cap: int = 64):
+        self.cap = cap
+        self._free: List[int] = list(range(cap - 1, -1, -1))
+        self.owner: List[Optional["SimInstance"]] = [None] * cap
+        z = np.zeros
+        # dynamic fluid state
+        self.active = z(cap, dtype=bool)
+        self.n_running = z(cap, dtype=np.int64)
+        self.n_dec = z(cap, dtype=np.int64)
+        self.kv_prefill = z(cap)
+        self.kv_dec_base = z(cap)
+        self.vclock = z(cap)
+        self.last_advance = z(cap)
+        self.slow = np.ones(cap)
+        # earliest (possibly stale-conservative) intrinsic events
+        self.next_prefill = np.full(cap, _INF)
+        self.next_vfin = np.full(cap, _INF)
+        # cached PerfModel ITL coefficients (static per slot)
+        self.mem_base = z(cap)
+        self.mem_kv = z(cap)
+        self.comp_seq = z(cap)
+        self.coll = z(cap)
+        self.kv_cap = np.full(cap, _INF)
+        self.prefix = z(cap)
+        self.spec_on = z(cap, dtype=bool)
+        self.spec_over = z(cap)
+        self.spec_speed = np.ones(cap)
+
+    def _grow(self) -> None:
+        old = self.cap
+        self.cap = cap = old * 2
+        self._free.extend(range(cap - 1, old - 1, -1))
+        self.owner.extend([None] * old)
+        for name in ("active", "n_running", "n_dec", "kv_prefill",
+                     "kv_dec_base", "vclock", "last_advance", "slow",
+                     "next_prefill", "next_vfin", "mem_base", "mem_kv",
+                     "comp_seq", "coll", "kv_cap", "prefix", "spec_on",
+                     "spec_over", "spec_speed"):
+            a = getattr(self, name)
+            pad = np.empty(old, dtype=a.dtype)
+            if name in ("next_prefill", "next_vfin", "kv_cap"):
+                pad.fill(np.inf)
+            elif name in ("slow", "spec_speed"):
+                pad.fill(1)
+            else:
+                pad.fill(0)
+            setattr(self, name, np.concatenate([a, pad]))
+
+    def alloc(self, inst: "SimInstance") -> int:
+        if not self._free:
+            self._grow()
+        s = self._free.pop()
+        self.owner[s] = inst
+        self.active[s] = inst.active
+        self.n_running[s] = 0
+        self.n_dec[s] = 0
+        self.kv_prefill[s] = 0.0
+        self.kv_dec_base[s] = 0.0
+        self.vclock[s] = 0.0
+        self.last_advance[s] = inst.last_advance
+        self.slow[s] = inst.slow_factor
+        self.next_prefill[s] = _INF
+        self.next_vfin[s] = _INF
+        self.mem_base[s] = inst._c_mem_base
+        self.mem_kv[s] = inst._c_mem_kv
+        self.comp_seq[s] = inst._c_comp
+        self.coll[s] = inst._c_coll
+        self.kv_cap[s] = inst._c_cap
+        self.prefix[s] = inst._c_prefix
+        self.spec_on[s] = inst._c_spec
+        self.spec_over[s] = inst._c_spec_over
+        self.spec_speed[s] = inst._c_spec_speed
+        return s
+
+    def free(self, slot: int) -> None:
+        self.owner[slot] = None
+        self.active[slot] = False
+        self.n_running[slot] = 0
+        self.n_dec[slot] = 0
+        self.next_prefill[slot] = _INF
+        self.next_vfin[slot] = _INF
+        self._free.append(slot)
+
+    def catch_up(self, t: float, cluster: "SimCluster",
+                 batch_seq: int) -> None:
+        """Vectorized fluid catch-up of every running instance to ``t``.
+
+        One array pass computes each instance's frozen-composition ITL
+        with the exact operation order of ``PerfModel.itl`` (bit-for-bit
+        the scalar result), detects which instances have an intrinsic
+        event (prefill completion / decode finish) crossing the interval,
+        advances the rest in bulk, and caches their next-completion ETA
+        for the sweep. Crossing instances fall back to the scalar
+        ``advance`` (heap pops, interpolation).
+        """
+        nr = self.n_running
+        m = self.active & (nr > 0) & (self.last_advance < t)
+        slots = np.nonzero(m)[0]
+        if slots.size == 0:
+            return
+        b = nr[slots]
+        dt = t - self.last_advance[slots]
+        nd = self.n_dec[slots]
+        vc = self.vclock[slots]
+        kv = self.kv_prefill[slots] + self.kv_dec_base[slots] + nd * vc
+        ctx = np.maximum(kv / b, 1.0)
+        itl = self._itl(slots, b, ctx)
+        ratio = dt / itl
+        vnew = np.where(nd > 0, vc + ratio, vc)
+        crossing = (self.next_prefill[slots] <= t + 1e-12) \
+            | ((nd > 0) & (self.next_vfin[slots] <= vnew + 1e-9))
+        fast = ~crossing
+        fs = slots[fast]
+        owner = self.owner
+        if fs.size:
+            self.last_advance[fs] = t
+            self.vclock[fs] = vnew[fast]
+            ndf = nd[fast]
+            dec = ndf > 0
+            if dec.any():
+                cluster.tok_accum += float(np.sum(ndf[dec]
+                                                  * ratio[fast][dec]))
+            # next-completion ETA under the *new* composition-frozen ITL
+            # (exactly what next_event_in would recompute at the sweep)
+            kv2 = self.kv_prefill[fs] + self.kv_dec_base[fs] \
+                + ndf * self.vclock[fs]
+            ctx2 = np.maximum(kv2 / nr[fs], 1.0)
+            itl2 = self._itl(fs, nr[fs], ctx2)
+            eta = np.minimum(self.next_prefill[fs] - t,
+                             (self.next_vfin[fs] - self.vclock[fs]) * itl2)
+            np.maximum(eta, cluster.completion_grain, out=eta)
+            dirty = cluster.dirty
+            vcol = self.vclock
+            for s, e in zip(fs.tolist(), eta.tolist()):
+                inst = owner[s]
+                inst.vclock = vcol[s]
+                inst.last_advance = t
+                inst._eta_val = e
+                inst._eta_stamp = batch_seq
+                dirty.add(inst)
+        for s in slots[crossing].tolist():
+            owner[s].advance(t)
+
+    def _itl(self, slots: np.ndarray, b: np.ndarray,
+             ctx: np.ndarray) -> np.ndarray:
+        """Vector twin of ``SimInstance._itl_now`` — identical op order."""
+        mem = self.mem_base[slots] + b * ctx * self.mem_kv[slots]
+        comp = b * self.comp_seq[slots]
+        t = np.maximum(mem, comp) + self.coll[slots] + STEP_OVERHEAD
+        sp = self.spec_on[slots]
+        if sp.any():
+            t = np.where(sp, t * (1 + self.spec_over[slots] * np.sqrt(b))
+                         / self.spec_speed[slots], t)
+        cap = self.kv_cap[slots]
+        demand = b * (ctx + self.prefix[slots])
+        with np.errstate(invalid="ignore"):
+            over = demand / cap - 1.0
+            pre = demand > cap
+        if pre.any():
+            t = np.where(pre, t * (1.0 + 4.0 * over + 8.0 * over * over), t)
+        return t * self.slow[slots]
 
 
 class SimInstance:
@@ -119,12 +323,44 @@ class SimInstance:
         self._epoch = 0              # invalidates scheduled events
         self._pending_finished: List[Request] = []
         self._cluster = None         # backref set by SimCluster.provision
+        self.slot = -1               # InstancePlane slot (set by provision)
+        self._plane: Optional[InstancePlane] = None
+        self._eta_val = 0.0          # cached post-advance completion ETA
+        self._eta_stamp = -1         # event batch it is valid for
+        # inlined PerfModel ITL coefficients — ``_itl_now`` is the scalar
+        # hot-path twin of ``PerfModel.itl`` (identical arithmetic; the
+        # method-call + attribute-chase overhead is what it removes)
+        self._c_mem_base = perf._mem_t_base
+        self._c_mem_kv = perf._mem_t_per_kvtok
+        self._c_comp = perf._comp_t_per_seq
+        self._c_coll = perf._coll_t
+        self._c_cap = perf._kv_cap
+        self._c_wall = 1.5 * perf._kv_cap if math.isfinite(perf._kv_cap) \
+            else _INF
+        self._c_prefix = float(perf.prefix_hit_tokens) \
+            if perf.prefix_caching else 0.0
+        self._c_spec = perf.speculative_decoding
+        self._c_spec_over = perf.spec_draft_overhead
+        self._c_spec_speed = perf.spec_accept_speedup
+        # prefill_time twin: (2 * n_active) * eff_len / flops + overhead
+        # with the same grouping as PerfModel.prefill_time
+        self._c_2na = 2 * perf.n_active
+        self._c_flops = perf._flops_per_s
+        self._c_pc = perf.prefix_caching
+        self._c_hit = perf.prefix_hit_tokens
 
     # ------------------------------------------------------------ state
     def activate_if_ready(self, now: float) -> None:
         if self.state == InstanceState.LOADING and now >= self.ready_time:
             self.state = InstanceState.ACTIVE
             self.active = True
+            c = self._cluster
+            if c is not None:
+                c.n_loading -= 1
+                c._active[self.id] = self
+                c.route_version += 1
+            if self.slot >= 0:
+                self._plane.active[self.slot] = True
 
     @property
     def max_batch_size(self) -> int:
@@ -150,7 +386,7 @@ class SimInstance:
         return self._kv_tokens
 
     def kv_utilization(self) -> float:
-        cap = self.perf.kv_capacity_tokens()
+        cap = self._c_cap
         if not math.isfinite(cap):
             return self.n_running / max(self.max_batch_size, 1)
         return self.kv_tokens() / cap
@@ -158,11 +394,28 @@ class SimInstance:
     def slot_utilization(self) -> float:
         return self.n_running / max(self.max_batch_size, 1)
 
+    def _itl_now(self, b: int, ctx: float) -> float:
+        """Scalar ITL at batch ``b`` / mean context ``ctx`` — inlined
+        ``PerfModel.itl`` (identical operation order, hence identical
+        floats) times the degradation ``slow_factor``."""
+        mem_t = self._c_mem_base + b * ctx * self._c_mem_kv
+        comp_t = b * self._c_comp
+        t = max(mem_t, comp_t) + self._c_coll + STEP_OVERHEAD
+        if self._c_spec:
+            t = t * (1 + self._c_spec_over * math.sqrt(b)) \
+                / self._c_spec_speed
+        cap = self._c_cap
+        if cap != _INF:
+            demand = b * (ctx + self._c_prefix)
+            if demand > cap:
+                over = demand / cap - 1.0
+                t *= 1.0 + 4.0 * over + 8.0 * over * over
+        return t * self.slow_factor
+
     def current_itl(self) -> float:
         if not self.running:
             return 0.0
-        return self.perf.itl(self.n_running, max(self.mean_ctx(), 1.0)) \
-            * self.slow_factor
+        return self._itl_now(len(self.running), max(self.mean_ctx(), 1.0))
 
     def current_throughput(self) -> float:
         if not self.running:
@@ -174,8 +427,7 @@ class SimInstance:
         spare = self.max_batch_size - self.n_running
         if spare <= 0:
             return 0.0
-        itl = self.perf.itl(self.max_batch_size, max(self.mean_ctx(), 512.0)) \
-            * self.slow_factor
+        itl = self._itl_now(self.max_batch_size, max(self.mean_ctx(), 512.0))
         return spare / itl
 
     def update_health(self, alpha: float = 0.5) -> None:
@@ -199,38 +451,48 @@ class SimInstance:
 
     def min_itl_slo(self) -> float:
         if not self._slo_counts:
-            return float("inf")
+            return _INF
         return min(self._slo_counts)
 
     # ------------------------------------------------------------ intake
     def can_admit(self, req: Request) -> bool:
-        if not self.active or self.n_running >= self.max_batch_size:
+        if not self.active or len(self.running) >= self.max_batch_size:
             return False
         if req.model != self.model:
             return False            # never serve a wrong-model request
-        cap = self.perf.kv_capacity_tokens()
-        if math.isfinite(cap):
-            # hard admission wall well past the soft preemption inflection
-            if self.kv_tokens() + req.prompt_len > 1.5 * cap:
-                return False
+        # hard admission wall well past the soft preemption inflection
+        # (wall = 1.5 * kv capacity; inf when KV is unbounded)
+        if self.kv_tokens() + req.prompt_len > self._c_wall:
+            return False
         return True
 
     def admit(self, req: Request, now: float) -> None:
         if self.event_mode and self.last_advance < now:
-            self.advance(now)        # settle old composition first
+            self.advance(now, False)  # settle old composition first
         restored = req.saved_kv is not None
         ctx = float(req.prompt_len + req.tokens_generated)
-        prefill = 0.0 if restored else self.perf.prefill_time(req.prompt_len)
         if restored:
+            prefill = 0.0
             req.saved_kv = None
+        else:
+            # inlined PerfModel.prefill_time (identical grouping/floats)
+            eff = req.prompt_len
+            if self._c_pc:
+                eff = max(eff - self._c_hit, 16)
+            prefill = self._c_2na * eff / self._c_flops + STEP_OVERHEAD
         req.state = RequestState.RUNNING
+        c = self._cluster
+        led = c.ledger if c is not None else None
+        if led is not None and req.row >= 0:
+            led.state[req.row] = _ledger.RUNNING
         s = SimSeq(req, ctx, prefill, gen_f=float(req.tokens_generated))
         self.running[req.req_id] = s
-        if self._cluster is not None:
-            self._cluster.total_running += 1
-        self._slo_counts[req.slo.itl] = \
-            self._slo_counts.get(req.slo.itl, 0) + 1
-        if req.is_interactive:
+        if c is not None:
+            c.total_running += 1
+        sc = self._slo_counts
+        k = req.slo.itl
+        sc[k] = sc.get(k, 0) + 1
+        if req.request_type == RequestType.INTERACTIVE:
             self._n_interactive += 1
         else:
             self._batch_lifo.append(req.req_id)
@@ -244,7 +506,10 @@ class SimInstance:
                 self._enter_decode(s, self.vclock)
                 if req.first_token_time is None:
                     req.first_token_time = now
+                    if led is not None and req.row >= 0:
+                        led.first_token_time[req.row] = now
             self.mark_dirty()
+            self._sync_plane()
         else:
             self._kv_tokens += ctx
 
@@ -254,18 +519,23 @@ class SimInstance:
         if self.n_running_batch() == 0:
             return None
         if self.event_mode:
-            self.advance(now)        # settle old composition first
+            self.advance(now, False)  # settle old composition first
         while self._batch_lifo:      # most-recent batch admit still running
             s = self.running.get(self._batch_lifo.pop())
             if s is None or s.request.request_type != RequestType.BATCH:
                 continue             # stale entry (finished/evicted)
             self._materialize(s)
             self._remove_seq(s)
-            s.request.state = RequestState.PREEMPTED
-            s.request.preemptions += 1
-            s.request.saved_kv = ("sim", s.ctx_tokens)
+            r = s.request
+            r.state = RequestState.PREEMPTED
+            r.preemptions += 1
+            r.saved_kv = ("sim", s.ctx_tokens)
+            c = self._cluster
+            if c is not None and c.ledger is not None and r.row >= 0:
+                c.ledger.state[r.row] = _ledger.PREEMPTED
             self.mark_dirty()
-            return s.request
+            self._sync_plane()
+            return r
         return None
 
     # ----------------------------------------------------- seq bookkeeping
@@ -285,19 +555,24 @@ class SimInstance:
             s.gen_f = min(s.gen_base + self.vclock,
                           float(s.request.output_len))
             s.ctx_tokens = s.ctx_base + self.vclock
-            s.request.tokens_generated = int(s.gen_f)
+            r = s.request
+            r.tokens_generated = int(s.gen_f)
+            c = self._cluster
+            if c is not None and c.ledger is not None and r.row >= 0:
+                c.ledger.tokens_generated[r.row] = r.tokens_generated
 
     def _remove_seq(self, s: SimSeq) -> None:
         r = s.request
         del self.running[r.req_id]
         if self._cluster is not None:
             self._cluster.total_running -= 1
-        c = self._slo_counts.get(r.slo.itl, 0) - 1
+        sc = self._slo_counts
+        c = sc.get(r.slo.itl, 0) - 1
         if c > 0:
-            self._slo_counts[r.slo.itl] = c
+            sc[r.slo.itl] = c
         else:
-            self._slo_counts.pop(r.slo.itl, None)
-        if r.is_interactive:
+            sc.pop(r.slo.itl, None)
+        if r.request_type == RequestType.INTERACTIVE:
             self._n_interactive -= 1
         if self.event_mode:
             if s.decoding:
@@ -317,16 +592,76 @@ class SimInstance:
     # --------------------------------------------------- event-driven core
     def mark_dirty(self) -> None:
         """Flag this instance for completion-event rescheduling (and pending
-        finish collection) at the end of the current event batch."""
-        if self._cluster is not None:
-            self._cluster.dirty.add(self)
+        finish collection) at the end of the current event batch. Also
+        bumps the cluster's route version: anything that marks an instance
+        dirty may have freed capacity, so saturated-lane routing memos
+        must be revalidated."""
+        c = self._cluster
+        if c is not None:
+            c.dirty.add(self)
+            c.route_version += 1
+
+    def _sync_plane(self) -> None:
+        """Mirror this instance's fluid scalars into the plane columns
+        (and invalidate its cached completion ETA). Below the vectorized
+        cut-over (``cluster.plane_live`` unarmed) only the ETA stamp is
+        touched — the columns would never be read, and arming resyncs
+        every instance from scratch."""
+        self._eta_stamp = -1
+        s = self.slot
+        if s < 0:
+            return
+        c = self._cluster
+        if c is None or not c.plane_live:
+            return
+        pl = self._plane
+        pl.vclock[s] = self.vclock
+        pl.last_advance[s] = self.last_advance
+        pl.n_running[s] = len(self.running)
+        pl.n_dec[s] = self._n_dec
+        pl.kv_prefill[s] = self._kv_prefill
+        pl.kv_dec_base[s] = self._kv_dec_base
+        # mirror *cleaned* heads: a stale head (seq evicted/finished) is
+        # conservative for the crossing check but would poison the
+        # vectorized ETA with a too-early event the scalar path (which
+        # cleans inside next_event_in) would never schedule
+        pl.next_prefill[s], pl.next_vfin[s] = self._clean_heads()
+
+    def _clean_heads(self) -> Tuple[float, float]:
+        """Pop invalid heap tops (departed/re-entered seqs) and return the
+        earliest *valid* (prefill completion time, decode virtual finish)
+        — inf where none. Popping invalid entries is unobservable: every
+        consumer validity-checks entries anyway."""
+        running = self.running
+        ph = self._prefill_heap
+        np_ = _INF
+        while ph:
+            t_done, rid = ph[0]
+            s = running.get(rid)
+            if s is None or s.decoding or s.prefill_done_t != t_done:
+                heapq.heappop(ph)
+                continue
+            np_ = t_done
+            break
+        dh = self._decode_heap
+        nv = _INF
+        while dh:
+            vfin, rid = dh[0]
+            s = running.get(rid)
+            if s is None or not s.decoding or abs(
+                    (s.request.output_len - s.gen_base) - vfin) > 1e-6:
+                heapq.heappop(dh)
+                continue
+            nv = vfin
+            break
+        return np_, nv
 
     def drain_finished(self) -> List[Request]:
         out = self._pending_finished
         self._pending_finished = []
         return out
 
-    def advance(self, now: float) -> None:
+    def advance(self, now: float, store_eta: bool = True) -> None:
         """Fluid catch-up to ``now`` under the current (fixed) composition —
         the event-core counterpart of :meth:`step`.
 
@@ -334,22 +669,55 @@ class SimInstance:
         by moving ``vclock``; prefill→decode transitions and finishes pop
         off heaps at their exact crossing times (interpolated, so a
         completion estimate firing slightly late is harmless).
+
+        ``store_eta`` caches the post-advance completion ETA in the plane
+        (what ``next_event_in`` would recompute at the sweep) — callers
+        that immediately change the composition again (an admit settle)
+        pass False to skip the wasted work.
         """
         dt = now - self.last_advance
         t0 = self.last_advance
         self.last_advance = now
-        if dt <= 0 or not self.active or not self.running:
+        running = self.running
+        if dt <= 0 or not self.active or not running:
+            if self.slot >= 0 and self._cluster is not None \
+                    and self._cluster.plane_live:
+                self._plane.last_advance[self.slot] = now
             return
-        self.mark_dirty()
-        itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0)) \
-            * self.slow_factor
-        q = self._cluster.quantize if self._cluster else 0.0
+        cluster = self._cluster
+        if cluster is not None:
+            cluster.dirty.add(self)          # inline mark_dirty
+            cluster.route_version += 1
+        # inline _itl_now at max(mean_ctx, 1.0) — identical float sequence
+        n = len(running)
+        v_old = self.vclock
+        ctx = (self._kv_prefill + self._kv_dec_base
+               + self._n_dec * v_old) / n
+        if ctx < 1.0:
+            ctx = 1.0
+        mem_t = self._c_mem_base + n * ctx * self._c_mem_kv
+        comp_t = n * self._c_comp
+        itl = (mem_t if mem_t >= comp_t else comp_t) \
+            + self._c_coll + STEP_OVERHEAD
+        if self._c_spec:
+            itl = itl * (1 + self._c_spec_over * math.sqrt(n)) \
+                / self._c_spec_speed
+        cap = self._c_cap
+        if cap != _INF:
+            demand = n * (ctx + self._c_prefix)
+            if demand > cap:
+                over = demand / cap - 1.0
+                itl *= 1.0 + 4.0 * over + 8.0 * over * over
+        sf = self.slow_factor
+        if sf != 1.0:
+            itl *= sf
+        q = cluster.quantize if cluster is not None else 0.0
         if q > 0:
             # fixed-tick parity: int(q/itl) tokens per tick, no carry
             per_tick = int(q / itl + 1e-9)
             itl = q / per_tick if per_tick > 0 else _STALLED_ITL
         toks = 0.0
-        v_old = self.vclock
+        led = cluster.ledger if cluster is not None else None
 
         # 1. prefill completions due within (t0, now]: seq starts decoding
         #    mid-interval with vclock credit from its entry point
@@ -357,7 +725,7 @@ class SimInstance:
         entry_debt = 0.0
         while ph and ph[0][0] <= now + 1e-12:
             t_done, rid = heapq.heappop(ph)
-            s = self.running.get(rid)
+            s = running.get(rid)
             if s is None or s.decoding or s.prefill_done_t != t_done:
                 continue                     # stale (departed/re-admitted)
             s.prefill_left = 0.0
@@ -365,6 +733,8 @@ class SimInstance:
             r = s.request
             if r.first_token_time is None:
                 r.first_token_time = t_done
+                if led is not None and r.row >= 0:
+                    led.first_token_time[r.row] = t_done
                 s.gen_f += 1.0
                 s.ctx_tokens += 1.0
                 toks += 1.0
@@ -379,13 +749,14 @@ class SimInstance:
 
             # 3. finishes: pop virtual finish times the clock crossed
             dh = self._decode_heap
-            while dh and dh[0][0] <= self.vclock + 1e-9:
+            vclock = self.vclock
+            while dh and dh[0][0] <= vclock + 1e-9:
                 vfin, rid = heapq.heappop(dh)
-                s = self.running.get(rid)
+                s = running.get(rid)
                 if s is None or not s.decoding or abs(
                         (s.request.output_len - s.gen_base) - vfin) > 1e-6:
                     continue                 # stale entry
-                over_v = self.vclock - vfin  # tokens past the true finish
+                over_v = vclock - vfin       # tokens past the true finish
                 toks -= over_v
                 s.ctx_tokens = s.ctx_base + vfin
                 s.gen_f = float(s.request.output_len)
@@ -400,26 +771,50 @@ class SimInstance:
                 # one lifetime-mean ITL sample (the event core records the
                 # mean the SLO check reads, not per-tick samples)
                 span = r.finish_time - r.first_token_time
-                r.itl_samples.append(
-                    span / max(float(r.output_len) - 1.0, 1.0))
+                mean = span / max(float(r.output_len) - 1.0, 1.0)
+                r.itl_samples.append(mean)
+                if led is not None and r.row >= 0:
+                    row = r.row
+                    led.state[row] = _ledger.FINISHED
+                    led.tokens_generated[row] = r.output_len
+                    led.first_token_time[row] = r.first_token_time
+                    led.finish_time[row] = r.finish_time
+                    led.mean_itl[row] = mean
                 self._pending_finished.append(r)
 
-        if toks and self._cluster is not None:
-            self._cluster.tok_accum += toks
+        if toks and cluster is not None:
+            cluster.tok_accum += toks
+        # cache the sweep's completion ETA while everything is hot (heads
+        # cleaned first so the plane mirrors valid heads); any later
+        # composition change re-invalidates the stamp via _sync_plane
+        do_eta = store_eta and running and cluster is not None \
+            and q == 0.0
+        if do_eta:
+            # post-pop composition ITL, computed once and shared with the
+            # eta (exactly what next_event_in would recompute)
+            n2 = len(running)
+            ctx2 = (self._kv_prefill + self._kv_dec_base
+                    + self._n_dec * self.vclock) / n2
+            if ctx2 < 1.0:
+                ctx2 = 1.0
+            eta = self._compute_eta(self._itl_now(n2, ctx2))
+        self._sync_plane()
+        if do_eta:
+            self._eta_val = eta
+            self._eta_stamp = cluster.batch_seq
 
-    def next_event_in(self) -> float:
-        """Seconds until this instance's next intrinsic event (a prefill
-        completing or the earliest finish) under the current composition;
-        inf when idle. Floored at the cluster's completion grain so nearby
-        finishes coalesce into one event (and a late-drifting estimate
-        re-fires geometrically rather than spinning)."""
-        if not self.active or not self.running:
-            return float("inf")
-        best = float("inf")
+    def _compute_eta(self, itl: Optional[float] = None) -> float:
+        """Shared body of :meth:`next_event_in`: clean stale heap heads,
+        return the grain-floored seconds until the next intrinsic event
+        under the *current* composition. ``itl`` short-circuits the
+        composition ITL when the caller (``advance``) just computed it —
+        only valid with quantize off."""
+        best = _INF
+        running = self.running
         ph = self._prefill_heap
         while ph:
             t_done, rid = ph[0]
-            s = self.running.get(rid)
+            s = running.get(rid)
             if s is None or s.decoding or s.prefill_done_t != t_done:
                 heapq.heappop(ph)
                 continue
@@ -428,23 +823,34 @@ class SimInstance:
         dh = self._decode_heap
         while dh:
             vfin, rid = dh[0]
-            s = self.running.get(rid)
+            s = running.get(rid)
             if s is None or not s.decoding or abs(
                     (s.request.output_len - s.gen_base) - vfin) > 1e-6:
                 heapq.heappop(dh)
                 continue
-            itl = self.perf.itl(len(self.running), max(self.mean_ctx(), 1.0)) \
-                * self.slow_factor
-            q = self._cluster.quantize if self._cluster else 0.0
-            if q > 0:
-                per_tick = int(q / itl + 1e-9)
-                itl = q / per_tick if per_tick > 0 else _STALLED_ITL
+            if itl is None:
+                itl = self._itl_now(len(running), max(self.mean_ctx(), 1.0))
+                cluster = self._cluster
+                q = cluster.quantize if cluster is not None else 0.0
+                if q > 0:
+                    per_tick = int(q / itl + 1e-9)
+                    itl = q / per_tick if per_tick > 0 else _STALLED_ITL
             eta = (vfin - self.vclock) * itl
             if eta < 1e11:               # stalled seqs schedule nothing
                 best = min(best, eta)
             break
         grain = self._cluster.completion_grain if self._cluster else 1e-3
         return max(best, grain)
+
+    def next_event_in(self) -> float:
+        """Seconds until this instance's next intrinsic event (a prefill
+        completing or the earliest finish) under the current composition;
+        inf when idle. Floored at the cluster's completion grain so nearby
+        finishes coalesce into one event (and a late-drifting estimate
+        re-fires geometrically rather than spinning)."""
+        if not self.active or not self.running:
+            return _INF
+        return self._compute_eta()
 
     # ------------------------------------------------------------ stepping
     def step(self, dt: float, now: float) -> Tuple[List[Request], int]:
@@ -453,7 +859,7 @@ class SimInstance:
         if not self.active or not self.running:
             return [], 0
         b = self.n_running
-        itl = self.perf.itl(b, max(self.mean_ctx(), 1.0)) * self.slow_factor
+        itl = self._itl_now(b, max(self.mean_ctx(), 1.0))
         finished: List[Request] = []
         tokens_out = 0
         for s in list(self.running.values()):
@@ -490,8 +896,9 @@ class SimInstance:
     def update_local_autoscaler(self) -> None:
         if self.local is None or not self.running:
             return
-        m = LocalMetrics(observed_itl=self.current_itl(),
-                         throughput=self.current_throughput(),
+        itl = self.current_itl()
+        m = LocalMetrics(observed_itl=itl,
+                         throughput=self.n_running / itl,
                          itl_slo=self.min_itl_slo(),
                          n_active=self.n_running,
                          batch_size=self.local.max_batch_size)
@@ -519,7 +926,25 @@ class SimCluster:
         # (one Algorithm-2 loop per model) reads these instead of filtering
         self._model_pools: Dict[Tuple[str, InstanceType],
                                 List[SimInstance]] = {}
+        self._model_count: Dict[str, int] = {}   # model -> live instances
+        self._pool_pairs: Dict[str, Tuple[List[SimInstance],
+                                          List[SimInstance]]] = {}
         self.total_running = 0       # running seqs cluster-wide (O(1) idle check)
+        # O(1) registries: live ACTIVE instances keyed by id (provision
+        # order; failure/degradation victim draws sort the small key set
+        # instead of scanning every instance), count of LOADING instances
+        # (quiescence check), and provisions not yet given a READY event
+        self._active: Dict[int, SimInstance] = {}
+        self.n_loading = 0
+        self.new_loading: List[SimInstance] = []
+        # bumped whenever admission capacity may have improved (instance
+        # dirtied / activated / provisioned); saturated-lane routing memos
+        # key on it — see BaseController.route_interactive
+        self.route_version = 0
+        # current event-batch stamp (set by the event loops each
+        # iteration; keys the routing memo's once-per-batch arm and the
+        # plane's completion-ETA cache)
+        self.batch_seq = 0
         # --- event-core state (unused on the fixed-tick path) ---
         self.event_mode = False
         self.now = 0.0               # sim time chip accounting is valid at
@@ -534,6 +959,20 @@ class SimCluster:
         # rates emulate the tick loop's integer truncation (int(dt/itl)
         # tokens per tick, no carry) so both engines share dynamics
         self.quantize = 0.0
+        # columnar outcome store installed by the event engines; None =
+        # object-only recording (fixed tick, bare unit-test clusters)
+        self.ledger = None
+        # struct-of-arrays instance plane; ``catch_up`` uses the vectorized
+        # pass at >= vec_min live instances (NumPy fixed costs lose below),
+        # the scalar per-object loop otherwise. Equivalence tests pin
+        # vec_min to 0/huge to force either path.
+        self.plane = InstancePlane()
+        self.vec_min = 33
+        # armed once the fleet is big enough that the vectorized pass may
+        # run: column syncs are skipped while unarmed (nothing reads
+        # them) and arming does one full resync. Hysteresis on disarm
+        # keeps a fleet hovering at the threshold from thrashing.
+        self.plane_live = False
 
     # ------------------------------------------------------------ queries
     def by_type(self, itype: InstanceType) -> List[SimInstance]:
@@ -545,10 +984,29 @@ class SimCluster:
         """Live (model, type) pool — same read-only contract as by_type."""
         return self._model_pools.setdefault((model, itype), [])
 
+    def pool_pair(self, model: str) -> Tuple[List[SimInstance],
+                                             List[SimInstance]]:
+        """(interactive pool, mixed pool) for ``model`` — the per-arrival
+        routing pair, cached by model name. Pool list objects are stable
+        (mutated in place, never replaced), so the cache never goes
+        stale."""
+        pair = self._pool_pairs.get(model)
+        if pair is None:
+            pair = self._pool_pairs[model] = (
+                self.by_model(model, InstanceType.INTERACTIVE),
+                self.by_model(model, InstanceType.MIXED))
+        return pair
+
     def instances_of(self, model: str) -> List[SimInstance]:
         """All live instances serving ``model`` (every type)."""
         return [i for t in InstanceType
                 for i in self._model_pools.get((model, t), ())]
+
+    def n_instances_of(self, model: str) -> int:
+        """O(1) live-instance count for ``model`` (maintained counter —
+        the per-tick bootstrap/skip checks in the controller use this
+        instead of building the ``instances_of`` list)."""
+        return self._model_count.get(model, 0)
 
     def models_present(self) -> List[str]:
         """Distinct models with at least one live instance."""
@@ -559,6 +1017,25 @@ class SimCluster:
 
     def active_instances(self) -> List[SimInstance]:
         return [i for i in self.instances if i.active]
+
+    def active_sorted(self) -> List[SimInstance]:
+        """Active instances in id order (failure/degradation victim draws;
+        O(a log a) over the registry, not O(n) over every instance)."""
+        out = list(self._active.values())
+        out.sort(key=lambda i: i.id)
+        return out
+
+    @property
+    def n_active(self) -> int:
+        return len(self._active)
+
+    def counts_by_type(self) -> Tuple[int, int, int]:
+        """O(1) (interactive, mixed, batch) live-instance counts — the
+        timeline-sample fast path."""
+        p = self._pools
+        return (len(p[InstanceType.INTERACTIVE]),
+                len(p[InstanceType.MIXED]),
+                len(p[InstanceType.BATCH]))
 
     def used_chips(self) -> int:
         return self._used_chips
@@ -580,13 +1057,44 @@ class SimCluster:
                            **inst_kw)
         inst.event_mode = self.event_mode
         inst._cluster = self
+        inst._plane = self.plane
+        inst.slot = self.plane.alloc(inst)
         self.instances.append(inst)
         self._pools[itype].append(inst)
         self._model_pools.setdefault((model, itype), []).append(inst)
+        self._model_count[model] = self._model_count.get(model, 0) + 1
         self.scale_ups += 1
         self._used_chips += perf.chips
         self.peak_chips = max(self.peak_chips, self._used_chips)
+        self.n_loading += 1
+        self.route_version += 1
+        if self.event_mode:
+            self.new_loading.append(inst)
+        if not self.plane_live and len(self.instances) >= self.vec_min:
+            self._arm_plane()
         return inst
+
+    def _arm_plane(self) -> None:
+        """Arm the vectorized plane: resync every live instance's columns
+        (they were skipped while unarmed), then keep them in sync."""
+        self.plane_live = True
+        pl = self.plane
+        for inst in self.instances:
+            s = inst.slot
+            if s < 0:
+                continue
+            pl.active[s] = inst.active
+            pl.slow[s] = inst.slow_factor
+            inst._sync_plane()
+
+    def drain_new_loading(self) -> List[SimInstance]:
+        """Instances provisioned since the last drain that still need a
+        READY event scheduled (O(new) — replaces the per-tick scan over
+        every instance)."""
+        out = [i for i in self.new_loading
+               if i.state == InstanceState.LOADING]
+        self.new_loading.clear()
+        return out
 
     def retire(self, inst: SimInstance) -> List[Request]:
         """Remove an instance; returns displaced requests for requeueing."""
@@ -601,15 +1109,19 @@ class SimCluster:
         decode progress runs slow; in-flight work stays put (the partial
         failure mode crashes cannot model)."""
         if self.event_mode:
-            inst.advance(now)        # settle at the healthy rate first
+            inst.advance(now, False)  # settle at the healthy rate first
         inst.slow_factor = factor
+        if inst.slot >= 0:
+            self.plane.slow[inst.slot] = factor
         inst.mark_dirty()            # completion estimates must re-fire
         self.degradations += 1
 
     def recover_instance(self, inst: SimInstance, now: float) -> None:
         if self.event_mode:
-            inst.advance(now)        # settle at the degraded rate first
+            inst.advance(now, False)  # settle at the degraded rate first
         inst.slow_factor = 1.0
+        if inst.slot >= 0:
+            self.plane.slow[inst.slot] = 1.0
         inst.mark_dirty()
 
     def fail_instance(self, inst: SimInstance) -> List[Request]:
@@ -624,14 +1136,17 @@ class SimCluster:
 
     def _remove_instance(self, inst: SimInstance) -> List[Request]:
         if self.event_mode:
-            inst.advance(self.now)   # settle fluid state first
+            inst.advance(self.now, False)   # settle fluid state first
             self.dirty.add(inst)     # pending finishes still get drained
+        led = self.ledger
         displaced = []
         for s in inst.running.values():
             inst._materialize(s)
             r = s.request
             r.state = RequestState.PREEMPTED
             r.saved_kv = None   # instance gone; must re-prefill elsewhere
+            if led is not None and r.row >= 0:
+                led.state[r.row] = _ledger.PREEMPTED
             displaced.append(r)
         self.total_running -= len(inst.running)
         inst.running.clear()
@@ -644,12 +1159,22 @@ class SimCluster:
         inst._slo_counts.clear()
         inst._prefill_heap.clear()
         inst._decode_heap.clear()
+        if inst.state == InstanceState.LOADING:
+            self.n_loading -= 1
         inst.state = InstanceState.RETIRED
         inst.active = False
+        self._active.pop(inst.id, None)
+        if inst.slot >= 0:
+            self.plane.free(inst.slot)
+            inst.slot = -1
         self.instances.remove(inst)
         self._pools[inst.itype].remove(inst)
         self._model_pools[(inst.model, inst.itype)].remove(inst)
+        self._model_count[inst.model] -= 1
         self._used_chips -= inst.perf.chips
+        self.route_version += 1
+        if self.plane_live and len(self.instances) < self.vec_min // 2:
+            self.plane_live = False          # hysteresis disarm
         return displaced
 
     def tick_accounting(self, dt: float) -> None:
@@ -663,12 +1188,41 @@ class SimCluster:
             self.chip_seconds += self._used_chips * (t - self.now)
             self.now = t
 
+    def catch_up(self, t: float, batch_seq: int = -1) -> None:
+        """Align every instance's fluid state with ``t`` (control ticks).
+
+        At or above ``vec_min`` live instances this is one vectorized
+        plane pass (plus scalar fall-back for instances with a crossing
+        intrinsic event); below, the scalar loop — bit-identical results
+        either way. Quantize mode always takes the scalar loop (the tick
+        emulation's integer truncation isn't worth vectorizing)."""
+        insts = self.instances
+        if self.quantize > 0 or not self.event_mode \
+                or len(insts) < self.vec_min:
+            for inst in insts:
+                inst.advance(t)
+            return
+        if not self.plane_live:
+            self._arm_plane()        # vec_min lowered after provisioning
+        self.plane.catch_up(t, self, batch_seq)
+
+    def cached_eta(self, inst: SimInstance, batch_seq: int) -> float:
+        """The completion ETA ``catch_up`` vector-computed for ``inst`` in
+        event batch ``batch_seq``, or -1 when unavailable (mutated since /
+        never computed) — the sweep then calls ``next_event_in``."""
+        if inst._eta_stamp == batch_seq:
+            return inst._eta_val
+        return -1.0
+
     def drain_dirty(self) -> List[SimInstance]:
         # deterministic order: set iteration is address-dependent, and this
         # order fixes event tie-breaks, backfill order, and the sequence
         # completions reach the estimator — same seed must mean same run
-        out = sorted(self.dirty, key=lambda i: i.id)
-        self.dirty.clear()
+        d = self.dirty
+        if len(d) == 1:
+            return [d.pop()]
+        out = sorted(d, key=_by_id)
+        d.clear()
         return out
 
     def take_tokens(self) -> float:

@@ -25,8 +25,9 @@ from repro.core.global_autoscaler import BatchAutoscaler, InteractiveAutoscaler
 from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.waiting_time import WaitingTimeEstimator
 from repro.serving.global_queue import GlobalQueue
-from repro.serving.request import Request
-from repro.sim.cluster import InstanceType, SimCluster, SimInstance
+from repro.serving.request import Request, RequestType
+from repro.sim.cluster import (SLOW_SUSPECT_RATIO, InstanceType, SimCluster,
+                               SimInstance)
 
 
 def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
@@ -46,6 +47,46 @@ def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
     return max(healthy or cands, key=lambda i: i.slot_utilization())
 
 
+def _scan_admit(pool: List[SimInstance],
+                req: Request) -> Optional[SimInstance]:
+    """One fused pass over a same-model pool: admission check (active,
+    batch slot free, KV wall) and best-fit packing (max slot utilization,
+    first max wins, suspected-slow instances only as a last resort) —
+    semantically identical to ``_best_fit([i for i in pool if
+    i.can_admit(req)])`` but without building candidate lists or paying a
+    method call per instance. This is the per-arrival routing hot path."""
+    best = None
+    best_u = -1.0
+    slow_best = None
+    slow_u = -1.0
+    pl = req.prompt_len
+    for inst in pool:
+        if not inst.active:
+            continue
+        n = len(inst.running)
+        loc = inst.local
+        mb = loc.max_batch_size if loc is not None \
+            else (inst.static_batch or 64)
+        if n >= mb:
+            continue
+        wall = inst._c_wall
+        if wall != float("inf"):
+            if inst.event_mode:
+                kv = inst._kv_prefill + inst._kv_dec_base \
+                    + inst._n_dec * inst.vclock
+            else:
+                kv = inst._kv_tokens
+            if kv + pl > wall:
+                continue
+        u = n / mb if mb >= 1 else float(n)
+        if inst.health_ewma > SLOW_SUSPECT_RATIO:
+            if u > slow_u:
+                slow_u, slow_best = u, inst
+        elif u > best_u:
+            best_u, best = u, inst
+    return best if best is not None else slow_best
+
+
 class BaseController:
     """Shared routing: interactive -> interactive then mixed (preempting
     batch); batch -> batch instances then spare mixed capacity; every
@@ -60,7 +101,7 @@ class BaseController:
     serves_batch_on_mixed = True
 
     def route(self, cluster: SimCluster, queue: GlobalQueue, now: float) -> None:
-        self.route_interactive(cluster, queue, now)
+        self.route_interactive(cluster, queue, now, use_memo=False)
         if not queue.n_batch:
             return
         for model in queue.batch_models():
@@ -71,41 +112,142 @@ class BaseController:
                 self.backfill(pool, queue, now)
 
     def route_interactive(self, cluster: SimCluster, queue: GlobalQueue,
-                          now: float) -> None:
+                          now: float, use_memo: bool = True) -> None:
         if not queue.n_interactive:     # hot path: most events route nothing
             return
         # ---- interactive: zero-queuing, one pass per model lane
         for model in queue.interactive_models():
-            self._route_interactive_model(cluster, queue, model, now)
+            self._route_interactive_model(cluster, queue, model, now,
+                                          use_memo)
 
     def _route_interactive_model(self, cluster: SimCluster,
                                  queue: GlobalQueue, model: str,
-                                 now: float) -> None:
-        while queue.n_interactive_for(model):
+                                 now: float, use_memo: bool = True) -> None:
+        if not isinstance(cluster, SimCluster):
+            # duck-typed cluster (RealCluster): the generic can_admit
+            # path — no memo, no coefficient-cached scan
             req = queue.peek_interactive(model)
-            placed = False
-            for pool in (cluster.by_model(model, InstanceType.INTERACTIVE),
-                         cluster.by_model(model, InstanceType.MIXED)):
-                inst = _best_fit([i for i in pool if i.can_admit(req)])
-                if inst is not None:
-                    inst.admit(queue.pop_interactive(model), now)
-                    placed = True
+            while req is not None:
+                inst = self._find_slot_generic(cluster, queue, model,
+                                               req, now)
+                if inst is None:
                     break
-            if not placed:
-                # preempt a batch request on a same-model mixed instance
-                # (the O(1) batch-count guard keeps a saturated
-                # all-interactive cluster from rescanning every batch)
-                for inst in cluster.by_model(model, InstanceType.MIXED):
-                    if not inst.active or inst.n_running_batch() == 0:
-                        continue
-                    victim = inst.evict_one_batch(now)
-                    if victim is not None:
-                        queue.requeue(victim)
-                        inst.admit(queue.pop_interactive(model), now)
-                        placed = True
-                        break
-            if not placed:
-                break   # this model's pools saturated; request waits
+                inst.admit(queue.pop_interactive(model), now)
+                req = queue.peek_interactive(model)
+            return
+        # saturation memo: when this lane's head couldn't be placed, the
+        # outcome can only change once capacity moves — an instance frees a
+        # slot / activates / is provisioned (all bump ``route_version``) or
+        # the head itself changes (a front requeue). Until then the failed
+        # scan would just repeat, so skip it. A memo is
+        # ``(version, batch, head)`` and matches when the head is the same
+        # request and either the version or the event batch is unchanged
+        # (the batch arm covers verdicts whose own eviction pass mutated
+        # state — valid for the rest of that batch, stale after it). Full
+        # control-tick passes (``use_memo=False``) always rescan: local
+        # autoscalers may have raised batch ceilings without touching the
+        # version.
+        try:
+            blocked = self._route_blocked
+        except AttributeError:
+            blocked = self._route_blocked = {}
+        req = queue.peek_interactive(model)
+        if use_memo:
+            memo = blocked.get(model)
+            if memo is not None and memo[2] is req \
+                    and (memo[0] == cluster.route_version
+                         or memo[1] == cluster.batch_seq):
+                return
+        while req is not None:
+            # version *before* the attempt: a failed eviction pass can
+            # itself free capacity (its settle-advance pops finishes and
+            # bumps the version), and the memo must not mask that
+            v0 = cluster.route_version
+            inst = self._find_slot(cluster, queue, model, req, now)
+            if inst is None:
+                # lane saturated; record (pre-attempt version, head) so
+                # the next no-capacity-change event skips the scan
+                blocked[model] = (v0, -1, req)
+                break
+            inst.admit(queue.pop_interactive(model), now)
+            req = queue.peek_interactive(model)
+
+    def _find_slot(self, cluster: SimCluster, queue: GlobalQueue,
+                   model: str, req: Request,
+                   now: float) -> Optional[SimInstance]:
+        """Find (or make, by evicting batch work) a slot for one
+        interactive request: interactive pool, then mixed pool, then
+        batch preemption on a same-model mixed instance. The eviction
+        branch mutates (victim requeued); the caller admits into the
+        returned instance immediately."""
+        inter, mixed = cluster.pool_pair(model)
+        if inter:
+            inst = _scan_admit(inter, req)
+            if inst is not None:
+                return inst
+        if mixed:
+            inst = _scan_admit(mixed, req)
+            if inst is not None:
+                return inst
+            # preempt a batch request on a same-model mixed instance (the
+            # O(1) batch-count guard keeps a saturated all-interactive
+            # cluster from rescanning every batch)
+            for inst in mixed:
+                if not inst.active or len(inst.running) \
+                        - inst._n_interactive == 0:
+                    continue
+                victim = inst.evict_one_batch(now)
+                if victim is not None:
+                    queue.requeue(victim)
+                    return inst
+        return None
+
+    def _find_slot_generic(self, cluster, queue: GlobalQueue, model: str,
+                           req: Request, now: float):
+        """`_find_slot` for duck-typed clusters/instances (the real
+        engine): the original `can_admit`/`_best_fit` pass."""
+        for pool in (cluster.by_model(model, InstanceType.INTERACTIVE),
+                     cluster.by_model(model, InstanceType.MIXED)):
+            inst = _best_fit([i for i in pool if i.can_admit(req)])
+            if inst is not None:
+                return inst
+        for inst in cluster.by_model(model, InstanceType.MIXED):
+            if not inst.active or inst.n_running_batch() == 0:
+                continue
+            victim = inst.evict_one_batch(now)
+            if victim is not None:
+                queue.requeue(victim)
+                return inst
+        return None
+
+    def route_arrival(self, cluster: SimCluster, queue: GlobalQueue,
+                      req: Request, now: float) -> bool:
+        """Zero-queuing fast path for a single just-arrived interactive
+        request whose lane is empty (the event core calls this before
+        enqueueing, when no other event shares the timestamp): place it
+        directly — skipping the queue round-trip the full pass would
+        immediately undo — or return False for a normal enqueue, leaving
+        the saturation memo set exactly as a failed lane pass would."""
+        if req.request_type != RequestType.INTERACTIVE:
+            return False
+        v0 = cluster.route_version
+        inst = self._find_slot(cluster, queue, req.model, req, now)
+        if inst is None:
+            try:
+                blocked = self._route_blocked
+            except AttributeError:
+                blocked = self._route_blocked = {}
+            if cluster.route_version == v0:
+                # clean verdict: valid until capacity moves
+                blocked[req.model] = (v0, -1, req)
+            else:
+                # the attempt itself mutated state (eviction settle) so
+                # the verdict only holds for the rest of this event batch
+                # — exactly the once-per-batch attempt the full pass makes
+                blocked[req.model] = (-1, cluster.batch_seq, req)
+            return False
+        inst.admit(req, now)
+        return True
 
     def backfill(self, insts, queue: GlobalQueue, now: float) -> None:
         """Fill spare capacity on ``insts`` from their models' batch lanes.
@@ -114,16 +256,36 @@ class BaseController:
         for inst in insts:
             if inst.itype == InstanceType.INTERACTIVE:
                 continue             # interactive pool never serves batch
-            if inst.suspected_slow:
+            if inst.health_ewma > SLOW_SUSPECT_RATIO:
                 continue             # route around degraded nodes; the
                                      # batch scaler re-adds the capacity
+            model = inst.model
+            if not isinstance(inst, SimInstance):
+                # duck-typed instance (real engine): generic can_admit
+                while inst.active and inst.n_running < inst.max_batch_size \
+                        and queue.n_batch_for(model):
+                    req = queue.peek_batch(model)
+                    if not inst.can_admit(req):
+                        break
+                    inst.admit(queue.pop_batch_fcfs(model), now)
+                continue
+            wall = inst._c_wall
             # cheap slot-full rejection before touching the queue
-            while inst.active and inst.n_running < inst.max_batch_size \
-                    and queue.n_batch_for(inst.model):
-                req = queue.peek_batch(inst.model)
-                if not inst.can_admit(req):
+            while inst.active and queue.n_batch_for(model):
+                n = len(inst.running)
+                loc = inst.local
+                mb = loc.max_batch_size if loc is not None \
+                    else (inst.static_batch or 64)
+                if n >= mb:
                     break
-                inst.admit(queue.pop_batch_fcfs(inst.model), now)
+                if wall != float("inf"):
+                    req = queue.peek_batch(model)
+                    kv = inst._kv_prefill + inst._kv_dec_base \
+                        + inst._n_dec * inst.vclock if inst.event_mode \
+                        else inst._kv_tokens
+                    if kv + req.prompt_len > wall:
+                        break
+                inst.admit(queue.pop_batch_fcfs(model), now)
 
     def control(self, cluster: SimCluster, queue: GlobalQueue,
                 now: float) -> None:
@@ -179,6 +341,7 @@ class ChironController(BaseController):
         # behaviour is bit-identical).
         self.estimators: Dict[str, WaitingTimeEstimator] = {
             self.model: self.estimator}
+        self._out_models: Dict[str, object] = {}
         self._next_theta_update: Dict[str, float] = {}
         for m in self.model_list:
             self._register_model(m)
@@ -252,9 +415,12 @@ class ChironController(BaseController):
 
     # ------------------------------------------------------------ control
     def observe_arrival(self, req: Request, now: float) -> None:
-        self._ensure_model(req.model)
+        m = req.model
+        if m not in self.interactive_scalers:   # inline _ensure_model
+            self.model_list.append(m)
+            self._register_model(m)
         if self.auto_theta and req.is_interactive:
-            self._arrivals[req.model].append(now)
+            self._arrivals[m].append(now)
 
     def _refresh_theta(self, now: float) -> None:
         """Per-model Theta re-estimation: every model runs its own refresh
@@ -284,18 +450,23 @@ class ChironController(BaseController):
         # trace with many transient deployments must not pin a chip per
         # deployment forever.
         self._refresh_theta(now)
+        sim = isinstance(cluster, SimCluster)
         for m in self.model_list:
-            if cluster.instances_of(m):
+            if cluster.n_instances_of(m) if sim else cluster.instances_of(m):
                 continue
             if m in self._configured or queue.n_interactive_for(m) \
                     or queue.n_batch_for(m):
                 self._provision(cluster, InstanceType.MIXED, now, m)
 
         # 1. local autoscaling + health tracking on every instance (the
-        # health EWMA is the slow-node detection signal routing reads)
-        for inst in cluster.active_instances():
+        # health EWMA is the slow-node detection signal routing reads;
+        # updates are per-instance independent, so the active registry's
+        # order is as good as the instance list's and costs no scan)
+        local_enabled = self.local_enabled
+        for inst in (cluster._active.values() if sim
+                     else cluster.active_instances()):
             inst.update_health()
-            if self.local_enabled:
+            if local_enabled:
                 inst.update_local_autoscaler()
 
         # 2./3. one global loop per model, all sharing the chip budget.
@@ -305,7 +476,8 @@ class ChironController(BaseController):
         # seen in a long replay.
         if self.global_enabled:
             for m in self.model_list:
-                if not cluster.instances_of(m) \
+                if not (cluster.n_instances_of(m) if sim
+                        else cluster.instances_of(m)) \
                         and not queue.n_interactive_for(m) \
                         and not queue.n_batch_for(m):
                     continue
@@ -349,8 +521,10 @@ class ChironController(BaseController):
                     for i in cluster.by_model(model, InstanceType.MIXED)
                     if i.active)
         n_batch_inst = len(cluster.by_model(model, InstanceType.BATCH))
-        n_active_batch = sum(i.n_running_batch()
-                             for i in cluster.instances_of(model))
+        n_active_batch = 0
+        for itype in InstanceType:
+            for i in cluster.by_model(model, itype):
+                n_active_batch += i.n_running_batch()
         # pass the queue itself: request groups are maintained
         # incrementally off its per-model add/remove stream
         dec2 = scaler.update(
@@ -379,8 +553,13 @@ class ChironController(BaseController):
 
     def observe_completion(self, req: Request) -> None:
         # per-model output-length fit: each model's QLM estimator only
-        # sees its own completions
-        self._estimator_for(req.model).output_model.observe(req.output_len)
+        # sees its own completions (output models cached flat — this runs
+        # once per finished request)
+        om = self._out_models.get(req.model)
+        if om is None:
+            om = self._out_models[req.model] = \
+                self._estimator_for(req.model).output_model
+        om.observe(req.output_len)
 
 
 @dataclass

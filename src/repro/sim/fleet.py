@@ -210,10 +210,44 @@ class FleetCluster:
 
 @dataclass
 class Router:
-    """Tier-3 request routing by SLO headroom (bound to a Fleet)."""
+    """Tier-3 request routing by SLO headroom (bound to a Fleet).
+
+    Candidate orders are static for a fixed residency set — latency,
+    reference ITL, and $/Mtoken are all static per (model, origin) — so
+    they are cached and invalidated by the fleet's ``residency_epoch``
+    instead of re-sorted on every arrival (the per-arrival hot path of
+    ``simulate_fleet``)."""
 
     def bind(self, fleet: "Fleet") -> None:
         self._fleet = fleet
+        self._iorder: Dict[Tuple[str, str], Tuple[int, list]] = {}
+        self._border: Dict[str, Tuple[int, list]] = {}
+
+    def _actives_interactive(self, model: str, origin: str) -> list:
+        fleet = self._fleet
+        ep = fleet.residency_epoch
+        c = self._iorder.get((model, origin))
+        if c is None or c[0] != ep:
+            topo = fleet.topology
+            order = sorted((fc for fc in fleet.clusters
+                            if fc.resident.get(model) == "active"),
+                           key=lambda fc: (topo.latency(origin, fc.region),
+                                           fc.interactive_itl(model),
+                                           fc.name))
+            self._iorder[(model, origin)] = c = (ep, order)
+        return c[1]
+
+    def _actives_batch(self, model: str) -> list:
+        fleet = self._fleet
+        ep = fleet.residency_epoch
+        c = self._border.get(model)
+        if c is None or c[0] != ep:
+            order = sorted((fc for fc in fleet.clusters
+                            if fc.resident.get(model) == "active"),
+                           key=lambda fc: (fc.batch_cost_per_mtoken(model),
+                                           fc.name))
+            self._border[model] = c = (ep, order)
+        return c[1]
 
     def route(self, req: Request, now: float) -> Tuple[FleetCluster, float]:
         """Pick the serving cluster; returns ``(cluster, network_delay)``.
@@ -237,44 +271,38 @@ class Router:
         fleet = self._fleet
         origin = req.origin if req.origin else fleet.topology.regions[0]
         model = req.model
-        actives = [fc for fc in fleet.clusters
-                   if fc.resident.get(model) == "active"]
         if req.is_interactive:
-            fc = self._pick_interactive(actives, model, origin)
+            fc = self._pick_interactive(model, origin)
         else:
-            fc = self._pick_batch(actives, model)
+            fc = self._pick_batch(model)
         if fc is None:
             # cold start: nothing resident anywhere — nearest cluster with
             # budget becomes the model's discovered (floor-less) home
             fc = fleet.closest_cluster(origin, model) or fleet.clusters[0]
-            fc.resident.setdefault(model, "active")
+            if fc.resident.setdefault(model, "active") == "active":
+                fleet.residency_epoch += 1
         return fc
 
-    def _pick_interactive(self, actives: List[FleetCluster], model: str,
+    def _pick_interactive(self, model: str,
                           origin: str) -> Optional[FleetCluster]:
         """Lowest latency with capacity; spill farther on saturation;
         wait at the nearest resident cluster when the fleet is full."""
-        topo = self._fleet.topology
-        order = sorted(actives, key=lambda fc:
-                       (topo.latency(origin, fc.region),
-                        fc.interactive_itl(model), fc.name))
+        order = self._actives_interactive(model, origin)
         for fc in order:
             if fc.interactive_headroom(model) > 0:
                 return fc
         return order[0] if order else None
 
-    def _pick_batch(self, actives: List[FleetCluster],
-                    model: str) -> Optional[FleetCluster]:
+    def _pick_batch(self, model: str) -> Optional[FleetCluster]:
         """Cheapest backpressure-positive cluster (placer's consolidation
         target first); least-backlogged when every cluster is saturated."""
-        if not actives:
+        order = self._actives_batch(model)
+        if not order:
             return None
-        order = sorted(actives, key=lambda fc:
-                       (fc.batch_cost_per_mtoken(model), fc.name))
         tname = self._fleet.placer.batch_target.get(model)
         if tname is not None:
             tfc = self._fleet.by_name.get(tname)
-            if tfc is not None and tfc in actives:
+            if tfc is not None and tfc in order:
                 order = [tfc] + [fc for fc in order if fc is not tfc]
         for fc in order:
             if fc.batch_headroom(model) > 0:
@@ -562,6 +590,9 @@ class Fleet:
         self.handbacks = 0
         self.egress_bytes = 0.0
         self.egress_cost_usd = 0.0
+        # bumped whenever some model's set of active residencies changes;
+        # the Router's cached candidate orders key on it
+        self.residency_epoch = 0
 
     # ------------------------------------------------------------ helpers
     def add_egress(self, src: Optional[FleetCluster], nbytes: float) -> None:
@@ -598,6 +629,7 @@ class Fleet:
         if fc.resident.get(model) == "warming":
             fc.resident[model] = "active"
             fc.controller.set_model_placed(model, True)
+            self.residency_epoch += 1
 
     def drain(self, model: str, fc: FleetCluster, now: float) \
             -> List[Tuple[Request, FleetCluster, float]]:
@@ -610,6 +642,7 @@ class Fleet:
         fc.resident.pop(model, None)
         fc.controller.set_model_placed(model, False)
         fc.stats.migrations_out += 1
+        self.residency_epoch += 1
         out = []
         for r in fc.queue.drain_model(model):
             r.saved_kv = None

@@ -1,11 +1,21 @@
 """Experiment metrics: SLO attainment, throughput, GPU efficiency,
-hysteresis — plus per-cluster/per-region rollups for fleet runs."""
+hysteresis — plus per-cluster/per-region rollups for fleet runs.
+
+When a run carries a :class:`repro.sim.ledger.RequestLedger` (the event
+engines always install one), every aggregate — SLO attainment, per-model
+rollups, completion rate, token totals, mean ITL, TTFT percentiles — is a
+vectorized reduction over the ledger columns instead of a Python loop
+over a million ``Request`` objects; the object path is kept as the
+reference for ledger-less runs (fixed tick, hand-built results)."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.serving.request import Request, RequestState, RequestType
+from repro.sim.ledger import FINISHED, RequestLedger
 
 
 @dataclass
@@ -74,6 +84,9 @@ class RunResult:
     failures: int = 0               # injected instance crashes
     n_events: int = 0               # event-core loop events (0: fixed tick)
     degradations: int = 0           # injected slow-node events
+    # columnar outcome store (event-core runs); aggregate metrics reduce
+    # over it vectorized instead of walking ``requests``
+    ledger: Optional[RequestLedger] = None
     # --- fleet runs (simulate_fleet) ---
     clusters: List[ClusterStats] = field(default_factory=list)
     migrations: int = 0             # placement copies scheduled
@@ -90,13 +103,22 @@ class RunResult:
 
     def models(self) -> List[str]:
         """Distinct request models in first-appearance order."""
+        if self.ledger is not None:
+            led = self.ledger
+            if not led.n:
+                return []
+            _, first = np.unique(led.model_idx, return_index=True)
+            return [led.models[int(led.model_idx[i])]
+                    for i in np.sort(first)]
         seen: Dict[str, None] = {}
         for r in self.requests:
             seen.setdefault(r.model)
         return list(seen)
 
     def slo_by_model(self) -> Dict[str, float]:
-        """Per-model SLO attainment (one pass over the requests)."""
+        """Per-model SLO attainment (one vectorized pass)."""
+        if self.ledger is not None:
+            return self.ledger.slo_by_model()
         met: Dict[str, int] = {}
         tot: Dict[str, int] = {}
         for r in self.requests:
@@ -106,12 +128,24 @@ class RunResult:
         return {m: met.get(m, 0) / n for m, n in tot.items()}
 
     def slo_attainment(self, rtype=None) -> float:
+        if self.ledger is not None:
+            return self.ledger.slo_attainment(rtype)
         rs = self._done(rtype)
         if not rs:
             return 1.0
         return sum(r.slo_met() for r in rs) / len(rs)
 
     def ttft_attainment(self, rtype=None) -> float:
+        if self.ledger is not None:
+            led = self.ledger
+            mask = led.class_mask(rtype)
+            ok = led.finished_mask() & led.ttft_met_mask()
+            tot = led.n if mask is None else int(np.count_nonzero(mask))
+            if not tot:
+                return 1.0
+            if mask is not None:
+                ok = ok & mask
+            return float(np.count_nonzero(ok)) / tot
         rs = self._done(rtype)
         if not rs:
             return 1.0
@@ -119,6 +153,11 @@ class RunResult:
                    if r.state == RequestState.FINISHED and r.ttft_met()) / len(rs)
 
     def completion_rate(self) -> float:
+        if self.ledger is not None:
+            led = self.ledger
+            if not led.n:
+                return 1.0
+            return float(np.count_nonzero(led.state == FINISHED)) / led.n
         if not self.requests:
             return 1.0
         return sum(r.state == RequestState.FINISHED
@@ -126,11 +165,18 @@ class RunResult:
 
     # ------------------------------------------------------------ thr/eff
     def total_tokens(self) -> int:
+        if self.ledger is not None:
+            return int(self.ledger.tokens_generated.sum())
         return sum(r.tokens_generated for r in self.requests)
 
     def request_throughput(self) -> float:
+        if not self.duration:
+            return 0.0
+        if self.ledger is not None:
+            return float(np.count_nonzero(
+                self.ledger.state == FINISHED)) / self.duration
         done = [r for r in self.requests if r.state == RequestState.FINISHED]
-        return len(done) / self.duration if self.duration else 0.0
+        return len(done) / self.duration
 
     def per_instance_throughput(self) -> float:
         """Mean tokens/s per active instance over the run."""
@@ -153,6 +199,16 @@ class RunResult:
         return (self.scale_ups + self.scale_downs) / self.scale_ups
 
     def mean_itl(self, rtype=None) -> float:
+        if self.ledger is not None:
+            led = self.ledger
+            mi = led.mean_itl
+            mask = ~np.isnan(mi)
+            cm = led.class_mask(rtype)
+            if cm is not None:
+                mask = mask & cm
+            if not mask.any():
+                return 0.0
+            return float(np.mean(mi[mask]))
         rs = [r for r in self._done(rtype) if r.itl_samples]
         if not rs:
             return 0.0
@@ -160,6 +216,17 @@ class RunResult:
         return sum(vals) / len(vals)
 
     def p99_ttft(self, rtype=None) -> float:
+        if self.ledger is not None:
+            led = self.ledger
+            ftt = led.first_token_time
+            mask = ~np.isnan(ftt)
+            cm = led.class_mask(rtype)
+            if cm is not None:
+                mask = mask & cm
+            if not mask.any():
+                return 0.0
+            ttfts = np.sort(ftt[mask] - led.arrival[mask])
+            return float(ttfts[min(int(0.99 * ttfts.size), ttfts.size - 1)])
         ttfts = sorted(r.ttft for r in self._done(rtype) if r.ttft is not None)
         if not ttfts:
             return 0.0

@@ -14,6 +14,15 @@ Both engines accept either a materialized ``List[Request]`` or a columnar
 chunked cursor that materializes ``Request`` objects lazily in arrival
 order, so a 1M-request replay never builds a million objects up front.
 
+The hot path is columnar end to end: the cursor installs a
+:class:`~repro.sim.ledger.RequestLedger` (outcomes recorded by integer
+row id alongside the ``Request`` view; metrics reduce over arrays), and
+the control-tick catch-up runs through the cluster's vectorized
+:class:`~repro.sim.cluster.InstancePlane` — one array pass over every
+instance's fluid state instead of O(instances) Python calls, with
+identical arithmetic to the per-object path so scaling decisions are
+bit-for-bit equivalent.
+
 Failure injection: pass ``failures=FailurePlan(times, seed=...)`` and the
 event core crashes a uniformly-drawn active instance at each time — the
 instance is removed (chips freed, ``cluster.failures`` counted separately
@@ -47,6 +56,7 @@ from repro.serving.global_queue import GlobalQueue
 from repro.serving.request import Request
 from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
+from repro.sim.ledger import RequestLedger
 from repro.sim.metrics import RunResult, TimelinePoint
 from repro.sim.perf_model import PerfModel
 from repro.sim.workload import Trace, TraceStream
@@ -56,6 +66,8 @@ from repro.sim.workload import Trace, TraceStream
 # before its estimates fire; finishes land before the crash takes them).
 # _NET (cross-region arrival) and _WARM (placement warm-up) are fleet-only.
 _READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM = range(7)
+
+_INF = float("inf")
 
 RequestSource = Union[Sequence[Request], Trace, TraceStream]
 
@@ -92,13 +104,16 @@ class DegradationPlan:
 
 class _RequestCursor:
     """Arrival-ordered request source over a list, a columnar Trace, or a
-    chunked :class:`TraceStream`.
+    chunked :class:`TraceStream` — and the owner of the run's
+    :class:`RequestLedger`.
 
     Trace mode materializes ``Request`` objects in chunks as the arrival
     loop consumes them — peeking the next arrival time reads the float
     column directly, so unarrived requests cost no Python objects. Stream
     mode pulls the next file chunk only when the previous one is consumed,
-    so a multi-day replay never holds the whole file columnar.
+    so a multi-day replay never holds the whole file columnar. In every
+    mode the ledger rows line up with arrival order and each materialized
+    ``Request`` carries its row id.
     """
 
     def __init__(self, source: RequestSource, chunk: int = 16384):
@@ -110,13 +125,16 @@ class _RequestCursor:
             self._times = self._trace.arrival
             self.n = self._trace.n
             self.all: List[Request] = []
+            self.ledger = RequestLedger.from_trace(self._trace)
         elif isinstance(source, TraceStream):
             self._stream = source
             self.n = 0                   # grows as chunks are pulled
             self.all = []
+            self.ledger = RequestLedger(0)
         else:
             self.all = sorted(source, key=lambda r: r.arrival_time)
             self.n = len(self.all)
+            self.ledger = RequestLedger.from_requests(self.all)
         self._i = 0
 
     def _pull_chunk(self) -> bool:
@@ -126,7 +144,8 @@ class _RequestCursor:
         except StopIteration:
             self._stream = None
             return False
-        self.all.extend(tr.materialize())
+        base = self.ledger.extend_from_trace(tr)
+        self.all.extend(tr.materialize(row0=base))
         self.n += tr.n
         return True
 
@@ -138,7 +157,7 @@ class _RequestCursor:
 
     def peek_time(self) -> float:
         if self.exhausted:
-            return float("inf")
+            return _INF
         if self._trace is not None:
             return float(self._times[self._i])
         return self.all[self._i].arrival_time
@@ -146,15 +165,35 @@ class _RequestCursor:
     def pop(self) -> Request:
         if self._trace is not None and self._i >= len(self.all):
             lo = len(self.all)
-            self.all.extend(self._trace.materialize(lo, lo + self._chunk))
+            self.all.extend(self._trace.materialize(lo, lo + self._chunk,
+                                                    row0=lo))
         req = self.all[self._i]
         self._i += 1
         return req
 
+    def pop_next(self):
+        """Fused ``(pop(), peek_time())`` — one call on the arrival hot
+        path instead of two."""
+        i = self._i
+        all_ = self.all
+        if self._trace is not None:
+            if i >= len(all_):
+                self.all.extend(self._trace.materialize(
+                    i, i + self._chunk, row0=i))
+                all_ = self.all
+            req = all_[i]
+            i += 1
+            self._i = i
+            return req, (float(self._times[i]) if i < self.n else _INF)
+        req = all_[i]
+        self._i = i + 1
+        return req, self.peek_time()
+
     def all_requests(self) -> List[Request]:
         """Every request (materializing any unserved tail) for RunResult."""
         if self._trace is not None and len(self.all) < self.n:
-            self.all.extend(self._trace.materialize(len(self.all), self.n))
+            lo = len(self.all)
+            self.all.extend(self._trace.materialize(lo, self.n, row0=lo))
         while self._stream is not None:
             self._pull_chunk()
         return self.all
@@ -184,13 +223,18 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     completion_grain: float = 0.25,
                     quantize: float = 0.0,
                     failures: Optional[FailurePlan] = None,
-                    degradations: Optional[DegradationPlan] = None) \
-        -> RunResult:
+                    degradations: Optional[DegradationPlan] = None,
+                    reference: bool = False) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
     non-empty ticks yet batches arrivals/completions exactly like a
     ``simulate_fixed_tick`` run at ``dt=quantize`` — the mode the
-    engine-equivalence comparison uses."""
+    engine-equivalence comparison uses.
+
+    ``reference=True`` runs the pre-columnar-refactor control flow — no
+    arrival fast path, no saturation memo, per-object (never vectorized)
+    control-tick catch-up — as the equivalence baseline the columnar hot
+    path is tested against. Results must be identical either way."""
     queue = GlobalQueue()
     cursor = _RequestCursor(requests)
     t = 0.0
@@ -198,52 +242,69 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     cluster.now = 0.0
     cluster.completion_grain = completion_grain
     cluster.quantize = quantize
+    cluster.ledger = cursor.ledger
 
     _warm_start(controller, cluster, t, warm_start)
+    # instances provisioned before this call (still LOADING) also need
+    # READY events — fold them into the new-loading drain
+    cluster.new_loading = [i for i in cluster.instances
+                           if i.state == InstanceState.LOADING]
 
     heap: list = []                  # (time, kind, seq, instance, epoch)
     ev_seq = itertools.count()
-    ready_scheduled: set = set()     # instance ids with a READY event pushed
     timeline: List[TimelinePoint] = []
     next_control = 0.0
     control_parked = False
     next_timeline = 0.0
     last_sample_t = 0.0
     n_events = 0
+    batch_seq = 0                    # event-batch stamp (ETA-cache key)
     eps = 1e-12
+
+    # hot-path locals (attribute lookups hoisted out of the loop)
+    observe_arrival = getattr(controller, "observe_arrival", None)
+    observe_completion = controller.observe_completion
+    route_interactive = getattr(controller, "route_interactive", None)
+    route_arrival = getattr(controller, "route_arrival", None) \
+        if quantize == 0 and not reference else None
+    use_memo = not reference
+    if reference:
+        cluster.vec_min = 1 << 30        # scalar catch-up only
+    queue_push = queue.push
+    cursor_pop_next = cursor.pop_next
+    heappush = heapq.heappush
+    heappop = heapq.heappop
 
     fail_rng = None
     if failures is not None:
         fail_rng = np.random.default_rng(failures.seed)
         for tf in failures.sorted_times():
-            heapq.heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
+            heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
     deg_rng = None
     if degradations is not None:
         deg_rng = np.random.default_rng(degradations.seed)
         for td in degradations.sorted_times():
-            heapq.heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
+            heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
 
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
         rate = cluster.take_tokens() / max(now - last_sample_t, 1e-9)
+        n_i, n_m, n_b = cluster.counts_by_type()
         timeline.append(TimelinePoint(
-            now,
-            len(cluster.by_type(InstanceType.INTERACTIVE)),
-            len(cluster.by_type(InstanceType.MIXED)),
-            len(cluster.by_type(InstanceType.BATCH)),
-            cluster.used_chips(),
+            now, n_i, n_m, n_b, cluster.used_chips(),
             queue.n_interactive, queue.n_batch, rate))
         last_sample_t = now
         next_timeline = now + timeline_every
 
+    t_arr = cursor.peek_time()
+
     while True:
         # ---- termination: all requests arrived, none queued or running
-        if cursor.exhausted and len(queue) == 0 and \
-                cluster.total_running == 0:
+        if t_arr == _INF and cluster.total_running == 0 and len(queue) == 0:
             break
 
         # ---- next event time across all sources
-        t_next = cursor.peek_time()
+        t_next = t_arr
         if heap and heap[0][0] < t_next:
             t_next = heap[0][0]
         if next_control < t_next:
@@ -252,22 +313,36 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             t_next = next_timeline
         if quantize > 0:                 # sparse fixed-tick alignment
             t_next = math.ceil(t_next / quantize - 1e-9) * quantize
-        if t_next > max_time or t_next == float("inf"):
+        if t_next > max_time or t_next == _INF:
             cluster.advance_time(max_time)   # idle chip-time to the horizon
             t = max_time
             break
         t = t_next
-        cluster.advance_time(t)
+        if t > cluster.now:                  # inline advance_time
+            cluster.chip_seconds += cluster._used_chips * (t - cluster.now)
+            cluster.now = t
+        batch_seq += 1
+        cluster.batch_seq = batch_seq
         changed = False
 
-        # 1. arrivals due at t
-        while cursor.peek_time() <= t + eps:
-            req = cursor.pop()
-            queue.push(req)
-            if hasattr(controller, "observe_arrival"):
-                controller.observe_arrival(req, t)
-            changed = True
-            n_events += 1
+        # 1. arrivals due at t. When nothing else shares the timestamp
+        #    (no heap event, no control tick — so steps 2-4 would change
+        #    nothing before routing) an interactive arrival into an empty
+        #    lane takes the zero-queuing fast path: it is placed directly,
+        #    skipping the queue round-trip the full pass would undo.
+        if t_arr <= t + eps:
+            fast = route_arrival is not None \
+                and not (heap and heap[0][0] <= t + eps) \
+                and next_control > t + eps
+            while t_arr <= t + eps:
+                req, t_arr = cursor_pop_next()
+                if observe_arrival is not None:
+                    observe_arrival(req, t)
+                if not (fast and queue._icount == 0
+                        and route_arrival(cluster, queue, req, t)):
+                    queue_push(req)
+                changed = True
+                n_events += 1
 
         # 2. instance events due at t (ready transitions, completion
         #    estimates, injected crashes; stale estimates are skipped via
@@ -275,7 +350,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         #    backfilled directly below.
         freed = []
         while heap and heap[0][0] <= t + eps:
-            _, kind, _, inst, epoch = heapq.heappop(heap)
+            _, kind, _, inst, epoch = heappop(heap)
             n_events += 1
             if kind == _READY:
                 if inst.state == InstanceState.LOADING:
@@ -287,11 +362,10 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     freed.append(inst)
                     changed = True
             elif kind == _FAIL:
-                # crash a uniformly-drawn active instance (id-sorted list
-                # + seeded rng -> deterministic victim per run)
-                active = [i for i in cluster.instances if i.active]
+                # crash a uniformly-drawn active instance (id-ordered
+                # registry + seeded rng -> deterministic victim per run)
+                active = cluster.active_sorted()
                 if active:
-                    active.sort(key=lambda i: i.id)
                     victim = active[int(fail_rng.integers(len(active)))]
                     if victim in freed:
                         freed.remove(victim)
@@ -299,7 +373,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     # fluid state settled at the crash instant: finishes
                     # that beat the crash still count, the rest requeue
                     for r in victim.drain_finished():
-                        controller.observe_completion(r)
+                        observe_completion(r)
                     for r in displaced:
                         queue.requeue(r)
                     cluster.dirty.discard(victim)
@@ -307,14 +381,13 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             elif kind == _DEGRADE:
                 # slow a uniformly-drawn healthy active instance; recovery
                 # is scheduled as its own event
-                cands = [i for i in cluster.instances
-                         if i.active and i.slow_factor == 1.0]
+                cands = [i for i in cluster.active_sorted()
+                         if i.slow_factor == 1.0]
                 if cands:
-                    cands.sort(key=lambda i: i.id)
                     victim = cands[int(deg_rng.integers(len(cands)))]
                     cluster.degrade_instance(victim, degradations.factor, t)
-                    heapq.heappush(heap, (t + degradations.duration,
-                                          _RECOVER, next(ev_seq), victim, 0))
+                    heappush(heap, (t + degradations.duration,
+                                    _RECOVER, next(ev_seq), victim, 0))
                     changed = True
             elif kind == _RECOVER:
                 if inst.state != InstanceState.RETIRED \
@@ -331,33 +404,29 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             next_control = t
             control_parked = False
 
-        # 3. control tick: align every instance's fluid state with ``t``,
+        # 3. control tick: align every instance's fluid state with ``t``
+        #    (vectorized instance-plane pass above the scalar cut-over),
         #    then run the identical production control path
         ran_control = t >= next_control - eps
         if ran_control:
             n_events += 1
-            for inst in cluster.instances:
-                inst.advance(t)
+            cluster.catch_up(t, batch_seq)
             pre = (len(cluster.instances), cluster.scale_ups,
                    cluster.scale_downs)
             controller.control(cluster, queue, t)
             # schedule ready events for instances the controller provisioned
-            for inst in cluster.instances:
-                if inst.state == InstanceState.LOADING and \
-                        inst.id not in ready_scheduled:
-                    heapq.heappush(heap, (inst.ready_time, _READY,
-                                          next(ev_seq), inst, 0))
-                    ready_scheduled.add(inst.id)
+            for inst in cluster.drain_new_loading():
+                heappush(heap, (inst.ready_time, _READY,
+                                next(ev_seq), inst, 0))
             post = (len(cluster.instances), cluster.scale_ups,
                     cluster.scale_downs)
             quiescent = (pre == post and len(queue) == 0
                          and cluster.total_running == 0
-                         and all(i.state != InstanceState.LOADING
-                                 for i in cluster.instances))
+                         and cluster.n_loading == 0)
             if quiescent:
                 # deterministic controller + unchanged inputs -> nothing can
                 # change before the next arrival; park the control loop
-                next_control = cursor.peek_time()
+                next_control = t_arr
                 control_parked = True
             else:
                 next_control = t + control_interval
@@ -366,11 +435,12 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         #    between, interactive dispatch stays zero-queuing on every event
         #    and only just-freed instances are backfilled from the batch
         #    queue — the hot path never rescans the whole cluster
-        if ran_control or not hasattr(controller, "route_interactive"):
+        if ran_control or route_interactive is None:
             controller.route(cluster, queue, t)
         else:
-            controller.route_interactive(cluster, queue, t)
-            if freed and queue.n_batch:
+            if queue._icount:
+                route_interactive(cluster, queue, t, use_memo)
+            if freed and queue._bcount:
                 if len(freed) > 1:
                     # preserve pool preference: batch instances first
                     freed.sort(key=lambda i:
@@ -379,15 +449,22 @@ def simulate_events(requests: RequestSource, controller: BaseController,
 
         # 5. sweep instances touched this batch: surface completions to the
         #    controller and (re)schedule their next completion estimate
-        for inst in cluster.drain_dirty():
-            for r in inst.drain_finished():
-                controller.observe_completion(r)
-            if inst.state == InstanceState.ACTIVE:
-                eta = inst.next_event_in()
-                if eta != float("inf"):
-                    inst._epoch += 1
-                    heapq.heappush(heap, (t + eta, _COMPLETION,
-                                          next(ev_seq), inst, inst._epoch))
+        #    (ETAs the vectorized catch-up already computed are reused)
+        if cluster.dirty:
+            for inst in cluster.drain_dirty():
+                pf = inst._pending_finished
+                if pf:
+                    inst._pending_finished = []
+                    for r in pf:
+                        observe_completion(r)
+                if inst.state == InstanceState.ACTIVE:
+                    eta = cluster.cached_eta(inst, batch_seq)
+                    if eta < 0.0:
+                        eta = inst.next_event_in()
+                    if eta != _INF:
+                        inst._epoch += 1
+                        heappush(heap, (t + eta, _COMPLETION,
+                                        next(ev_seq), inst, inst._epoch))
 
         # 6. timeline sample (suppressed while parked — state is frozen)
         if t >= next_timeline - eps:
@@ -402,7 +479,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                      scale_downs=cluster.scale_downs,
                      duration=t, failures=cluster.failures,
                      n_events=n_events,
-                     degradations=cluster.degradations)
+                     degradations=cluster.degradations,
+                     ledger=cursor.ledger)
 
 
 def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
@@ -455,12 +533,9 @@ def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
 
         # 5. timeline sample
         if t >= next_timeline:
+            n_i, n_m, n_b = cluster.counts_by_type()
             timeline.append(TimelinePoint(
-                t,
-                len(cluster.by_type(InstanceType.INTERACTIVE)),
-                len(cluster.by_type(InstanceType.MIXED)),
-                len(cluster.by_type(InstanceType.BATCH)),
-                cluster.used_chips(),
+                t, n_i, n_m, n_b, cluster.used_chips(),
                 queue.n_interactive, queue.n_batch,
                 tok_this_tick / dt))
             next_timeline = t + timeline_every
@@ -512,8 +587,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    warm_start: int = 0, timeline_every: float = 5.0,
                    completion_grain: float = 0.25,
                    failures: Optional[FailurePlan] = None,
-                   degradations: Optional[DegradationPlan] = None) \
-        -> RunResult:
+                   degradations: Optional[DegradationPlan] = None,
+                   reference: bool = False) -> RunResult:
     """Multi-cluster event loop: one shared heap drives every cluster in a
     :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
     hierarchy (the paper's two tiers), under the fleet's Router/GlobalPlacer
@@ -535,15 +610,20 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     clusters = list(fleet.clusters)
     by_sim = {id(fc.cluster): fc for fc in clusters}
     t = 0.0
+    use_memo = not reference
     for fc in clusters:
         fc.cluster.event_mode = True
         fc.cluster.now = 0.0
         fc.cluster.completion_grain = completion_grain
+        fc.cluster.ledger = cursor.ledger
+        if reference:
+            fc.cluster.vec_min = 1 << 30
         _warm_start(fc.controller, fc.cluster, t, warm_start)
+        fc.cluster.new_loading = [i for i in fc.cluster.instances
+                                  if i.state == InstanceState.LOADING]
 
     heap: list = []                  # (time, kind, seq, payload, epoch)
     ev_seq = itertools.count()
-    ready_scheduled: set = set()     # instance ids with a READY event pushed
     timeline: List[TimelinePoint] = []
     next_control = 0.0
     next_place = fleet.placer.interval
@@ -551,23 +631,26 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     next_timeline = 0.0
     last_sample_t = 0.0
     n_events = 0
+    batch_seq = 0
     pending_net = 0                  # in-flight cross-region arrivals
     eps = 1e-12
+    heappush = heapq.heappush
+    heappop = heapq.heappop
 
     fail_rng = None
     if failures is not None:
         fail_rng = np.random.default_rng(failures.seed)
         for tf in failures.sorted_times():
-            heapq.heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
+            heappush(heap, (tf, _FAIL, next(ev_seq), None, 0))
     deg_rng = None
     if degradations is not None:
         deg_rng = np.random.default_rng(degradations.seed)
         for td in degradations.sorted_times():
-            heapq.heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
+            heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
 
     def emit_warm(delay: float, payload) -> None:
-        heapq.heappush(heap, (t + max(delay, 0.0), _WARM,
-                              next(ev_seq), payload, 0))
+        heappush(heap, (t + max(delay, 0.0), _WARM,
+                        next(ev_seq), payload, 0))
 
     def _enqueue(fc, req: Request, now: float) -> None:
         fc.queue.push(req)
@@ -577,45 +660,50 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         nonlocal pending_net
         fc, delay = fleet.route(req, now)
         if delay > eps:
-            heapq.heappush(heap, (now + delay, _NET, next(ev_seq),
-                                  (req, fc), 0))
+            heappush(heap, (now + delay, _NET, next(ev_seq),
+                            (req, fc), 0))
             pending_net += 1
         else:
             _enqueue(fc, req, now)
 
     def _all_active():
-        out = [i for fc in clusters for i in fc.cluster.instances
-               if i.active]
+        # merged per-cluster active registries, id-ordered (deterministic
+        # victim draws without scanning every instance per event)
+        out = []
+        for fc in clusters:
+            out.extend(fc.cluster._active.values())
         out.sort(key=lambda i: i.id)
         return out
 
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
-        toks = sum(fc.cluster.take_tokens() for fc in clusters)
+        toks = n_i = n_m = n_b = chips = q_i = q_b = 0
+        for fc in clusters:
+            toks += fc.cluster.take_tokens()
+            i, m, b = fc.cluster.counts_by_type()
+            n_i += i
+            n_m += m
+            n_b += b
+            chips += fc.cluster.used_chips()
+            q_i += fc.queue.n_interactive
+            q_b += fc.queue.n_batch
         rate = toks / max(now - last_sample_t, 1e-9)
-        timeline.append(TimelinePoint(
-            now,
-            sum(len(fc.cluster.by_type(InstanceType.INTERACTIVE))
-                for fc in clusters),
-            sum(len(fc.cluster.by_type(InstanceType.MIXED))
-                for fc in clusters),
-            sum(len(fc.cluster.by_type(InstanceType.BATCH))
-                for fc in clusters),
-            sum(fc.cluster.used_chips() for fc in clusters),
-            sum(fc.queue.n_interactive for fc in clusters),
-            sum(fc.queue.n_batch for fc in clusters), rate))
+        timeline.append(TimelinePoint(now, n_i, n_m, n_b, chips,
+                                      q_i, q_b, rate))
         last_sample_t = now
         next_timeline = now + timeline_every
 
+    t_arr = cursor.peek_time()
+
     while True:
         # ---- termination: everything arrived, landed, and finished
-        if cursor.exhausted and pending_net == 0 and \
+        if t_arr == _INF and pending_net == 0 and \
                 all(len(fc.queue) == 0 and fc.cluster.total_running == 0
                     for fc in clusters):
             break
 
         # ---- next event time across all sources
-        t_next = cursor.peek_time()
+        t_next = t_arr
         if heap and heap[0][0] < t_next:
             t_next = heap[0][0]
         if next_control < t_next:
@@ -625,29 +713,32 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                 t_next = next_place
             if next_timeline < t_next:
                 t_next = next_timeline
-        if t_next > max_time or t_next == float("inf"):
+        if t_next > max_time or t_next == _INF:
             for fc in clusters:
                 fc.cluster.advance_time(max_time)
             t = max_time
             break
         t = t_next
+        batch_seq += 1
         for fc in clusters:
             fc.cluster.advance_time(t)
+            fc.cluster.batch_seq = batch_seq
         changed = False
         freed: Dict[int, List] = {}      # id(fc) -> instances w/ capacity
 
         # 1. arrivals due at t: forecast observation, then route — local
         #    arrivals enqueue now, cross-region ones after the network hop
-        while cursor.peek_time() <= t + eps:
+        while t_arr <= t + eps:
             req = cursor.pop()
             fleet.observe_arrival(req, t)
             _dispatch(req, t)
             changed = True
             n_events += 1
+            t_arr = cursor.peek_time()
 
         # 2. heap events due at t
         while heap and heap[0][0] <= t + eps:
-            _, kind, _, payload, epoch = heapq.heappop(heap)
+            _, kind, _, payload, epoch = heappop(heap)
             n_events += 1
             if kind == _NET:
                 req, fc = payload
@@ -689,8 +780,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                     victim = cands[int(deg_rng.integers(len(cands)))]
                     victim._cluster.degrade_instance(
                         victim, degradations.factor, t)
-                    heapq.heappush(heap, (t + degradations.duration,
-                                          _RECOVER, next(ev_seq), victim, 0))
+                    heappush(heap, (t + degradations.duration,
+                                    _RECOVER, next(ev_seq), victim, 0))
                     changed = True
             elif kind == _RECOVER:
                 inst = payload
@@ -719,30 +810,25 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             n_events += 1
             pre = post = 0
             for fc in clusters:
-                for inst in fc.cluster.instances:
-                    inst.advance(t)
+                fc.cluster.catch_up(t, batch_seq)
                 pre += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
                 fc.controller.control(fc.cluster, fc.queue, t)
-                for inst in fc.cluster.instances:
-                    if inst.state == InstanceState.LOADING and \
-                            inst.id not in ready_scheduled:
-                        heapq.heappush(heap, (inst.ready_time, _READY,
-                                              next(ev_seq), inst, 0))
-                        ready_scheduled.add(inst.id)
+                for inst in fc.cluster.drain_new_loading():
+                    heappush(heap, (inst.ready_time, _READY,
+                                    next(ev_seq), inst, 0))
                 post += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
             quiescent = (pre == post and pending_net == 0
                          and all(len(fc.queue) == 0
                                  and fc.cluster.total_running == 0
-                                 and all(i.state != InstanceState.LOADING
-                                         for i in fc.cluster.instances)
+                                 and fc.cluster.n_loading == 0
                                  for fc in clusters))
             if quiescent:
                 # nothing can change before the next arrival (warm-up
                 # events still fire off the heap); park the control and
                 # placer clocks
-                next_control = cursor.peek_time()
+                next_control = t_arr
                 control_parked = True
             else:
                 next_control = t + control_interval
@@ -753,8 +839,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             n_events += 1
             for req, fc, delay in fleet.review(t, emit_warm):
                 if delay > eps:
-                    heapq.heappush(heap, (t + delay, _NET, next(ev_seq),
-                                          (req, fc), 0))
+                    heappush(heap, (t + delay, _NET, next(ev_seq),
+                                    (req, fc), 0))
                     pending_net += 1
                 else:
                     _enqueue(fc, req, t)
@@ -767,7 +853,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             if ran_control:
                 fc.controller.route(fc.cluster, fc.queue, t)
             else:
-                fc.controller.route_interactive(fc.cluster, fc.queue, t)
+                fc.controller.route_interactive(fc.cluster, fc.queue, t,
+                                                use_memo)
                 flist = freed.get(id(fc))
                 if flist and fc.queue.n_batch:
                     if len(flist) > 1:
@@ -778,17 +865,24 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         # 6. sweep dirty instances: completions surface to the owning
         #    cluster's controller and the fleet rollup, estimates re-arm
         for fc in clusters:
+            if not fc.cluster.dirty:
+                continue
             for inst in fc.cluster.drain_dirty():
-                for r in inst.drain_finished():
-                    fc.controller.observe_completion(r)
-                    fleet.observe_completion(r, fc, t)
+                pf = inst._pending_finished
+                if pf:
+                    inst._pending_finished = []
+                    for r in pf:
+                        fc.controller.observe_completion(r)
+                        fleet.observe_completion(r, fc, t)
                 if inst.state == InstanceState.ACTIVE:
-                    eta = inst.next_event_in()
-                    if eta != float("inf"):
+                    eta = fc.cluster.cached_eta(inst, batch_seq)
+                    if eta < 0.0:
+                        eta = inst.next_event_in()
+                    if eta != _INF:
                         inst._epoch += 1
-                        heapq.heappush(heap, (t + eta, _COMPLETION,
-                                              next(ev_seq), inst,
-                                              inst._epoch))
+                        heappush(heap, (t + eta, _COMPLETION,
+                                        next(ev_seq), inst,
+                                        inst._epoch))
 
         # 7. timeline sample (suppressed while parked — state is frozen)
         if not control_parked and t >= next_timeline - eps:
@@ -809,7 +903,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         n_events=n_events, clusters=stats,
         migrations=fleet.migrations, handbacks=fleet.handbacks,
         egress_bytes=fleet.egress_bytes,
-        egress_cost_usd=fleet.egress_cost_usd)
+        egress_cost_usd=fleet.egress_cost_usd,
+        ledger=cursor.ledger)
 
 
 def default_perf_factory(**perf_kw) -> Callable[[str], PerfModel]:

@@ -18,18 +18,24 @@ Format is picked by extension: ``.jsonl`` -> JSON lines, anything else is
 parsed as CSV; a trailing ``.gz`` on either transparently gzips the file
 (``save_trace``/``load_trace``/``stream_trace`` all honour it).
 
-Multi-day production traces stream through :func:`stream_trace`: the file
-is parsed in fixed-size request chunks yielded as a
-:class:`~repro.sim.workload.TraceStream`, so replaying never holds the
-whole file (or its columns) in memory. Streamed files must already be
-arrival-sorted — the stream validates chunk boundaries.
+Multi-day production traces stream through :func:`stream_trace`: one file
+or a list of files (day-per-file archives concatenate back to back) is
+parsed into chunks yielded as a :class:`~repro.sim.workload.TraceStream`,
+so replaying never holds the whole file (or its columns) in memory.
+Chunks are either fixed row counts (``chunk_requests``) or — with
+``window_s > 0`` — wall-clock time windows whose memory tracks the actual
+arrival rate (a quiet night costs nearly nothing, a spike is still capped
+by ``chunk_requests``). Streamed files must already be arrival-sorted —
+the stream validates chunk boundaries; ISO timestamps are normalized
+against the stream-global first timestamp.
 """
 from __future__ import annotations
 
 import csv
 import gzip
 import json
-from typing import Dict, Iterator, List, Optional, Sequence
+import math
+from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -231,44 +237,105 @@ def load_trace(path: str, *, interactive_default: bool = True,
     return tr
 
 
-def stream_trace(path: str, *, chunk_requests: int = 65536,
+def _row_arrival_seconds(raw, t0_iso: List) -> float:
+    """Arrival of one raw row in seconds: plain floats pass through, ISO
+    timestamps are normalized against the stream's first timestamp
+    (``t0_iso`` is a shared one-element mutable cell)."""
+    try:
+        return float(raw)
+    except (TypeError, ValueError):
+        ts = np.datetime64(str(raw), "us")
+        if not t0_iso:
+            t0_iso.append(ts)
+        return float((ts - t0_iso[0]) / np.timedelta64(1, "s"))
+
+
+def stream_trace(path: Union[str, Sequence[str]], *,
+                 chunk_requests: int = 65536,
+                 window_s: float = 0.0,
                  interactive_default: bool = True,
                  batch_ttft_slo: float = BATCH_TTFT_SLO,
                  model_default: str = DEFAULT_MODEL,
                  max_requests: int = 0) -> TraceStream:
-    """Stream a CSV/JSONL trace (optionally ``.gz``) as arrival-ordered
-    :class:`Trace` chunks of ``chunk_requests`` rows.
+    """Stream one or more CSV/JSONL traces (optionally ``.gz``) as
+    arrival-ordered :class:`Trace` chunks.
 
     The windowed loader for multi-day production traces: at no point is
     the whole file resident — each chunk's columns are built and handed
     to the consumer (the event core's request cursor accepts the stream
-    directly) before the next chunk is parsed. The file must already be
-    arrival-sorted; ``TraceStream`` raises on an out-of-order chunk
-    boundary. ``max_requests > 0`` stops after that many rows.
+    directly) before the next chunk is parsed.
+
+    Chunking policy:
+
+    - ``window_s == 0`` (default): fixed-size chunks of
+      ``chunk_requests`` rows.
+    - ``window_s > 0``: *time-windowed* chunks — a chunk closes when the
+      next row's arrival crosses the current ``window_s`` boundary, so a
+      day-long trace streams in wall-clock windows whose memory tracks
+      the actual arrival rate rather than a fixed row count.
+      ``chunk_requests`` still caps a single window's rows (a traffic
+      spike inside one window must not buffer unbounded rows); ISO
+      timestamps are normalized against the first row seen.
+
+    ``path`` may be a list of files replayed back to back — day-per-file
+    archives concatenate without ever being loaded together; arrival
+    order must hold across the file boundary (``TraceStream`` validates
+    every chunk boundary and raises otherwise). ``max_requests > 0``
+    stops after that many rows.
     """
     if chunk_requests <= 0:
         raise ValueError("chunk_requests must be positive")
+    if window_s < 0:
+        raise ValueError("window_s must be >= 0")
+    paths = [path] if isinstance(path, str) else list(path)
+    if not paths:
+        raise ValueError("stream_trace needs at least one path")
+
+    def _flush(buf: List[Dict]) -> Trace:
+        cols, n = _read_columns(buf)
+        return _columns_to_trace(
+            cols, n, interactive_default=interactive_default,
+            batch_ttft_slo=batch_ttft_slo, model_default=model_default)
 
     def chunks() -> Iterator[Trace]:
         buf: List[Dict] = []
         served = 0
-        for row in _iter_rows(path):
-            buf.append(row)
-            if max_requests and served + len(buf) >= max_requests:
-                buf = buf[:max_requests - served]
-                break
-            if len(buf) >= chunk_requests:
-                cols, n = _read_columns(buf)
-                yield _columns_to_trace(
-                    cols, n, interactive_default=interactive_default,
-                    batch_ttft_slo=batch_ttft_slo,
-                    model_default=model_default)
-                served += n
-                buf = []
+        window_end = window_s
+        t0_iso: List = []
+        for p in paths:
+            for row in _iter_rows(p):
+                raw = row.get("arrival")
+                if raw is not None:
+                    # normalize ISO timestamps against the stream-global
+                    # t0 here (per-chunk normalization would re-zero every
+                    # chunk and break cross-chunk arrival ordering)
+                    try:
+                        arr = float(raw)
+                    except (TypeError, ValueError):
+                        arr = _row_arrival_seconds(raw, t0_iso)
+                        row["arrival"] = arr
+                else:
+                    arr = 0.0
+                if window_s > 0 and arr >= window_end:
+                    if buf:
+                        yield _flush(buf)
+                        served += len(buf)
+                        buf = []
+                    # jump straight to the window containing ``arr`` —
+                    # stepping one window at a time would spin
+                    # O(arr/window_s) on large absolute timestamps
+                    # (e.g. un-normalized unix-epoch seconds)
+                    window_end = (math.floor(arr / window_s) + 1) * window_s
+                buf.append(row)
+                if max_requests and served + len(buf) >= max_requests:
+                    buf = buf[:max_requests - served]
+                    yield _flush(buf)
+                    return
+                if len(buf) >= chunk_requests:
+                    yield _flush(buf)
+                    served += len(buf)
+                    buf = []
         if buf:
-            cols, n = _read_columns(buf)
-            yield _columns_to_trace(
-                cols, n, interactive_default=interactive_default,
-                batch_ttft_slo=batch_ttft_slo, model_default=model_default)
+            yield _flush(buf)
 
     return TraceStream(chunks())

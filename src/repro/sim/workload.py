@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.serving.request import (BATCH_ITL_SLO, BATCH_TTFT_SLO,
                                    INTERACTIVE_ITL_SLO, INTERACTIVE_TTFT_SLO,
-                                   Request, RequestType, SLO)
+                                   Request, RequestState, RequestType, SLO,
+                                   request_id_counter)
 
 # ShareGPT-ish lognormal parameters (Fig. 8: median input ~100 tokens with a
 # heavy tail; outputs somewhat longer)
@@ -157,10 +158,21 @@ class Trace:
             np.concatenate(oidx), origins)
 
     # ----------------------------------------------------- materialization
-    def materialize(self, lo: int = 0, hi: Optional[int] = None) -> List[Request]:
+    def materialize(self, lo: int = 0, hi: Optional[int] = None, *,
+                    row0: Optional[int] = None) -> List[Request]:
         """Build ``Request`` objects for rows [lo, hi) — the only place the
         columnar plane crosses into per-object land. Batched callers (the
-        event core's cursor) use the slice bounds to stay lazy."""
+        event core's cursor) use the slice bounds to stay lazy.
+
+        ``row0`` stamps ``Request.row`` with ledger row ids (``row0 + i``
+        for slice position i) so the event core can record outcomes
+        columnar; by default rows stay unstamped (-1).
+
+        SLO objects are interned per distinct (ttft, itl) pair — a trace
+        carries a handful of SLO classes across millions of rows, and one
+        shared immutable-by-convention instance per class keeps the
+        per-request build cost down.
+        """
         hi = self.n if hi is None else min(hi, self.n)
         arr = self.arrival[lo:hi].tolist()
         ins = self.prompt_len[lo:hi].tolist()
@@ -173,11 +185,35 @@ class Trace:
         origins = self.origins or None
         oidx = self.origin_idx[lo:hi].tolist()
         it, ba = RequestType.INTERACTIVE, RequestType.BATCH
-        return [Request(p, o, it if c else ba, SLO(tt, il), t,
-                        model=models[m],
-                        origin=origins[g] if origins else None)
-                for t, p, o, c, tt, il, m, g
-                in zip(arr, ins, outs, inter, ttft, itl, midx, oidx)]
+        slos: dict = {}
+        out = []
+        # bulk construction bypasses the dataclass __init__ (measured ~3x
+        # per-object): a dict literal covering every Request field becomes
+        # the instance __dict__ directly. test_trace_plane pins this
+        # against constructor-built requests so field drift fails loudly.
+        new = Request.__new__
+        next_id = request_id_counter().__next__
+        append = out.append
+        for i, (t, p, o, c, tt, il, m, g) in enumerate(
+                zip(arr, ins, outs, inter, ttft, itl, midx, oidx)):
+            slo = slos.get((tt, il))
+            if slo is None:
+                slo = slos[(tt, il)] = SLO(tt, il)
+            r = new(Request)
+            r.__dict__ = {
+                "prompt_len": p, "output_len": o,
+                "request_type": it if c else ba, "slo": slo,
+                "arrival_time": t, "req_id": next_id(),
+                "model": models[m],
+                "origin": origins[g] if origins else None,
+                "state": RequestState.QUEUED, "tokens_generated": 0,
+                "first_token_time": None, "finish_time": None,
+                "itl_samples": [], "preemptions": 0, "saved_kv": None,
+                "prompt_tokens": None,
+                "row": -1 if row0 is None else row0 + i,
+            }
+            append(r)
+        return out
 
     @classmethod
     def from_requests(cls, reqs: Sequence[Request]) -> "Trace":

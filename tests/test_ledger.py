@@ -1,0 +1,299 @@
+"""Columnar hot path: RequestLedger unit tests + decision-equivalence
+suite between the columnar core and the pre-refactor reference path.
+
+The correctness bar for the struct-of-arrays refactor: seeded scenarios
+must produce *identical* Algorithm-2 scaling decisions (scale actions,
+peak chips, the instance-count timeline) and summary metrics (SLO
+attainment, gpu_hours, completion) whether the engine runs
+
+- the columnar default (arrival fast path + saturation memo + vectorized
+  instance-plane catch-up + ledger metrics), or
+- the reference flavour (``reference=True``: per-object catch-up, no
+  memo, no fast path) with metrics reduced over ``Request`` objects.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.serving.request import (Request, RequestState, RequestType,
+                                   make_batch, make_interactive)
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController
+from repro.sim.ledger import FINISHED, QUEUED, RUNNING, RequestLedger
+from repro.sim.metrics import RunResult
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (default_perf_factory, simulate_events,
+                                 simulate_fleet)
+from repro.sim.workload import Trace, WorkloadSpec, generate_trace
+
+
+def _run(name, seed, *, reference=False, vec_min=None, n=0):
+    trace, kw = build_trace(name, n_requests=n, seed=seed)
+    cluster = SimCluster(default_perf_factory(), max_chips=400)
+    if vec_min is not None:
+        cluster.vec_min = vec_min
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
+                           warm_start=2, failures=kw.get("failures"),
+                           degradations=kw.get("degradations"),
+                           reference=reference)
+
+
+def _fingerprint(res: RunResult):
+    return dict(
+        scale_ups=res.scale_ups, scale_downs=res.scale_downs,
+        peak_chips=res.peak_chips, n_events=res.n_events,
+        duration=res.duration, chip_seconds=res.chip_seconds,
+        failures=res.failures, degradations=res.degradations,
+        timeline=[(p.t, p.n_interactive, p.n_mixed, p.n_batch, p.chips)
+                  for p in res.timeline])
+
+
+def _summaries_match(a: RunResult, b: RunResult):
+    sa, sb = a.summary(), b.summary()
+    assert set(sa) == set(sb)
+    for k, v in sa.items():
+        # decision-bearing metrics are exact; float reductions may
+        # reassociate (vectorized vs sequential sums)
+        assert math.isclose(v, sb[k], rel_tol=1e-9, abs_tol=1e-12), \
+            (k, v, sb[k])
+
+
+# ------------------------------------------------------- ledger unit tests
+def test_ledger_from_trace_shares_workload_columns():
+    trace = generate_trace(WorkloadSpec(n_requests=100, seed=1))
+    led = RequestLedger.from_trace(trace)
+    assert led.n == 100
+    assert led.arrival is trace.arrival          # views, not copies
+    assert np.all(led.state == QUEUED)
+    assert np.all(np.isnan(led.finish_time))
+
+
+def test_ledger_from_requests_stamps_rows_and_carries_state():
+    reqs = [make_interactive(10, 5, 0.0), make_batch(20, 8, 1.0)]
+    reqs[0].state = RequestState.FINISHED
+    reqs[0].first_token_time = 0.5
+    reqs[0].finish_time = 2.0
+    reqs[0].tokens_generated = 5
+    reqs[0].itl_samples.append(0.1)
+    led = RequestLedger.from_requests(reqs)
+    assert [r.row for r in reqs] == [0, 1]
+    assert led.state[0] == FINISHED and led.state[1] == QUEUED
+    assert led.first_token_time[0] == 0.5
+    assert led.mean_itl[0] == 0.1
+    assert not led.interactive[1]
+    assert led.models == ("llama-8b",)
+
+
+def test_ledger_extend_merges_vocabularies():
+    t1 = generate_trace(WorkloadSpec(n_requests=10, seed=1, model="m-a"))
+    t2 = generate_trace(WorkloadSpec(n_requests=10, seed=2, model="m-b"))
+    led = RequestLedger(0)
+    assert led.extend_from_trace(t1) == 0
+    assert led.extend_from_trace(t2) == 10
+    assert led.n == 20
+    assert led.models == ("m-a", "m-b")
+    assert set(led.model_idx[:10]) == {0} and set(led.model_idx[10:]) == {1}
+
+
+def test_ledger_reductions_match_object_loops():
+    """Every vectorized reduction must equal the Request-object loop it
+    replaced, on the same finished run."""
+    res = _run("multi_tenant_slo", seed=11, n=800)
+    led_metrics = res
+    obj_metrics = RunResult(
+        requests=res.requests, timeline=res.timeline,
+        chip_seconds=res.chip_seconds, peak_chips=res.peak_chips,
+        scale_ups=res.scale_ups, scale_downs=res.scale_downs,
+        duration=res.duration, ledger=None)
+    assert led_metrics.ledger is not None
+    for rtype in (None, RequestType.INTERACTIVE, RequestType.BATCH):
+        assert led_metrics.slo_attainment(rtype) == \
+            obj_metrics.slo_attainment(rtype)
+        assert led_metrics.ttft_attainment(rtype) == \
+            obj_metrics.ttft_attainment(rtype)
+        assert led_metrics.p99_ttft(rtype) == obj_metrics.p99_ttft(rtype)
+        assert math.isclose(led_metrics.mean_itl(rtype),
+                            obj_metrics.mean_itl(rtype), rel_tol=1e-12)
+    assert led_metrics.completion_rate() == obj_metrics.completion_rate()
+    assert led_metrics.total_tokens() == obj_metrics.total_tokens()
+    assert led_metrics.request_throughput() == \
+        obj_metrics.request_throughput()
+    assert led_metrics.slo_by_model() == obj_metrics.slo_by_model()
+    assert led_metrics.models() == obj_metrics.models()
+
+
+def test_ledger_rows_mirror_request_objects():
+    res = _run("diurnal", seed=5, n=600)
+    led = res.ledger
+    for r in res.requests:
+        assert r.row >= 0
+        assert led.state[r.row] == FINISHED
+        assert r.state == RequestState.FINISHED
+        assert led.tokens_generated[r.row] == r.tokens_generated
+        assert led.finish_time[r.row] == r.finish_time
+        assert led.first_token_time[r.row] == r.first_token_time
+        mean = sum(r.itl_samples) / len(r.itl_samples)
+        assert led.mean_itl[r.row] == mean
+
+
+def test_ledger_running_state_written_on_admit():
+    cluster = SimCluster(default_perf_factory(), max_chips=40)
+    cluster.event_mode = True
+    led = RequestLedger.from_requests([make_interactive(64, 1000, 0.0)])
+    cluster.ledger = led
+    from repro.sim.cluster import InstanceType
+    inst = cluster.provision("llama-8b", InstanceType.MIXED, 0.0,
+                             static_batch=8)
+    inst.ready_time = 0.0
+    inst.activate_if_ready(0.0)
+    req = make_interactive(64, 1000, 0.0)
+    req.row = 0
+    inst.admit(req, 0.0)
+    assert led.state[0] == RUNNING
+
+
+# ----------------------------------------------- decision equivalence suite
+@pytest.mark.parametrize("name", ["diurnal", "burst_spikes",
+                                  "multi_model_fleet"])
+def test_columnar_core_matches_reference_decisions(name):
+    """The satellite bar: seeded runs must produce identical Algorithm-2
+    scaling decisions and summary metrics between the columnar core and
+    the pre-refactor reference path."""
+    fast = _run(name, seed=3)
+    ref = _run(name, seed=3, reference=True)
+    assert _fingerprint(fast) == _fingerprint(ref)
+    _summaries_match(fast, ref)
+
+
+@pytest.mark.parametrize("name", ["multi_model_fleet", "multi_tenant_slo",
+                                  "backlog_drain"])
+def test_vectorized_instance_plane_matches_scalar_catch_up(name):
+    """Force the vectorized plane on every control tick (vec_min=1): the
+    array pass must be bit-for-bit the scalar loop — including under
+    mixed-instance eviction pressure, where stale heap heads must not
+    leak into the vectorized completion ETAs."""
+    vec = _run(name, seed=9, vec_min=1)
+    ref = _run(name, seed=9, reference=True)
+    assert _fingerprint(vec) == _fingerprint(ref)
+    _summaries_match(vec, ref)
+
+
+def test_multi_region_fleet_matches_reference_decisions():
+    def run(reference):
+        trace, kw = build_trace("multi_region", seed=3)
+        return simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                              warm_start=1, reference=reference)
+    fast, ref = run(False), run(True)
+    assert _fingerprint(fast) == _fingerprint(ref)
+    assert [c.served_batch for c in fast.clusters] == \
+        [c.served_batch for c in ref.clusters]
+    assert fast.migrations == ref.migrations
+    assert fast.egress_bytes == ref.egress_bytes
+    _summaries_match(fast, ref)
+
+
+def test_failure_and_degradation_paths_match_reference():
+    for name in ("instance_failures", "slow_nodes"):
+        fast = _run(name, seed=3)
+        ref = _run(name, seed=3, reference=True)
+        assert _fingerprint(fast) == _fingerprint(ref), name
+
+
+# ------------------------------------------- inlined hot-path twin pinning
+def test_itl_twins_pin_perf_model():
+    """The hot path inlines PerfModel.itl three ways (SimInstance._itl_now,
+    the block inside advance, InstancePlane._itl). Pin the callable twins
+    bit-for-bit against PerfModel.itl across the feature-flag grid so a
+    future PerfModel edit cannot silently fork the simulator physics.
+    (advance's inline block is pinned transitively: the vectorized-vs-
+    reference equivalence tests compare it against these.)"""
+    from repro.sim.cluster import InstancePlane, InstanceType, SimInstance
+    from repro.sim.perf_model import PerfModel
+    cases = [
+        dict(),
+        dict(speculative_decoding=True),
+        dict(prefix_caching=True),
+        dict(speculative_decoding=True, prefix_caching=True,
+             flops_scale=0.6, hbm_bw_scale=0.75),
+    ]
+    for kw in cases:
+        perf = PerfModel("llama-8b", **kw)
+        for slow in (1.0, 4.0):
+            inst = SimInstance(perf, InstanceType.MIXED, 0.0,
+                               static_batch=64)
+            inst.slow_factor = slow
+            plane = InstancePlane(cap=4)
+            slot = plane.alloc(inst)
+            plane.slow[slot] = slow
+            # batch/context grid reaching past the KV-capacity inflection
+            cap = perf.kv_capacity_tokens()
+            ctxs = [1.0, 512.0, 2048.0, cap / 4, cap / 2]
+            for b in (1, 8, 64, 512):
+                for ctx in ctxs:
+                    want = perf.itl(b, ctx) * slow
+                    assert inst._itl_now(b, ctx) == want, (kw, slow, b, ctx)
+                    got = plane._itl(np.array([slot]), np.array([b]),
+                                     np.array([ctx]))
+                    assert float(got[0]) == want, (kw, slow, b, ctx)
+
+
+def test_scan_admit_pins_can_admit_best_fit():
+    """_scan_admit is the fused twin of
+    `_best_fit([i for i in pool if i.can_admit(req)])` — pin the choice on
+    randomized pool states (fill levels, KV pressure, health, inactive
+    members) so an admission-rule change cannot drift between them."""
+    from repro.sim.cluster import InstanceType
+    from repro.sim.controllers import _best_fit, _scan_admit
+    rng = np.random.default_rng(0)
+    cluster = SimCluster(default_perf_factory(), max_chips=4000)
+    cluster.event_mode = True
+    pool = []
+    for k in range(8):
+        inst = cluster.provision("llama-8b", InstanceType.MIXED, 0.0,
+                                 static_batch=int(rng.integers(1, 6)))
+        inst.ready_time = 0.0
+        inst.activate_if_ready(0.0)
+        pool.append(inst)
+    for trial in range(200):
+        req = make_interactive(int(rng.integers(1, 4000)), 10, 0.0)
+        for inst in pool:
+            inst.active = bool(rng.random() < 0.8)
+            inst.health_ewma = 3.0 if rng.random() < 0.3 else 1.0
+            n = int(rng.integers(0, inst.static_batch + 1))
+            # fake fill without running the engine: aggregates only
+            inst.running = {i: None for i in range(n)}
+            inst._kv_prefill = float(rng.uniform(0, 2) * 200000)
+            inst._kv_dec_base = 0.0
+            inst._n_dec = 0
+        want = _best_fit([i for i in pool if i.can_admit(req)])
+        got = _scan_admit(pool, req)
+        assert got is want, trial
+
+
+# ------------------------------------------------------- materialize parity
+def test_bulk_materialize_equals_constructor_requests():
+    """Trace.materialize bypasses the dataclass __init__ — its objects
+    must be field-for-field what the constructor would build (guards
+    against Request field drift)."""
+    trace = generate_trace(WorkloadSpec(n_requests=50, seed=4,
+                                        interactive_frac=0.5))
+    fast = trace.materialize(row0=0)
+    slow = [Request(int(p), int(o),
+                    RequestType.INTERACTIVE if c else RequestType.BATCH,
+                    fast[i].slo, float(t), model=trace.models[m], row=i)
+            for i, (t, p, o, c, m) in enumerate(zip(
+                trace.arrival, trace.prompt_len, trace.output_len,
+                trace.interactive, trace.model_idx))]
+    for f, s in zip(fast, slow):
+        d1 = dict(f.__dict__)
+        d2 = dict(s.__dict__)
+        d1.pop("req_id")
+        d2.pop("req_id")
+        assert d1 == d2
+    # every declared Request field is present on the bulk-built object
+    import dataclasses
+    names = {fld.name for fld in dataclasses.fields(Request)}
+    assert set(fast[0].__dict__) == names
