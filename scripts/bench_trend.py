@@ -38,6 +38,38 @@ def _load_committed() -> dict:
     return json.loads(out.stdout)
 
 
+def _validate(doc, label: str) -> dict:
+    """Schema check before gating: a malformed benchmark file must fail
+    with a clear message, not a KeyError mid-diff. Returns ``doc``."""
+    if not isinstance(doc, dict):
+        raise SystemExit(f"bench_trend: {label}: expected a JSON object, "
+                         f"got {type(doc).__name__}")
+    rows = doc.get("scenarios")
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"bench_trend: {label}: missing or empty "
+                         "'scenarios' list")
+    for i, r in enumerate(rows):
+        where = f"{label}: scenarios[{i}]"
+        if not isinstance(r, dict):
+            raise SystemExit(f"bench_trend: {where}: expected an object")
+        if not isinstance(r.get("scenario"), str) or not r["scenario"]:
+            raise SystemExit(f"bench_trend: {where}: 'scenario' must be a "
+                             "non-empty string")
+        if not isinstance(r.get("events_per_s"), (int, float)) \
+                or isinstance(r.get("events_per_s"), bool):
+            raise SystemExit(f"bench_trend: {where} "
+                             f"({r['scenario']}): 'events_per_s' must be "
+                             "a number")
+        for k in ("wall_s", "slo_attainment", "completion_rate"):
+            v = r.get(k)
+            if v is not None and (isinstance(v, bool)
+                                  or not isinstance(v, (int, float))):
+                raise SystemExit(f"bench_trend: {where} "
+                                 f"({r['scenario']}): '{k}' must be a "
+                                 "number when present")
+    return doc
+
+
 def _rows(doc: dict) -> dict:
     return {r["scenario"]: r for r in doc.get("scenarios", [])}
 
@@ -49,13 +81,17 @@ def main(argv) -> int:
             old = json.load(f)
         with open(argv[1]) as f:
             new = json.load(f)
+        old_label, new_label = argv[0], argv[1]
     elif not argv:
         old = _load_committed()
         with open(os.path.join(ROOT, BENCH)) as f:
             new = json.load(f)
+        old_label, new_label = f"HEAD:{BENCH}", BENCH
     else:
         print(__doc__)
         return 2
+    _validate(old, old_label)
+    _validate(new, new_label)
 
     old_rows, new_rows = _rows(old), _rows(new)
     failures = []

@@ -1,19 +1,28 @@
 #!/usr/bin/env python
-"""Fast CI loop: the non-JAX (sim / core / queue) test subset.
+"""Fast CI loop: static gates + the non-JAX (sim / core / queue) subset.
 
-Runs the control-plane and simulator tests — everything that exercises
-the autoscalers, the global queue, request groups, the waiting-time
-estimator, and both simulation engines — without importing JAX-heavy
-kernel/model modules. Target: well under a minute.
+Three blocking stages, cheapest first:
+
+1. ``python -m repro.analysis src`` — the invariant auditor (mirror-sync,
+   determinism, hygiene rules). Zero findings or the build fails.
+2. ``ruff check`` — when ruff is installed (see requirements-dev.txt);
+   skipped with a notice otherwise (the auditor's LINT rules cover the
+   same ground in-container).
+3. The control-plane and simulator tests — everything that exercises the
+   autoscalers, the global queue, request groups, the waiting-time
+   estimator, and both simulation engines — without importing JAX-heavy
+   kernel/model modules. Target: well under a minute.
 
 Usage:  python scripts/ci_fast.py [extra pytest args]
 """
 import os
+import shutil
 import subprocess
 import sys
 import time
 
 FAST_TESTS = [
+    "tests/test_analysis.py",        # invariant auditor rules + clean tree
     "tests/test_autoscalers.py",
     "tests/test_configs.py",
     "tests/test_event_sim.py",
@@ -25,6 +34,7 @@ FAST_TESTS = [
     "tests/test_request_groups.py",
     "tests/test_scenarios.py",       # scenario smoke incl. multi_model_fleet,
                                      # trace_replay, instance_failures
+    "tests/test_shadow_verify.py",   # runtime mirror audit + desync mutations
     "tests/test_simulator.py",
     "tests/test_system.py",
     "tests/test_trace_plane.py",     # columnar Trace + trace I/O + streaming
@@ -38,9 +48,28 @@ def main() -> int:
     src = os.path.join(root, "src")
     env["PYTHONPATH"] = src + os.pathsep * bool(env.get("PYTHONPATH", "")) \
         + env.get("PYTHONPATH", "")
+    t0 = time.time()
+
+    rc = subprocess.call([sys.executable, "-m", "repro.analysis", "src"],
+                         cwd=root, env=env)
+    if rc != 0:
+        print("ci_fast: repro.analysis found violations (see above)",
+              file=sys.stderr)
+        return rc
+
+    ruff = shutil.which("ruff")
+    if ruff:
+        rc = subprocess.call([ruff, "check", "src", "tests", "scripts"],
+                             cwd=root, env=env)
+        if rc != 0:
+            print("ci_fast: ruff check failed", file=sys.stderr)
+            return rc
+    else:
+        print("ci_fast: ruff not installed — skipping (the repro.analysis "
+              "LINT rules still gate)", file=sys.stderr)
+
     cmd = [sys.executable, "-m", "pytest", "-q", *FAST_TESTS,
            *sys.argv[1:]]
-    t0 = time.time()
     rc = subprocess.call(cmd, cwd=root, env=env)
     print(f"ci_fast: {time.time() - t0:.1f}s", file=sys.stderr)
     return rc

@@ -1,0 +1,44 @@
+"""CLI: ``python -m repro.analysis src/ [--json] [--rules MIR,DET201]``.
+
+Exit status 0 when no finding survives suppressions, 1 otherwise (the
+``scripts/ci_fast.py`` zero-findings gate), 2 on usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import run_analysis
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Mirror-sync, determinism, and hygiene auditor "
+                    "(see repro.analysis for the rule catalogue).")
+    parser.add_argument("paths", nargs="+",
+                        help="files or directories to analyze")
+    parser.add_argument("--json", action="store_true", dest="as_json",
+                        help="emit findings as a JSON array")
+    parser.add_argument("--rules", default=None,
+                        help="comma-separated rule ids or prefixes "
+                             "(e.g. MIR,DET203) — default: all rules")
+    args = parser.parse_args(argv)
+
+    rules = [r.strip() for r in args.rules.split(",") if r.strip()] \
+        if args.rules else None
+    findings = run_analysis(args.paths, rules=rules)
+
+    if args.as_json:
+        print(json.dumps([f.to_dict() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f)
+        print(f"repro.analysis: {len(findings)} finding(s)",
+              file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

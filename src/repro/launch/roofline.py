@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Tuple
+from typing import Dict
 
 # hardware constants (task-given, TPU v5e class)
 PEAK_FLOPS = 197e12      # bf16 per chip

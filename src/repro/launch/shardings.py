@@ -12,12 +12,11 @@ Policy (baseline; §Perf iterates on it):
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ModelConfig
 
 
 def axis_sizes(mesh: Mesh) -> Dict[str, int]:

@@ -6,14 +6,13 @@ lower + compile the full production configs without materializing a byte.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.base import InputShape, ModelConfig
 from repro.launch import shardings as sh
 from repro.models import Model
 from repro.training.optimizer import AdamWState, adamw_init, adamw_update

@@ -63,6 +63,7 @@ def main() -> None:
     step_fn = jax.jit(make_train_step(cfg, remat=False, lr=args.lr))
     rng = np.random.default_rng(0)
 
+    # repro-lint: ok(DET202, real training wall clock)
     t0 = time.time()
     first = last = None
     for i in range(args.steps):
@@ -75,6 +76,7 @@ def main() -> None:
         if i % args.log_every == 0 or i == args.steps - 1:
             print(f"step {i:4d} loss={loss:.4f} "
                   f"gnorm={float(m['grad_norm']):.3f} "
+                  # repro-lint: ok(DET202, real training wall clock)
                   f"({(time.time()-t0)/(i+1):.2f}s/step)")
     print(f"\nloss {first:.4f} -> {last:.4f} over {args.steps} steps")
     if args.checkpoint:

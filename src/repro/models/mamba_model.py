@@ -1,7 +1,7 @@
 """Pure-SSM (Mamba2) decoder model: attention-free, O(1) decode state."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

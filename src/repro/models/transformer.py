@@ -6,7 +6,6 @@ configurations — essential for the 40-config dry-run matrix.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

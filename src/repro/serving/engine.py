@@ -12,6 +12,8 @@ through the generic slot-pool protocol below.
 """
 from __future__ import annotations
 
+# mirror-sync: module ok(real engine has no RequestLedger/InstancePlane)
+# The columnar mirrors exist only in the simulated data plane.
 import time
 from collections import deque
 from dataclasses import dataclass, field

@@ -9,6 +9,8 @@ the engine's slot read/restore (used for rebalancing mixed instances).
 """
 from __future__ import annotations
 
+# mirror-sync: module ok(real engine has no RequestLedger/InstancePlane)
+# The columnar mirrors exist only in the simulated data plane.
 import itertools
 import time
 from typing import Callable, Dict, List, Optional
@@ -68,6 +70,8 @@ class RealInstance:
 
     # ------------------------------------------------ protocol: state
     def activate_if_ready(self, now: float) -> None:
+        # Real engine: no simulated-float drift between ready_time and now.
+        # repro-lint: ok(DET205, both times come from one monotonic clock)
         if self.state == InstanceState.LOADING and now >= self.ready_time:
             self.state = InstanceState.ACTIVE
 

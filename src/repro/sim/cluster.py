@@ -74,6 +74,26 @@ _STALLED_ITL = 1e12
 # instance is suspected slow and routed around (slow-node degradation)
 SLOW_SUSPECT_RATIO = 1.8
 
+# Mirror registries: ``SimInstance`` fluid scalar -> ``InstancePlane``
+# column kept in sync at every mutation site (directly, via
+# ``_sync_plane()``, or via ``plane.alloc``/``plane.free``). The static
+# mirror auditor (``repro.analysis``, rule MIR102) checks assignments
+# against these mappings and the runtime shadow verifier asserts the
+# columns agree with the objects — extend them when mirroring a new
+# scalar into the plane.
+PLANE_MIRRORS: Dict[str, str] = {
+    "active": "active",
+    "vclock": "vclock",
+    "last_advance": "last_advance",
+    "slow_factor": "slow",
+    "_n_dec": "n_dec",
+    "_kv_prefill": "kv_prefill",
+    "_kv_dec_base": "kv_dec_base",
+}
+# Container mirror: mutating the ``running`` dict (admission, removal,
+# clear) must land in the ``n_running`` column the same way.
+PLANE_CONTAINER_MIRRORS: Dict[str, str] = {"running": "n_running"}
+
 
 class InstanceType(enum.Enum):
     INTERACTIVE = "interactive"
@@ -351,6 +371,8 @@ class SimInstance:
 
     # ------------------------------------------------------------ state
     def activate_if_ready(self, now: float) -> None:
+        # The lost-READY fix lives at the call sites: max(t, inst.ready_time).
+        # repro-lint: ok(DET205, callers clamp now to ready_time)
         if self.state == InstanceState.LOADING and now >= self.ready_time:
             self.state = InstanceState.ACTIVE
             self.active = True
@@ -539,6 +561,8 @@ class SimInstance:
         return None
 
     # ----------------------------------------------------- seq bookkeeping
+    # Internal transition: every caller runs _sync_plane before the batch ends.
+    # mirror-sync: ok(callers settle the composition via _sync_plane)
     def _enter_decode(self, s: SimSeq, v_entry: float) -> None:
         s.decoding = True
         s.v0 = v_entry
@@ -561,6 +585,8 @@ class SimInstance:
             if c is not None and c.ledger is not None and r.row >= 0:
                 c.ledger.tokens_generated[r.row] = r.tokens_generated
 
+    # Internal transition: every caller runs _sync_plane before the batch ends.
+    # mirror-sync: ok(callers settle the composition via _sync_plane)
     def _remove_seq(self, s: SimSeq) -> None:
         r = s.request
         del self.running[r.req_id]
@@ -853,6 +879,8 @@ class SimInstance:
         return self._compute_eta()
 
     # ------------------------------------------------------------ stepping
+    # The event engines never run it and RunResult falls back to objects.
+    # mirror-sync: ok(fixed-tick reference path is ledger-less by design)
     def step(self, dt: float, now: float) -> Tuple[List[Request], int]:
         """Advance the instance by dt of simulated wall time (fixed-tick
         reference; walks every running sequence)."""

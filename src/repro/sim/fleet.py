@@ -373,11 +373,13 @@ class GlobalPlacer:
         fleet = self._fleet
         dt = max(now - self._last_review, 1e-9)
         self._last_review = now
-        for key in set(self._rate_i) | set(self._win_i):
+        # sorted: set-union iteration order is address-dependent, and the
+        # update order decides the rate dicts' insertion order downstream
+        for key in sorted(set(self._rate_i) | set(self._win_i)):
             obs = self._win_i.get(key, 0) / dt
             r = self._rate_i.get(key, 0.0)
             self._rate_i[key] = r + self.ewma_alpha * (obs - r)
-        for m in set(self._rate_b) | set(self._win_b):
+        for m in sorted(set(self._rate_b) | set(self._win_b)):
             obs = self._win_b.get(m, 0) / dt
             r = self._rate_b.get(m, 0.0)
             self._rate_b[m] = r + self.ewma_alpha * (obs - r)

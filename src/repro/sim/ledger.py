@@ -44,6 +44,24 @@ STATE_CODES: Dict[RequestState, int] = {
     RequestState.FINISHED: FINISHED,
 }
 
+# Mirror registry: ``Request`` attribute -> ledger outcome column written
+# at the same mutation site (``led.<col>[req.row] = ...``). The static
+# mirror auditor (``repro.analysis``, rule MIR101) walks assignments
+# against this mapping, and the runtime shadow verifier rebuilds the
+# columns from the objects and asserts exact agreement — extend it when
+# adding a mirrored outcome field.
+LEDGER_MIRRORS: Dict[str, str] = {
+    "state": "state",
+    "first_token_time": "first_token_time",
+    "finish_time": "finish_time",
+    "tokens_generated": "tokens_generated",
+}
+# Derived mirror (documented for the shadow verifier, not auto-audited:
+# the object side is a list *append*, not an assignment): the event core
+# records the lifetime-mean ITL of ``Request.itl_samples`` in
+# ``mean_itl`` at finish time.
+LEDGER_DERIVED_MIRRORS: Dict[str, str] = {"itl_samples": "mean_itl"}
+
 
 class RequestLedger:
     """Struct-of-arrays per-request outcome store (see module docstring).

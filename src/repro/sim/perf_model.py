@@ -19,8 +19,8 @@ All constants are module-level and overridable for calibration tests.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from dataclasses import dataclass
+from typing import Dict
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig

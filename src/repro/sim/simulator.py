@@ -224,7 +224,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     quantize: float = 0.0,
                     failures: Optional[FailurePlan] = None,
                     degradations: Optional[DegradationPlan] = None,
-                    reference: bool = False) -> RunResult:
+                    reference: bool = False,
+                    shadow_verify=None) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
     non-empty ticks yet batches arrivals/completions exactly like a
@@ -234,7 +235,15 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     ``reference=True`` runs the pre-columnar-refactor control flow — no
     arrival fast path, no saturation memo, per-object (never vectorized)
     control-tick catch-up — as the equivalence baseline the columnar hot
-    path is tested against. Results must be identical either way."""
+    path is tested against. Results must be identical either way.
+
+    ``shadow_verify`` enables the runtime mirror auditor: pass a
+    :class:`repro.analysis.shadow.ShadowVerifier` (or any truthy value,
+    or set ``CHIRON_SHADOW_VERIFY=1``) to rebuild the ledger/plane
+    columns from the objects at control ticks and completion sweeps and
+    assert exact agreement. Raises ``ShadowVerifyError`` on desync."""
+    from repro.analysis.shadow import resolve as _shadow_resolve
+    shadow = _shadow_resolve(shadow_verify)
     queue = GlobalQueue()
     cursor = _RequestCursor(requests)
     t = 0.0
@@ -411,6 +420,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         if ran_control:
             n_events += 1
             cluster.catch_up(t, batch_seq)
+            if shadow is not None:
+                shadow.verify_cluster(cluster)
+                shadow.maybe_verify_ledger(cursor.ledger, cursor.all, t)
             pre = (len(cluster.instances), cluster.scale_ups,
                    cluster.scale_downs)
             controller.control(cluster, queue, t)
@@ -465,6 +477,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                         inst._epoch += 1
                         heappush(heap, (t + eta, _COMPLETION,
                                         next(ev_seq), inst, inst._epoch))
+            if shadow is not None:
+                shadow.verify_cluster(cluster)
 
         # 6. timeline sample (suppressed while parked — state is frozen)
         if t >= next_timeline - eps:
@@ -472,6 +486,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
 
     if timeline and t > timeline[-1].t:
         _sample(t)
+    if shadow is not None:
+        shadow.verify_cluster(cluster)
+        shadow.verify_ledger(cursor.ledger, cursor.all)
     return RunResult(requests=cursor.all_requests(), timeline=timeline,
                      chip_seconds=cluster.chip_seconds,
                      peak_chips=cluster.peak_chips,
@@ -588,7 +605,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    completion_grain: float = 0.25,
                    failures: Optional[FailurePlan] = None,
                    degradations: Optional[DegradationPlan] = None,
-                   reference: bool = False) -> RunResult:
+                   reference: bool = False,
+                   shadow_verify=None) -> RunResult:
     """Multi-cluster event loop: one shared heap drives every cluster in a
     :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
     hierarchy (the paper's two tiers), under the fleet's Router/GlobalPlacer
@@ -605,7 +623,12 @@ def simulate_fleet(requests: RequestSource, fleet, *,
 
     Reported ``peak_chips`` is the sum of per-cluster peaks (budgets are
     disjoint, so coincident peaks are what capacity planning needs).
-    """
+
+    ``shadow_verify`` mirrors :func:`simulate_events`: a truthy value (or
+    ``CHIRON_SHADOW_VERIFY=1``) audits every cluster's plane and the
+    shared ledger at control ticks and completion sweeps."""
+    from repro.analysis.shadow import resolve as _shadow_resolve
+    shadow = _shadow_resolve(shadow_verify)
     cursor = _RequestCursor(requests)
     clusters = list(fleet.clusters)
     by_sim = {id(fc.cluster): fc for fc in clusters}
@@ -811,6 +834,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             pre = post = 0
             for fc in clusters:
                 fc.cluster.catch_up(t, batch_seq)
+                if shadow is not None:
+                    shadow.verify_cluster(fc.cluster)
                 pre += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
                 fc.controller.control(fc.cluster, fc.queue, t)
@@ -883,6 +908,10 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                         heappush(heap, (t + eta, _COMPLETION,
                                         next(ev_seq), inst,
                                         inst._epoch))
+            if shadow is not None:
+                shadow.verify_cluster(fc.cluster)
+        if shadow is not None and ran_control:
+            shadow.maybe_verify_ledger(cursor.ledger, cursor.all, t)
 
         # 7. timeline sample (suppressed while parked — state is frozen)
         if not control_parked and t >= next_timeline - eps:
@@ -890,6 +919,10 @@ def simulate_fleet(requests: RequestSource, fleet, *,
 
     if timeline and t > timeline[-1].t:
         _sample(t)
+    if shadow is not None:
+        for fc in clusters:
+            shadow.verify_cluster(fc.cluster)
+        shadow.verify_ledger(cursor.ledger, cursor.all)
     stats = fleet.finalize()
     return RunResult(
         requests=cursor.all_requests(), timeline=timeline,

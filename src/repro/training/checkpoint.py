@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import numpy as np

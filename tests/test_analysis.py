@@ -1,0 +1,301 @@
+"""Invariant auditor: fixture violations for every rule, clean negatives,
+and the suppression grammar — plus the gate that the repo's own tree is
+clean (``python -m repro.analysis src`` exits 0).
+
+Fixtures run through :func:`repro.analysis.analyze_code` with synthetic
+paths: paths outside the ``repro`` package get the full rule set, so the
+mirror rules are testable without writing files into ``src/``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import analyze_code, run_analysis
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rules(findings):
+    return [(f.rule, f.line) for f in findings]
+
+
+def _analyze(code, path="fixture.py", rules=None):
+    return analyze_code(textwrap.dedent(code), path=path, rules=rules)
+
+
+# ------------------------------------------------------------ MIR101/102
+def test_mir101_unsynced_request_state_write_flagged():
+    findings = _analyze("""\
+        def finish(req, t):
+            req.state = RequestState.FINISHED
+            req.finish_time = t
+    """)
+    assert ("MIR101", 2) in _rules(findings)
+    assert ("MIR101", 3) in _rules(findings)
+
+
+def test_mir101_paired_ledger_write_is_clean():
+    findings = _analyze("""\
+        def finish(req, led, t):
+            req.state = RequestState.FINISHED
+            led.state[req.row] = FINISHED
+            req.finish_time = t
+            led.finish_time[req.row] = t
+    """)
+    assert not [f for f in findings if f.rule == "MIR101"]
+
+
+def test_mir101_instance_state_write_not_confused_with_request():
+    # `state` is also an InstanceState attribute — only RequestState
+    # writes are the Request mirror
+    findings = _analyze("""\
+        def activate(inst):
+            inst.state = InstanceState.ACTIVE
+    """)
+    assert not findings
+
+
+def test_mir102_plane_scalar_write_flagged_and_sync_clears_it():
+    flagged = _analyze("""\
+        def grow(self):
+            self._n_dec += 1
+    """)
+    assert _rules(flagged) == [("MIR102", 2)]
+    clean = _analyze("""\
+        def grow(self):
+            self._n_dec += 1
+            self._sync_plane()
+    """)
+    assert not clean
+
+
+def test_mir102_container_write_needs_sync():
+    flagged = _analyze("""\
+        def swap(self, i, seq):
+            self.running[i] = seq
+    """)
+    assert _rules(flagged) == [("MIR102", 2)]
+    clean = _analyze("""\
+        def swap(self, i, seq):
+            self.running[i] = seq
+            self._sync_plane()
+    """)
+    assert not clean
+
+
+def test_mir_rules_scoped_to_sim_and_serving():
+    code = """\
+        def finish(req):
+            req.state = RequestState.FINISHED
+    """
+    assert _analyze(code, path="src/repro/sim/cluster.py")
+    assert _analyze(code, path="src/repro/serving/engine.py")
+    # elsewhere in the package the mirrors don't exist
+    assert not _analyze(code, path="src/repro/launch/serve.py")
+
+
+def test_init_functions_exempt_from_mirror_pairing():
+    findings = _analyze("""\
+        def __init__(self):
+            self.active = False
+    """)
+    assert not findings
+
+
+# ------------------------------------------------------------- DET201/202
+def test_det201_unseeded_rng_flagged_seeded_clean():
+    findings = _analyze("""\
+        import random
+        import numpy as np
+
+        def jitter():
+            a = random.random()
+            b = np.random.rand(4)
+            rng = np.random.default_rng(0)
+            c = rng.random()
+            d = random.Random(3).random()
+            return a, b, c, d
+    """)
+    assert [(f.rule, f.line) for f in findings if f.rule == "DET201"] \
+        == [("DET201", 5), ("DET201", 6)]
+
+
+def test_det202_wall_clock_flagged_outside_exempt_dirs():
+    code = """\
+        import time
+
+        def stamp():
+            return time.time()
+    """
+    assert _rules(_analyze(code, path="src/repro/sim/foo.py")) \
+        == [("DET202", 4)]
+    assert not _analyze(code, path="scripts/foo.py")
+    assert not _analyze(code, path="benchmarks/foo.py")
+
+
+# --------------------------------------------------------------- DET203
+def test_det203_set_iteration_flagged_sorted_clean():
+    findings = _analyze("""\
+        def review(a, b):
+            for k in set(a) | set(b):
+                print(k)
+            for k in sorted(set(a) | set(b)):
+                print(k)
+            out = [x for x in {1, 2, 3}]
+            return out
+    """)
+    assert [(f.rule, f.line) for f in findings if f.rule == "DET203"] \
+        == [("DET203", 2), ("DET203", 6)]
+
+
+# --------------------------------------------------------------- DET204
+def test_det204_heap_keys_need_total_order_tiebreaker():
+    findings = _analyze("""\
+        import heapq
+
+        def push(heap, t, inst, seq):
+            heapq.heappush(heap, inst)
+            heapq.heappush(heap, (t, inst))
+            heapq.heappush(heap, (t, next(seq), inst))
+            heapq.heappush(heap, (t, inst._epoch, inst))
+    """)
+    assert [(f.rule, f.line) for f in findings if f.rule == "DET204"] \
+        == [("DET204", 4), ("DET204", 5)]
+
+
+# --------------------------------------------------------------- DET205
+def test_det205_raw_event_time_compare_flagged_epsilon_clean():
+    findings = _analyze("""\
+        def poll(inst, now):
+            if inst.ready_time <= now:
+                fire(inst)
+            if inst.ready_time <= now + 1e-9:
+                fire(inst)
+            if inst.ready_time != now:
+                pass
+    """)
+    assert [(f.rule, f.line) for f in findings if f.rule == "DET205"] \
+        == [("DET205", 2)]
+
+
+# ------------------------------------------------------------- LINT301/302
+def test_lint301_unused_import_flagged_used_clean():
+    findings = _analyze("""\
+        import os
+        import sys
+        from math import ceil, floor
+
+        def up(x):
+            return ceil(x), sys.argv
+    """)
+    assert [(f.rule, f.line, f.message) for f in findings
+            if f.rule == "LINT301"] \
+        == [("LINT301", 1, "`os` is imported but never used"),
+            ("LINT301", 3, "`floor` is imported but never used")]
+
+
+def test_lint301_skips_init_py_reexports():
+    assert not _analyze("import os\n", path="pkg/__init__.py")
+
+
+def test_lint302_mutable_default_flagged_none_clean():
+    findings = _analyze("""\
+        def push(x, acc=[]):
+            acc.append(x)
+            return acc
+
+        def safe(x, acc=None):
+            return acc
+    """)
+    assert [(f.rule, f.line) for f in findings if f.rule == "LINT302"] \
+        == [("LINT302", 1)]
+
+
+# ---------------------------------------------------------- suppressions
+def test_line_suppression_mirror_and_lint():
+    findings = _analyze("""\
+        def finish(req, t):
+            req.state = RequestState.FINISHED  # mirror-sync: ok(test)
+            req.finish_time = t
+    """)
+    assert _rules(findings) == [("MIR101", 3)]
+
+
+def test_standalone_comment_suppression_covers_next_line():
+    findings = _analyze("""\
+        def poll(inst, now):
+            # repro-lint: ok(DET205, clamped at call sites)
+            if inst.ready_time <= now:
+                fire(inst)
+    """)
+    assert not findings
+
+
+def test_def_line_suppression_covers_whole_function():
+    findings = _analyze("""\
+        def finish(req, t):  # mirror-sync: ok(caller settles the ledger)
+            req.state = RequestState.FINISHED
+            req.finish_time = t
+    """)
+    assert not findings
+
+
+def test_module_pragma_exempts_all_mirror_rules():
+    findings = _analyze("""\
+        # mirror-sync: module ok(no columnar mirrors in this module)
+        def finish(req, t):
+            req.state = RequestState.FINISHED
+            req.finish_time = t
+    """)
+    assert not findings
+
+
+def test_lint_suppression_is_rule_specific():
+    findings = _analyze("""\
+        def poll(inst, now):
+            # repro-lint: ok(DET201, wrong rule id)
+            if inst.ready_time <= now:
+                fire(inst)
+    """)
+    assert _rules(findings) == [("DET205", 3)]
+
+
+# -------------------------------------------------------- rule filtering
+def test_rules_filter_selects_by_prefix():
+    code = """\
+        import os
+
+        def finish(req):
+            req.state = RequestState.FINISHED
+    """
+    only_mir = _analyze(code, rules=["MIR"])
+    assert {f.rule for f in only_mir} == {"MIR101"}
+    only_lint = _analyze(code, rules=["LINT301"])
+    assert {f.rule for f in only_lint} == {"LINT301"}
+
+
+# -------------------------------------------------- the repo's own tree
+def test_repo_tree_is_clean():
+    findings = run_analysis([os.path.join(REPO, "src")])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_cli_json_output_and_exit_codes(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import os\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(bad), "--json"],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 1
+    doc = json.loads(proc.stdout)
+    assert doc[0]["rule"] == "LINT301" and doc[0]["line"] == 1
+
+    good = tmp_path / "good.py"
+    good.write_text("X = 1\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", str(good)],
+        capture_output=True, text=True, env=env)
+    assert proc.returncode == 0

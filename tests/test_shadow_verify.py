@@ -1,0 +1,117 @@
+"""Runtime shadow-verify plane: seeded scenario runs must pass the
+object→column rebuild exactly, and deliberate desyncs must be caught.
+
+The verifier rebuilds ledger and instance-plane columns from the Python
+objects at control ticks and completion sweeps; these tests drive it
+through the same scenario library the equivalence suite uses (including
+``vec_min=1`` so the vectorized plane is live from the first instance,
+and the failure/degradation variants that exercise plane free/repack).
+"""
+import pytest
+
+from repro.analysis.shadow import ShadowVerifier, ShadowVerifyError
+from repro.sim.cluster import SimCluster, SimInstance
+from repro.sim.controllers import ChironController
+from repro.sim.ledger import QUEUED
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (default_perf_factory, simulate_events,
+                                 simulate_fleet)
+
+
+def _run_events(name, seed, *, vec_min=None, shadow=None, n=0):
+    trace, kw = build_trace(name, n_requests=n, seed=seed)
+    cluster = SimCluster(default_perf_factory(), max_chips=400)
+    if vec_min is not None:
+        cluster.vec_min = vec_min
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
+                           warm_start=2, failures=kw.get("failures"),
+                           degradations=kw.get("degradations"),
+                           shadow_verify=shadow)
+
+
+# ----------------------------------------------------- scenario sweeps
+@pytest.mark.parametrize("name,seed", [("diurnal", 7),
+                                       ("multi_model_fleet", 11)])
+def test_scenarios_pass_shadow_verify(name, seed):
+    shadow = ShadowVerifier()
+    res = _run_events(name, seed, shadow=shadow)
+    assert res.completion_rate() > 0
+    assert shadow.ledger_checks > 0
+
+
+@pytest.mark.parametrize("name,seed", [("diurnal", 3),
+                                       ("multi_model_fleet", 5)])
+def test_scenarios_pass_with_plane_always_live(name, seed):
+    # vec_min=1 arms the vectorized instance plane from the first
+    # instance, so every control tick audits the columns
+    shadow = ShadowVerifier()
+    _run_events(name, seed, shadow=shadow, vec_min=1)
+    assert shadow.plane_checks > 0
+    assert shadow.ledger_checks > 0
+
+
+@pytest.mark.parametrize("name", ["instance_failures", "slow_nodes"])
+def test_failure_and_degradation_variants_pass(name):
+    # failure frees plane slots, degradation rewrites slow factors —
+    # both must keep the columns bit-identical to the objects
+    shadow = ShadowVerifier()
+    _run_events(name, 13, shadow=shadow, vec_min=1)
+    assert shadow.plane_checks > 0
+
+
+def test_multi_region_fleet_passes_shadow_verify():
+    trace, kw = build_trace("multi_region", 0, seed=3)
+    fleet = kw["fleet"]()
+    for fc in fleet.clusters:
+        fc.cluster.vec_min = 1
+    shadow = ShadowVerifier()
+    res = simulate_fleet(trace, fleet, max_time=kw["max_time"],
+                         shadow_verify=shadow)
+    assert res.completion_rate() > 0
+    assert shadow.plane_checks > 0
+    assert shadow.ledger_checks > 0
+
+
+def test_env_var_resolves_to_verifier(monkeypatch):
+    from repro.analysis.shadow import resolve
+    monkeypatch.delenv("CHIRON_SHADOW_VERIFY", raising=False)
+    assert resolve(None) is None
+    monkeypatch.setenv("CHIRON_SHADOW_VERIFY", "0")
+    assert resolve(None) is None
+    monkeypatch.setenv("CHIRON_SHADOW_VERIFY", "1")
+    assert isinstance(resolve(None), ShadowVerifier)
+    sv = ShadowVerifier()
+    assert resolve(sv) is sv
+
+
+# --------------------------------------------------- deliberate desyncs
+def test_skipping_sync_plane_is_caught(monkeypatch):
+    # mutation: _sync_plane only refreshes the ETA stamp and never
+    # writes the columns — the first live control tick must trip
+    def broken(self):
+        self._eta_stamp = -1
+    monkeypatch.setattr(SimInstance, "_sync_plane", broken)
+    with pytest.raises(ShadowVerifyError, match="plane column"):
+        _run_events("diurnal", 7, shadow=ShadowVerifier(), vec_min=1)
+
+
+def test_ledger_desync_is_caught(monkeypatch):
+    # mutation: admit() runs normally, then the ledger row is knocked
+    # back to QUEUED; ledger_interval=0 audits every control tick so
+    # the corruption is seen while the request is still in flight
+    orig_admit = SimInstance.admit
+
+    def corrupt(self, req, *args, **kwargs):
+        out = orig_admit(self, req, *args, **kwargs)
+        led = getattr(self._cluster, "ledger", None) if self._cluster \
+            else None
+        if led is not None and req.row >= 0:
+            led.state[req.row] = QUEUED
+        return out
+
+    monkeypatch.setattr(SimInstance, "admit", corrupt)
+    with pytest.raises(ShadowVerifyError, match="ledger `state`"):
+        _run_events("diurnal", 7,
+                    shadow=ShadowVerifier(ledger_interval=0.0))
