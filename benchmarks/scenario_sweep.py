@@ -22,7 +22,9 @@ Three sections:
 
 Env knobs: ``SCENARIO_SWEEP_N`` (speedup trace size, default 100000),
 ``SCENARIO_SWEEP_LEGACY_BUDGET`` (seconds, default 120),
-``SCENARIO_SWEEP_REPEATS`` (best-of-k scenario timing, default 3).
+``SCENARIO_SWEEP_REPEATS`` (best-of-k scenario timing, default 3),
+``SCENARIO_SWEEP_MILLION=0`` (skip the million-request replay row),
+``SCENARIO_SWEEP_MILLION_N`` (its request count, default 1000000).
 """
 from __future__ import annotations
 
@@ -250,11 +252,11 @@ def run():
                 for c in res.clusters}
         json_rows.append(jrow)
 
-    # ---- opt-in million-request replay (SCENARIO_SWEEP_MILLION=1): the
-    # scale point the columnar hot path is sized for. One run (no
-    # best-of: it is long), recorded like any scenario so bench_trend's
-    # wall-clock gate tracks it once a baseline is committed.
-    if os.environ.get("SCENARIO_SWEEP_MILLION"):
+    # ---- million-request replay: the scale point the columnar hot path
+    # is sized for, in the committed baseline so bench_trend's wall-clock
+    # gate tracks it across PRs. One run (no best-of: it is long);
+    # SCENARIO_SWEEP_MILLION=0 opts out for quick local sweeps.
+    if os.environ.get("SCENARIO_SWEEP_MILLION", "1") != "0":
         n_m = int(os.environ.get("SCENARIO_SWEEP_MILLION_N", "1000000"))
         trace, kw = build_trace("trace_replay", n_requests=n_m, seed=3)
         cluster = SimCluster(default_perf_factory(), max_chips=MAX_CHIPS)

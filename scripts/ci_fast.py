@@ -31,6 +31,8 @@ FAST_TESTS = [
     "tests/test_global_queue.py",
     "tests/test_ledger.py",          # columnar ledger + decision
                                      # equivalence vs the reference path
+    "tests/test_queue_plane.py",     # columnar lane mechanics + reference
+                                     # differential
     "tests/test_request_groups.py",
     "tests/test_scenarios.py",       # scenario smoke incl. multi_model_fleet,
                                      # trace_replay, instance_failures

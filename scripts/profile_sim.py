@@ -14,9 +14,18 @@ Usage::
     python scripts/profile_sim.py burst_spikes --top 40 --sort cumulative
     python scripts/profile_sim.py multi_region --plain    # no profiler,
                                                           # wall + ev/s only
+    python scripts/profile_sim.py trace_replay --phases   # per-phase wall
 
 ``--plain`` runs without instrumentation (cProfile inflates Python-call
 costs ~2x, so confirm wall-clock wins un-instrumented).
+
+``--phases`` threads a :class:`PhaseTimers` accumulator through the
+event core's ``phase_timers`` hook: the loop brackets its six numbered
+phases (arrivals, heap_drain, control, routing, sweep, sampling) with
+cheap ``perf_counter`` laps and this prints the per-phase wall-clock
+breakdown — phase attribution without cProfile's ~2x call-cost noise,
+so the next perf PR starts from data. Per-lap overhead is two clock
+reads; totals run ~5-10% above ``--plain`` wall.
 """
 from __future__ import annotations
 
@@ -38,19 +47,53 @@ from repro.sim.simulator import (default_perf_factory,       # noqa: E402
                                  simulate_events, simulate_fleet)
 
 
-def run_scenario(name: str, n_requests: int, seed: int, max_chips: int):
+class PhaseTimers:
+    """Accumulating wall-clock buckets for the event loop's six phases.
+
+    Implements the duck-typed protocol ``simulate_events`` /
+    ``simulate_fleet`` expect from ``phase_timers``: ``clock()`` returns
+    an opaque monotonic reading and ``lap(name, t0)`` folds
+    ``clock() - t0`` into the named bucket and returns the new reading
+    (so consecutive laps share one clock read). Wall-clock lives here in
+    ``scripts/`` — the simulator itself stays deterministic (DET202)."""
+
+    def __init__(self):
+        self.buckets = {}
+        self.clock = time.perf_counter
+
+    def lap(self, name: str, t0: float) -> float:
+        t1 = time.perf_counter()
+        self.buckets[name] = self.buckets.get(name, 0.0) + (t1 - t0)
+        return t1
+
+    def report(self, wall: float) -> str:
+        total = sum(self.buckets.values()) or 1e-12
+        lines = ["  phase        seconds   of-loop  of-wall"]
+        for name, secs in sorted(self.buckets.items(),
+                                 key=lambda kv: -kv[1]):
+            lines.append(f"  {name:<12} {secs:7.3f}   {secs / total:6.1%}"
+                         f"   {secs / wall:6.1%}")
+        lines.append(f"  {'(loop total)':<12} {total:7.3f}            "
+                     f"{total / wall:7.1%}")
+        return "\n".join(lines)
+
+
+def run_scenario(name: str, n_requests: int, seed: int, max_chips: int,
+                 phase_timers=None):
     trace, kw = build_trace(name, n_requests=n_requests, seed=seed)
     if "fleet" in kw:
         return simulate_fleet(trace, kw["fleet"](),
                               max_time=kw["max_time"], warm_start=1,
                               failures=kw.get("failures"),
-                              degradations=kw.get("degradations"))
+                              degradations=kw.get("degradations"),
+                              phase_timers=phase_timers)
     cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
     ctrl = ChironController(models=kw["models"]) if "models" in kw \
         else ChironController()
     return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
                            warm_start=2, failures=kw.get("failures"),
-                           degradations=kw.get("degradations"))
+                           degradations=kw.get("degradations"),
+                           phase_timers=phase_timers)
 
 
 def main() -> int:
@@ -67,16 +110,21 @@ def main() -> int:
                     choices=["tottime", "cumulative", "ncalls"])
     ap.add_argument("--plain", action="store_true",
                     help="no profiler: wall time + events/s only")
+    ap.add_argument("--phases", action="store_true",
+                    help="no profiler: per-phase wall-clock breakdown")
     args = ap.parse_args()
 
-    if args.plain:
+    if args.plain or args.phases:
+        timers = PhaseTimers() if args.phases else None
         t0 = time.perf_counter()
         res = run_scenario(args.scenario, args.n_requests, args.seed,
-                           args.max_chips)
+                           args.max_chips, phase_timers=timers)
         wall = time.perf_counter() - t0
         print(f"{args.scenario}: {wall:.3f}s wall, {res.n_events} events, "
               f"{res.n_events / wall:,.0f} events/s, "
               f"completion={res.completion_rate():.4f}")
+        if timers is not None:
+            print(timers.report(wall))
         return 0
 
     pr = cProfile.Profile()

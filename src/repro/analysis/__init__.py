@@ -12,10 +12,12 @@ machine-checks those invariants instead of remembering them:
   registries declared next to the data structures
   (:data:`repro.sim.ledger.LEDGER_MIRRORS`,
   :data:`repro.sim.cluster.PLANE_MIRRORS` /
-  :data:`~repro.sim.cluster.PLANE_CONTAINER_MIRRORS`) drive an AST walk
+  :data:`~repro.sim.cluster.PLANE_CONTAINER_MIRRORS`,
+  :data:`repro.serving.global_queue.QUEUE_MIRRORS`) drive an AST walk
   that flags any assignment to a mirrored attribute not paired — in the
   same function — with the corresponding ledger/plane column write or a
-  ``_sync_plane()`` / ``plane.alloc`` / ``plane.free`` call.
+  ``_sync_plane()`` / ``plane.alloc`` / ``plane.free`` call, and any
+  columnar-queue payload write not paired with its key-column writes.
 - **Determinism & heap-discipline lints** (``DET2xx``): unseeded global
   RNG, wall-clock reads outside ``benchmarks/``/``scripts/``, iteration
   over set expressions (address-dependent order) feeding decisions,
@@ -27,9 +29,9 @@ machine-checks those invariants instead of remembering them:
   ``requirements-dev.txt`` (the gate runs both when ruff is installed).
 - **Shadow-verify plane** (:mod:`repro.analysis.shadow`): at runtime,
   ``simulate_events(..., shadow_verify=True)`` (env
-  ``CHIRON_SHADOW_VERIFY=1``) rebuilds the ledger/plane columns from the
-  objects at control ticks and completion sweeps and asserts exact
-  agreement — any sync bug the static pass can't see fails loudly.
+  ``CHIRON_SHADOW_VERIFY=1``) rebuilds the ledger/plane/queue columns
+  from the objects at control ticks and completion sweeps and asserts
+  exact agreement — any sync bug the static pass can't see fails loudly.
 
 Rule catalogue
 ==============
@@ -42,6 +44,10 @@ MIR101    ``Request`` mirrored-attribute write without the paired
 MIR102    ``SimInstance`` mirrored-scalar (or ``running`` container)
           write without a paired plane column write / ``_sync_plane()``
           / ``plane.alloc``/``free`` in the same function
+MIR103    columnar-queue payload write (``req_objs[i] = req``) without
+          paired writes to every key column (``seq``, ``arrival``,
+          ``deadline``, ``row``) in the same function (``None``
+          cell-clears exempt)
 DET201    unseeded global RNG: ``random.<fn>()`` or ``np.random.<fn>()``
           not going through ``default_rng``/``Generator``/``SeedSequence``
 DET202    wall-clock read (``time.time``/``monotonic``/``perf_counter``,

@@ -13,8 +13,13 @@ import re
 from typing import Iterable, Iterator, List, Optional, Sequence, Tuple
 
 from repro.analysis.findings import Finding, Suppressions
+from repro.serving.global_queue import QUEUE_KEY_COLUMNS
 from repro.sim.cluster import PLANE_CONTAINER_MIRRORS, PLANE_MIRRORS
 from repro.sim.ledger import LEDGER_MIRRORS
+
+# MIR103: the columnar queue's payload list — a subscript write to it
+# must refresh every key column in the same function
+_QUEUE_PAYLOAD = "req_objs"
 
 # DET201: construction of *seeded* generators is the sanctioned idiom
 _SEEDED_NP = frozenset({"default_rng", "Generator", "SeedSequence",
@@ -139,11 +144,17 @@ class _Collector:
 def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
     """MIR101/MIR102: every object write to a mirrored attribute must be
     paired, in the same function, with the corresponding column write or
-    a sync call (``_sync_plane`` / ``plane.alloc`` / ``plane.free``)."""
+    a sync call (``_sync_plane`` / ``plane.alloc`` / ``plane.free``).
+    MIR103: every queue payload write (``req_objs[i] = req``) must be
+    paired, in the same function, with writes to every key column in
+    :data:`repro.serving.global_queue.QUEUE_KEY_COLUMNS` (``None``
+    assignments clear a freed cell and are exempt — the key cells behind
+    the cursor are dead)."""
     for fn in _functions(tree):
         if fn.name in _INIT_FUNCS:
             continue
         obj_writes: List[Tuple[str, str, str, int]] = []
+        payload_writes: List[int] = []
         mirror_cols = set()
         plane_synced = False
 
@@ -173,6 +184,12 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
                         container_write(base, tgt.lineno)
                     else:
                         mirror_cols.add(base)
+                        if base == _QUEUE_PAYLOAD \
+                                and not (isinstance(node, ast.Assign)
+                                         and isinstance(node.value,
+                                                        ast.Constant)
+                                         and node.value.value is None):
+                            payload_writes.append(tgt.lineno)
             if isinstance(node, ast.Delete):
                 for tgt in node.targets:
                     if isinstance(tgt, ast.Subscript) \
@@ -195,6 +212,16 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
                         and isinstance(f.value, ast.Attribute) \
                         and f.value.attr in PLANE_CONTAINER_MIRRORS:
                     container_write(f.value.attr, node.lineno)
+
+        missing = [c for c in QUEUE_KEY_COLUMNS if c not in mirror_cols]
+        if missing:
+            for lineno in payload_writes:
+                out.emit("MIR103", lineno,
+                         "queue payload write without the paired key-"
+                         f"column write(s) {', '.join(missing)} in "
+                         f"`{fn.name}` (suppress with "
+                         "`# mirror-sync: ok(<reason>)` if the columns "
+                         "are settled elsewhere)", fn_line=fn.lineno)
 
         for attr, col, rule, lineno in obj_writes:
             if col in mirror_cols:

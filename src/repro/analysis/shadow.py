@@ -38,8 +38,8 @@ def _fail(what: str, detail: str) -> None:
 class ShadowVerifier:
     """Rebuild-and-compare harness for the ledger and instance plane.
 
-    ``plane_checks`` / ``ledger_checks`` count completed verifications so
-    tests can assert the hooks actually ran.
+    ``plane_checks`` / ``ledger_checks`` / ``queue_checks`` count
+    completed verifications so tests can assert the hooks actually ran.
     """
 
     def __init__(self, ledger_interval: float = 30.0):
@@ -47,6 +47,7 @@ class ShadowVerifier:
         self._next_ledger = 0.0
         self.plane_checks = 0
         self.ledger_checks = 0
+        self.queue_checks = 0
 
     # ---------------------------------------------------- instance plane
     def verify_cluster(self, cluster) -> None:
@@ -87,6 +88,38 @@ class ShadowVerifier:
                       f"{float(pl.next_vfin[s])!r}) "
                       f"cleaned=({np_!r}, {nv!r})")
         self.plane_checks += 1
+
+    # ------------------------------------------------------------ queue
+    def verify_queue(self, queue) -> None:
+        """Key columns vs payload ``Request`` objects for every live lane
+        window of a columnar :class:`~repro.serving.global_queue.
+        GlobalQueue` (``QUEUE_MIRRORS``), plus the maintained
+        interactive/batch counters against a recount. No-ops on the
+        object-queue reference flavour (nothing columnar to shadow)."""
+        if not getattr(queue, "columnar", False):
+            return
+        from repro.serving.global_queue import QUEUE_MIRRORS
+        mirrors = sorted(QUEUE_MIRRORS.items())
+        for kind, model, lane in queue.audit_lanes():
+            for i in range(lane.head, lane.tail):
+                req = lane.req_objs[i]
+                where = f"{kind} lane {model!r} index {i}"
+                if req is None:
+                    _fail("queue payload cell empty",
+                          f"{where}: live window holds None")
+                for attr, col in mirrors:
+                    got = float(getattr(lane, col)[i])
+                    want = float(getattr(req, attr))
+                    if got != want:
+                        _fail(f"queue column `{col}` out of sync",
+                              f"{where}: column={got!r} "
+                              f"request.{attr}={want!r}")
+        n_i, n_b = queue.audit_counts()
+        if n_i != queue._icount or n_b != queue._bcount:
+            _fail("queue counters out of sync",
+                  f"recount=({n_i}, {n_b}) "
+                  f"counters=({queue._icount}, {queue._bcount})")
+        self.queue_checks += 1
 
     # ----------------------------------------------------------- ledger
     def verify_ledger(self, ledger, requests: List) -> None:

@@ -14,21 +14,52 @@ from dataclasses import dataclass, field
 
 @dataclass
 class OutputLengthModel:
-    """Online mean/std of completed-request output lengths."""
-    mu: float = 256.0               # prior before any observations
-    sigma: float = 128.0
+    """Online mean/std of completed-request output lengths.
+
+    ``observe`` runs once per completion on the event core's hot path, so
+    it only accumulates the moment sums; ``mu``/``sigma`` refresh lazily
+    on read (control ticks). The values are bit-identical to eager
+    recomputation — both reduce to the same ``_sum/_n`` arithmetic at the
+    same observation count."""
     _n: int = 0
     _sum: float = 0.0
     _sumsq: float = 0.0
+    _mu: float = 256.0              # prior before any observations
+    _sigma: float = 128.0
+    _stale: bool = False
 
     def observe(self, output_len: int) -> None:
         self._n += 1
         self._sum += output_len
         self._sumsq += output_len * output_len
+        self._stale = True
+
+    def _refresh(self) -> None:
+        self._stale = False
         if self._n >= 2:
-            self.mu = self._sum / self._n
-            var = max(self._sumsq / self._n - self.mu ** 2, 1.0)
-            self.sigma = math.sqrt(var)
+            self._mu = self._sum / self._n
+            var = max(self._sumsq / self._n - self._mu ** 2, 1.0)
+            self._sigma = math.sqrt(var)
+
+    @property
+    def mu(self) -> float:
+        if self._stale:
+            self._refresh()
+        return self._mu
+
+    @mu.setter
+    def mu(self, value: float) -> None:
+        self._mu = value
+
+    @property
+    def sigma(self) -> float:
+        if self._stale:
+            self._refresh()
+        return self._sigma
+
+    @sigma.setter
+    def sigma(self, value: float) -> None:
+        self._sigma = value
 
     @property
     def n_observed(self) -> int:

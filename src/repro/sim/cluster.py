@@ -61,6 +61,8 @@ from repro.sim.perf_model import STEP_OVERHEAD, PerfModel
 _inst_counter = itertools.count()
 
 _INF = float("inf")
+_heappush = heapq.heappush           # hot-path aliases: skip the module
+_heappop = heapq.heappop             # attribute load per heap operation
 
 
 def _by_id(inst) -> int:
@@ -129,6 +131,9 @@ class SimSeq:
     @property
     def done(self) -> bool:
         return self.request.tokens_generated >= self.request.output_len
+
+
+_new_seq = SimSeq.__new__               # hot-path constructor bypass
 
 
 class InstancePlane:
@@ -368,6 +373,11 @@ class SimInstance:
         self._c_flops = perf._flops_per_s
         self._c_pc = perf.prefix_caching
         self._c_hit = perf.prefix_hit_tokens
+        # packed copy for the hottest callers (advance/admit): one
+        # attribute load + tuple unpack instead of nine attribute loads
+        self._c_itl = (self._c_mem_base, self._c_mem_kv, self._c_comp,
+                       self._c_coll, self._c_spec, self._c_spec_over,
+                       self._c_spec_speed, self._c_cap, self._c_prefix)
 
     # ------------------------------------------------------------ state
     def activate_if_ready(self, now: float) -> None:
@@ -422,7 +432,8 @@ class SimInstance:
         floats) times the degradation ``slow_factor``."""
         mem_t = self._c_mem_base + b * ctx * self._c_mem_kv
         comp_t = b * self._c_comp
-        t = max(mem_t, comp_t) + self._c_coll + STEP_OVERHEAD
+        t = (mem_t if mem_t >= comp_t else comp_t) \
+            + self._c_coll + STEP_OVERHEAD
         if self._c_spec:
             t = t * (1 + self._c_spec_over * math.sqrt(b)) \
                 / self._c_spec_speed
@@ -459,10 +470,19 @@ class SimInstance:
         ratio needs no second perf evaluation. Idle instances update too
         (a health probe): routing refuses suspected instances, so without
         this a drained victim could never clear its flag after recovery
-        and would strand healthy capacity forever."""
+        and would strand healthy capacity forever.
+
+        A flip of the *suspected* flag bumps the cluster route version:
+        routing reads health only through that flag, and the positive
+        scan memo (``_scan_admit`` reuse across arrivals) relies on the
+        version capturing every routing-visible change."""
         if not self.active:
             return
+        was = self.health_ewma > SLOW_SUSPECT_RATIO
         self.health_ewma += alpha * (self.slow_factor - self.health_ewma)
+        if (self.health_ewma > SLOW_SUSPECT_RATIO) != was \
+                and self._cluster is not None:
+            self._cluster.route_version += 1
 
     @property
     def suspected_slow(self) -> bool:
@@ -500,14 +520,27 @@ class SimInstance:
             # inlined PerfModel.prefill_time (identical grouping/floats)
             eff = req.prompt_len
             if self._c_pc:
-                eff = max(eff - self._c_hit, 16)
+                eff = eff - self._c_hit
+                if eff < 16:
+                    eff = 16
             prefill = self._c_2na * eff / self._c_flops + STEP_OVERHEAD
         req.state = RequestState.RUNNING
         c = self._cluster
         led = c.ledger if c is not None else None
         if led is not None and req.row >= 0:
             led.state[req.row] = _ledger.RUNNING
-        s = SimSeq(req, ctx, prefill, gen_f=float(req.tokens_generated))
+        # slotted SimSeq built without the constructor call (hot: once
+        # per admission) — field-for-field what __init__ would set
+        s = _new_seq(SimSeq)
+        s.request = req
+        s.ctx_tokens = ctx
+        s.prefill_left = prefill
+        s.gen_f = float(req.tokens_generated)
+        s.decoding = False
+        s.prefill_done_t = 0.0
+        s.v0 = 0.0
+        s.gen_base = 0.0
+        s.ctx_base = 0.0
         self.running[req.req_id] = s
         if c is not None:
             c.total_running += 1
@@ -521,8 +554,8 @@ class SimInstance:
         if self.event_mode:
             if prefill > 0:
                 s.prefill_done_t = now + prefill
-                heapq.heappush(self._prefill_heap, (s.prefill_done_t,
-                                                    req.req_id))
+                _heappush(self._prefill_heap, (s.prefill_done_t,
+                                               req.req_id))
                 self._kv_prefill += ctx
             else:
                 self._enter_decode(s, self.vclock)
@@ -530,8 +563,77 @@ class SimInstance:
                     req.first_token_time = now
                     if led is not None and req.row >= 0:
                         led.first_token_time[req.row] = now
-            self.mark_dirty()
-            self._sync_plane()
+            if c is not None:                # inline mark_dirty
+                c.dirty.add(self)
+                c.route_version += 1
+            # inline _sync_plane's early-out (hot: once per admit)
+            if self.slot >= 0 and c is not None and c.plane_live:
+                self._sync_plane()
+            else:
+                self._eta_stamp = -1
+            if c is not None:
+                # cache the post-admit completion ETA while the
+                # composition is hot: the sweep's ``sweep_etas`` sees a
+                # fresh stamp and skips its ``next_event_in`` recompute
+                # (identical value — active with a non-empty batch, so
+                # the guard it adds over ``_compute_eta`` is vacuous).
+                # The composition ITL is inlined when it will be used
+                # (same expression grouping as ``mean_ctx``/``_itl_now``
+                # inside ``_compute_eta`` — identical floats).
+                if self._n_dec and c.quantize == 0.0:
+                    n2 = len(self.running)
+                    ctx2 = (self._kv_prefill + self._kv_dec_base
+                            + self._n_dec * self.vclock) / n2
+                    if ctx2 < 1.0:
+                        ctx2 = 1.0
+                    (c_mem_base, c_mem_kv, c_comp, c_coll, c_spec,
+                     c_spec_over, c_spec_speed, cap, c_prefix) = \
+                        self._c_itl
+                    mem_t = c_mem_base + n2 * ctx2 * c_mem_kv
+                    comp_t = n2 * c_comp
+                    itl = (mem_t if mem_t >= comp_t else comp_t) \
+                        + c_coll + STEP_OVERHEAD
+                    if c_spec:
+                        itl = itl * (1 + c_spec_over
+                                     * math.sqrt(n2)) / c_spec_speed
+                    if cap != _INF:
+                        demand = n2 * (ctx2 + c_prefix)
+                        if demand > cap:
+                            over = demand / cap - 1.0
+                            itl *= 1.0 + 4.0 * over + 8.0 * over * over
+                    itl *= self.slow_factor
+                    running = self.running
+                    best = _INF
+                    ph = self._prefill_heap
+                    while ph:
+                        t_done, rid = ph[0]
+                        s2 = running.get(rid)
+                        if s2 is None or s2.decoding \
+                                or s2.prefill_done_t != t_done:
+                            _heappop(ph)
+                            continue
+                        best = t_done - self.last_advance
+                        break
+                    dh = self._decode_heap
+                    while dh:
+                        vfin, rid = dh[0]
+                        s2 = running.get(rid)
+                        if s2 is None or not s2.decoding:
+                            _heappop(dh)
+                            continue
+                        d = (s2.request.output_len - s2.gen_base) - vfin
+                        if d > 1e-6 or d < -1e-6:
+                            _heappop(dh)
+                            continue
+                        eta = (vfin - self.vclock) * itl
+                        if eta < 1e11 and eta < best:
+                            best = eta
+                        break
+                    grain = c.completion_grain
+                    self._eta_val = best if best >= grain else grain
+                else:
+                    self._eta_val = self._compute_eta()
+                self._eta_stamp = c.batch_seq
         else:
             self._kv_tokens += ctx
 
@@ -571,7 +673,7 @@ class SimInstance:
         self._kv_dec_base += s.ctx_base
         self._n_dec += 1
         vfin = float(s.request.output_len) - s.gen_base
-        heapq.heappush(self._decode_heap, (vfin, s.request.req_id))
+        _heappush(self._decode_heap, (vfin, s.request.req_id))
 
     def _materialize(self, s: SimSeq) -> None:
         """Sync a decoding seq's lazy counters from the virtual clock."""
@@ -721,16 +823,16 @@ class SimInstance:
                + self._n_dec * v_old) / n
         if ctx < 1.0:
             ctx = 1.0
-        mem_t = self._c_mem_base + n * ctx * self._c_mem_kv
-        comp_t = n * self._c_comp
+        (c_mem_base, c_mem_kv, c_comp, c_coll, c_spec,
+         c_spec_over, c_spec_speed, cap, c_prefix) = self._c_itl
+        mem_t = c_mem_base + n * ctx * c_mem_kv
+        comp_t = n * c_comp
         itl = (mem_t if mem_t >= comp_t else comp_t) \
-            + self._c_coll + STEP_OVERHEAD
-        if self._c_spec:
-            itl = itl * (1 + self._c_spec_over * math.sqrt(n)) \
-                / self._c_spec_speed
-        cap = self._c_cap
+            + c_coll + STEP_OVERHEAD
+        if c_spec:
+            itl = itl * (1 + c_spec_over * math.sqrt(n)) / c_spec_speed
         if cap != _INF:
-            demand = n * (ctx + self._c_prefix)
+            demand = n * (ctx + c_prefix)
             if demand > cap:
                 over = demand / cap - 1.0
                 itl *= 1.0 + 4.0 * over + 8.0 * over * over
@@ -748,9 +850,11 @@ class SimInstance:
         # 1. prefill completions due within (t0, now]: seq starts decoding
         #    mid-interval with vclock credit from its entry point
         ph = self._prefill_heap
+        dh = self._decode_heap
         entry_debt = 0.0
-        while ph and ph[0][0] <= now + 1e-12:
-            t_done, rid = heapq.heappop(ph)
+        lim = now + 1e-12
+        while ph and ph[0][0] <= lim:
+            t_done, rid = _heappop(ph)
             s = running.get(rid)
             if s is None or s.decoding or s.prefill_done_t != t_done:
                 continue                     # stale (departed/re-admitted)
@@ -764,9 +868,17 @@ class SimInstance:
                 s.gen_f += 1.0
                 s.ctx_tokens += 1.0
                 toks += 1.0
-            v_entry = v_old + max(t_done - t0, 0.0) / itl
+            dpre = t_done - t0               # inline max(dpre, 0.0)
+            v_entry = v_old + (dpre if dpre > 0.0 else 0.0) / itl
             entry_debt += v_entry - v_old
-            self._enter_decode(s, v_entry)
+            # inline _enter_decode (hottest transition in the event core)
+            s.decoding = True
+            s.v0 = v_entry
+            s.gen_base = gb = s.gen_f - v_entry
+            s.ctx_base = cb = s.ctx_tokens - v_entry
+            self._kv_dec_base += cb
+            self._n_dec += 1
+            _heappush(dh, (float(r.output_len) - gb, rid))
 
         # 2. the decode pool advances as one fluid
         if self._n_dec:
@@ -774,30 +886,54 @@ class SimInstance:
             toks += self._n_dec * (dt / itl) - entry_debt
 
             # 3. finishes: pop virtual finish times the clock crossed
-            dh = self._decode_heap
             vclock = self.vclock
-            while dh and dh[0][0] <= vclock + 1e-9:
-                vfin, rid = heapq.heappop(dh)
+            vlim = vclock + 1e-9
+            sc = self._slo_counts
+            while dh and dh[0][0] <= vlim:
+                vfin, rid = _heappop(dh)
                 s = running.get(rid)
-                if s is None or not s.decoding or abs(
-                        (s.request.output_len - s.gen_base) - vfin) > 1e-6:
+                if s is None or not s.decoding:
                     continue                 # stale entry
+                d = (s.request.output_len - s.gen_base) - vfin
+                if d > 1e-6 or d < -1e-6:    # manual abs: hot stale check
+                    continue
                 over_v = vclock - vfin       # tokens past the true finish
                 toks -= over_v
                 s.ctx_tokens = s.ctx_base + vfin
-                s.gen_f = float(s.request.output_len)
                 r = s.request
-                self._remove_seq(s)
+                s.gen_f = float(r.output_len)
+                # inline _remove_seq, specialized: event_mode decoding seq
+                del running[rid]
+                if cluster is not None:
+                    cluster.total_running -= 1
+                k = r.slo.itl
+                cnt = sc.get(k, 0) - 1
+                if cnt > 0:
+                    sc[k] = cnt
+                else:
+                    sc.pop(k, None)
+                if r.request_type == RequestType.INTERACTIVE:
+                    self._n_interactive -= 1
+                s.decoding = False
+                self._kv_dec_base -= s.ctx_base
+                self._n_dec -= 1
+                if not running:    # reset float drift at emptiness
+                    self._kv_tokens = 0.0
+                    self._kv_prefill = 0.0
+                    self._kv_dec_base = 0.0
+                    self._n_interactive = 0
                 r.tokens_generated = r.output_len
                 r.state = RequestState.FINISHED
                 ft = now - over_v * itl
-                if r.first_token_time is None:   # sub-itl output edge case
-                    r.first_token_time = ft
-                r.finish_time = max(ft, r.first_token_time)
+                first = r.first_token_time
+                if first is None:            # sub-itl output edge case
+                    first = r.first_token_time = ft
+                r.finish_time = ft if ft >= first else first
                 # one lifetime-mean ITL sample (the event core records the
                 # mean the SLO check reads, not per-tick samples)
-                span = r.finish_time - r.first_token_time
-                mean = span / max(float(r.output_len) - 1.0, 1.0)
+                span = r.finish_time - first
+                den = float(r.output_len) - 1.0
+                mean = span / (den if den > 1.0 else 1.0)
                 r.itl_samples.append(mean)
                 if led is not None and r.row >= 0:
                     row = r.row
@@ -817,14 +953,57 @@ class SimInstance:
             and q == 0.0
         if do_eta:
             # post-pop composition ITL, computed once and shared with the
-            # eta (exactly what next_event_in would recompute)
+            # eta (exactly what next_event_in would recompute); _itl_now
+            # and _compute_eta are inlined — identical float sequences
             n2 = len(running)
             ctx2 = (self._kv_prefill + self._kv_dec_base
                     + self._n_dec * self.vclock) / n2
             if ctx2 < 1.0:
                 ctx2 = 1.0
-            eta = self._compute_eta(self._itl_now(n2, ctx2))
-        self._sync_plane()
+            mem_t = c_mem_base + n2 * ctx2 * c_mem_kv
+            comp_t = n2 * c_comp
+            itl2 = (mem_t if mem_t >= comp_t else comp_t) \
+                + c_coll + STEP_OVERHEAD
+            if c_spec:
+                itl2 = itl2 * (1 + c_spec_over * math.sqrt(n2)) \
+                    / c_spec_speed
+            if cap != _INF:
+                demand = n2 * (ctx2 + c_prefix)
+                if demand > cap:
+                    over = demand / cap - 1.0
+                    itl2 *= 1.0 + 4.0 * over + 8.0 * over * over
+            itl2 *= self.slow_factor
+            best = _INF
+            while ph:
+                t_done, rid = ph[0]
+                s = running.get(rid)
+                if s is None or s.decoding or s.prefill_done_t != t_done:
+                    _heappop(ph)
+                    continue
+                best = t_done - self.last_advance
+                break
+            while dh:
+                vfin, rid = dh[0]
+                s = running.get(rid)
+                if s is None or not s.decoding:
+                    _heappop(dh)
+                    continue
+                d = (s.request.output_len - s.gen_base) - vfin
+                if d > 1e-6 or d < -1e-6:    # manual abs: hot stale check
+                    _heappop(dh)
+                    continue
+                eta = (vfin - self.vclock) * itl2
+                if eta < 1e11 and eta < best:  # stalled seqs: no event
+                    best = eta
+                break
+            grain = cluster.completion_grain
+            eta = best if best >= grain else grain
+        # inline _sync_plane's early-out: below the vectorized cut-over
+        # only the ETA stamp matters, and the call itself is hot
+        if self.slot >= 0 and cluster is not None and cluster.plane_live:
+            self._sync_plane()
+        else:
+            self._eta_stamp = -1
         if do_eta:
             self._eta_val = eta
             self._eta_stamp = cluster.batch_seq
@@ -842,7 +1021,7 @@ class SimInstance:
             t_done, rid = ph[0]
             s = running.get(rid)
             if s is None or s.decoding or s.prefill_done_t != t_done:
-                heapq.heappop(ph)
+                _heappop(ph)
                 continue
             best = t_done - self.last_advance
             break
@@ -852,7 +1031,7 @@ class SimInstance:
             s = running.get(rid)
             if s is None or not s.decoding or abs(
                     (s.request.output_len - s.gen_base) - vfin) > 1e-6:
-                heapq.heappop(dh)
+                _heappop(dh)
                 continue
             if itl is None:
                 itl = self._itl_now(len(running), max(self.mean_ctx(), 1.0))
@@ -862,11 +1041,11 @@ class SimInstance:
                     per_tick = int(q / itl + 1e-9)
                     itl = q / per_tick if per_tick > 0 else _STALLED_ITL
             eta = (vfin - self.vclock) * itl
-            if eta < 1e11:               # stalled seqs schedule nothing
-                best = min(best, eta)
+            if eta < 1e11 and eta < best:  # stalled seqs schedule nothing
+                best = eta
             break
         grain = self._cluster.completion_grain if self._cluster else 1e-3
-        return max(best, grain)
+        return best if best >= grain else grain
 
     def next_event_in(self) -> float:
         """Seconds until this instance's next intrinsic event (a prefill
@@ -930,7 +1109,12 @@ class SimInstance:
                          itl_slo=self.min_itl_slo(),
                          n_active=self.n_running,
                          batch_size=self.local.max_batch_size)
+        before = self.local.max_batch_size
         self.local.update(m)
+        if self.local.max_batch_size != before and self._cluster is not None:
+            # a ceiling move changes admission capacity — routing memos
+            # (saturation and positive-scan) key off route_version
+            self._cluster.route_version += 1
 
 
 class SimCluster:
@@ -1241,6 +1425,71 @@ class SimCluster:
         if inst._eta_stamp == batch_seq:
             return inst._eta_val
         return -1.0
+
+    def sweep_etas(self, insts: List[SimInstance],
+                   batch_seq: int) -> List[Tuple[SimInstance, float]]:
+        """Completion ETAs for a sweep's dirty instances in one pass —
+        the event loops' bulk-refill source (they stamp epochs and
+        extend the heap from the returned pairs instead of re-pushing
+        one estimate per instance).
+
+        Instances whose ETA the vectorized catch-up already cached this
+        event batch reuse it; the rest are recomputed — one vectorized
+        pass over the plane columns when the plane is live (the
+        coefficient math is ``InstancePlane._itl`` and the heads are the
+        plane's *cleaned* mirrors, so the float sequence matches
+        ``next_event_in`` exactly), the scalar path otherwise. Returns
+        ``(instance, eta)`` pairs in input order, finite ETAs only."""
+        if len(insts) < 8 or not self.plane_live or self.quantize != 0.0:
+            # fused single pass — dirty sets are typically 1-2 deep and
+            # the two-comprehension shape below costs more than the work
+            out = []
+            active = InstanceState.ACTIVE
+            for inst in insts:
+                if inst.state != active:
+                    continue
+                if inst._eta_stamp != batch_seq:
+                    inst._eta_val = inst.next_event_in()
+                    inst._eta_stamp = batch_seq
+                e = inst._eta_val
+                if e != _INF:
+                    out.append((inst, e))
+            return out
+        stale = [i for i in insts
+                 if i._eta_stamp != batch_seq
+                 and i.state == InstanceState.ACTIVE]
+        if stale:
+            if len(stale) >= 8:
+                pl = self.plane
+                slots = np.fromiter((i.slot for i in stale),
+                                    dtype=np.int64, count=len(stale))
+                nr = pl.n_running[slots]
+                run = nr > 0
+                etas = np.full(len(stale), _INF)
+                if run.any():
+                    s = slots[run]
+                    b = nr[run]
+                    vc = pl.vclock[s]
+                    kv = pl.kv_prefill[s] + pl.kv_dec_base[s] \
+                        + pl.n_dec[s] * vc
+                    ctx = np.maximum(kv / b, 1.0)
+                    itl = pl._itl(s, b, ctx)
+                    dec = (pl.next_vfin[s] - vc) * itl
+                    dec = np.where(dec < 1e11, dec, _INF)  # stalled seqs
+                    eta = np.minimum(
+                        pl.next_prefill[s] - pl.last_advance[s], dec)
+                    np.maximum(eta, self.completion_grain, out=eta)
+                    etas[run] = eta
+                for inst, e in zip(stale, etas.tolist()):
+                    inst._eta_val = e
+                    inst._eta_stamp = batch_seq
+            else:
+                for inst in stale:
+                    inst._eta_val = inst.next_event_in()
+                    inst._eta_stamp = batch_seq
+        return [(i, i._eta_val) for i in insts
+                if i.state == InstanceState.ACTIVE
+                and i._eta_val != _INF and i._eta_stamp == batch_seq]
 
     def drain_dirty(self) -> List[SimInstance]:
         # deterministic order: set iteration is address-dependent, and this

@@ -16,7 +16,7 @@ seen in the arrival stream but not configured are registered on the fly.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -28,6 +28,8 @@ from repro.serving.global_queue import GlobalQueue
 from repro.serving.request import Request, RequestType
 from repro.sim.cluster import (SLOW_SUSPECT_RATIO, InstanceType, SimCluster,
                                SimInstance)
+
+_SCAN_INF = float("inf")
 
 
 def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
@@ -48,18 +50,28 @@ def _best_fit(insts: List[SimInstance]) -> Optional[SimInstance]:
 
 
 def _scan_admit(pool: List[SimInstance],
-                req: Request) -> Optional[SimInstance]:
+                req: Request) -> Tuple[Optional[SimInstance], float]:
     """One fused pass over a same-model pool: admission check (active,
     batch slot free, KV wall) and best-fit packing (max slot utilization,
     first max wins, suspected-slow instances only as a last resort) —
     semantically identical to ``_best_fit([i for i in pool if
     i.can_admit(req)])`` but without building candidate lists or paying a
-    method call per instance. This is the per-arrival routing hot path."""
+    method call per instance. This is the per-arrival routing hot path.
+
+    Returns ``(winner, rej_slack)`` where ``rej_slack`` is the largest
+    ``wall - kv`` over instances this scan rejected *by the KV wall*
+    (``-1.0`` when none were). The wall test is the only request-dependent
+    admission check — a later request with ``prompt_len > rej_slack`` is
+    provably rejected by every instance this scan rejected, which is what
+    lets the positive-scan memo in ``route_arrival_burst`` skip the
+    rescan without changing any decision."""
     best = None
     best_u = -1.0
     slow_best = None
     slow_u = -1.0
+    rej = -1.0
     pl = req.prompt_len
+    inf = _SCAN_INF
     for inst in pool:
         if not inst.active:
             continue
@@ -70,13 +82,16 @@ def _scan_admit(pool: List[SimInstance],
         if n >= mb:
             continue
         wall = inst._c_wall
-        if wall != float("inf"):
+        if wall != inf:
             if inst.event_mode:
                 kv = inst._kv_prefill + inst._kv_dec_base \
                     + inst._n_dec * inst.vclock
             else:
                 kv = inst._kv_tokens
             if kv + pl > wall:
+                s = wall - kv
+                if s > rej:
+                    rej = s
                 continue
         u = n / mb if mb >= 1 else float(n)
         if inst.health_ewma > SLOW_SUSPECT_RATIO:
@@ -84,7 +99,7 @@ def _scan_admit(pool: List[SimInstance],
                 slow_u, slow_best = u, inst
         elif u > best_u:
             best_u, best = u, inst
-    return best if best is not None else slow_best
+    return (best if best is not None else slow_best), rej
 
 
 class BaseController:
@@ -182,11 +197,11 @@ class BaseController:
         returned instance immediately."""
         inter, mixed = cluster.pool_pair(model)
         if inter:
-            inst = _scan_admit(inter, req)
+            inst, _ = _scan_admit(inter, req)
             if inst is not None:
                 return inst
         if mixed:
-            inst = _scan_admit(mixed, req)
+            inst, _ = _scan_admit(mixed, req)
             if inst is not None:
                 return inst
             # preempt a batch request on a same-model mixed instance (the
@@ -248,6 +263,126 @@ class BaseController:
             return False
         inst.admit(req, now)
         return True
+
+    def route_arrival_burst(self, cluster: SimCluster, queue: GlobalQueue,
+                            reqs: List[Request], now: float,
+                            observe=None) -> None:
+        """Cohort fast path: route a whole same-timestamp arrival burst
+        in one call — decision-identical to the per-request
+        ``observe_arrival`` + ``route_arrival``-or-push loop, with the
+        per-request overhead hoisted (one ``pool_pair`` lookup per
+        model run instead of per request, the memo dict resolved once).
+        Interactive requests place zero-queuing while their lanes stay
+        empty; everything else (and every request after the first
+        placement failure backs the lane up) enqueues normally.
+
+        The *positive-scan memo* removes the pool scan from the
+        steady-state path entirely. After an admit we remember
+        ``(route_version, winner, rej_slack)`` per model. On the next
+        same-model arrival, if the version is unchanged (every
+        routing-relevant mutation bumps it — admits, frees, provisioning,
+        activation, eviction, health flips, local ceiling moves) then the
+        only instance whose scan inputs moved is the winner itself, whose
+        utilization strictly *rose* — so it is still the first strict
+        maximum and a fresh scan would pick it again, provided (a) it
+        still passes the admission checks (revalidated here against the
+        exact scan predicate) and (b) the new prompt cannot un-reject an
+        instance the original scan rejected. Capacity/active rejections
+        are request-independent; only the KV-wall test depends on
+        ``prompt_len``, and ``prompt_len > rej_slack`` keeps every
+        wall-rejected instance rejected. Any check failing falls back to
+        the full scan, so decisions are bit-identical either way.
+
+        One subtlety: an admit is only a *pure insert* when its embedded
+        settle-advance popped no finishes — a settle pop drops the
+        winner's utilization, so it may no longer be the maximum even
+        though only its own state moved. The memo is therefore stored
+        only when ``len(running)`` grew by exactly one (the admit's net
+        effect was the insert); otherwise the next arrival rescans."""
+        try:
+            blocked = self._route_blocked
+        except AttributeError:
+            blocked = self._route_blocked = {}
+        try:
+            pick = self._route_pick
+        except AttributeError:
+            pick = self._route_pick = {}
+        pool_pair = cluster.pool_pair
+        push = queue.push
+        scan = _scan_admit
+        it = RequestType.INTERACTIVE
+        inf = _SCAN_INF
+        last_model = None
+        inter = mixed = None
+        for req in reqs:
+            if observe is not None:
+                observe(req, now)
+            if req.request_type != it or queue._icount:
+                push(req)
+                continue
+            model = req.model
+            v0 = cluster.route_version
+            pk = pick.get(model)
+            if pk is not None and pk[0] == v0 and req.prompt_len > pk[2]:
+                cand = pk[1]
+                if cand.active:
+                    loc = cand.local
+                    if len(cand.running) < (
+                            loc.max_batch_size if loc is not None
+                            else (cand.static_batch or 64)):
+                        wall = cand._c_wall
+                        if wall != inf:
+                            if cand.event_mode:
+                                kv = cand._kv_prefill + cand._kv_dec_base \
+                                    + cand._n_dec * cand.vclock
+                            else:
+                                kv = cand._kv_tokens
+                            ok = kv + req.prompt_len <= wall
+                        else:
+                            ok = True
+                        if ok:
+                            n0 = len(cand.running)
+                            cand.admit(req, now)
+                            if len(cand.running) == n0 + 1:
+                                pick[model] = (cluster.route_version,
+                                               cand, pk[2])
+                            continue
+            # pools resolved only on memo miss — a hit never touches them
+            if model != last_model:
+                inter, mixed = pool_pair(model)
+                last_model = model
+            rej = -1.0
+            inst = None
+            if inter:
+                inst, rej = scan(inter, req)
+            if inst is None and mixed:
+                inst, r2 = scan(mixed, req)
+                if r2 > rej:
+                    rej = r2
+                if inst is None:
+                    # preempt batch work on a same-model mixed instance
+                    # (same order and guards as _find_slot)
+                    for cand in mixed:
+                        if not cand.active or len(cand.running) \
+                                - cand._n_interactive == 0:
+                            continue
+                        victim = cand.evict_one_batch(now)
+                        if victim is not None:
+                            queue.requeue(victim)
+                            inst = cand
+                            break
+            if inst is None:
+                # saturated: leave the memo exactly as route_arrival would
+                if cluster.route_version == v0:
+                    blocked[model] = (v0, -1, req)
+                else:
+                    blocked[model] = (-1, cluster.batch_seq, req)
+                push(req)
+            else:
+                n0 = len(inst.running)
+                inst.admit(req, now)
+                if len(inst.running) == n0 + 1:
+                    pick[model] = (cluster.route_version, inst, rej)
 
     def backfill(self, insts, queue: GlobalQueue, now: float) -> None:
         """Fill spare capacity on ``insts`` from their models' batch lanes.
@@ -419,7 +554,8 @@ class ChironController(BaseController):
         if m not in self.interactive_scalers:   # inline _ensure_model
             self.model_list.append(m)
             self._register_model(m)
-        if self.auto_theta and req.is_interactive:
+        if self.auto_theta \
+                and req.request_type == RequestType.INTERACTIVE:
             self._arrivals[m].append(now)
 
     def _refresh_theta(self, now: float) -> None:
@@ -554,12 +690,17 @@ class ChironController(BaseController):
     def observe_completion(self, req: Request) -> None:
         # per-model output-length fit: each model's QLM estimator only
         # sees its own completions (output models cached flat — this runs
-        # once per finished request)
+        # once per finished request, so ``OutputLengthModel.observe`` is
+        # inlined: same moment-sum arithmetic, one call fewer)
         om = self._out_models.get(req.model)
         if om is None:
             om = self._out_models[req.model] = \
                 self._estimator_for(req.model).output_model
-        om.observe(req.output_len)
+        o = req.output_len
+        om._n += 1
+        om._sum += o
+        om._sumsq += o * o
+        om._stale = True
 
 
 @dataclass

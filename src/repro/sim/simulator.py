@@ -44,6 +44,8 @@ engine (event-driven by default).
 """
 from __future__ import annotations
 
+import functools
+import gc
 import heapq
 import itertools
 import math
@@ -52,7 +54,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.serving.global_queue import GlobalQueue
+from repro.serving.global_queue import (GlobalQueue, ReferenceGlobalQueue,
+                                        make_queue)
 from repro.serving.request import Request
 from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
@@ -70,6 +73,27 @@ _READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM = range(7)
 _INF = float("inf")
 
 RequestSource = Union[Sequence[Request], Trace, TraceStream]
+
+
+def _gc_paused(fn):
+    """Run ``fn`` with the cyclic garbage collector paused (restored on
+    exit). The event core's churn — event tuples, SimSeqs, per-request
+    dicts — is entirely reference-counted; the only cycles are the
+    handful of long-lived instance/cluster backrefs. Leaving the
+    generational collector armed makes it sweep a multi-million-object
+    heap thousands of times per 1M-request run for nothing (~8% of
+    wall). No-op when the caller already disabled collection."""
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        was_enabled = gc.isenabled()
+        if was_enabled:
+            gc.disable()
+        try:
+            return fn(*args, **kwargs)
+        finally:
+            if was_enabled:
+                gc.enable()
+    return wrapper
 
 
 @dataclass
@@ -123,6 +147,11 @@ class _RequestCursor:
         if isinstance(source, Trace):
             self._trace = source.sorted_by_arrival()
             self._times = self._trace.arrival
+            # plain-float shadow of the arrival column: the per-event
+            # peek (`times[j] <= limit`, and the returned next-arrival)
+            # costs a C-double compare instead of a NumPy scalar
+            # box/unbox round-trip on every single arrival
+            self._times_l = self._times.tolist()
             self.n = self._trace.n
             self.all: List[Request] = []
             self.ledger = RequestLedger.from_trace(self._trace)
@@ -159,7 +188,7 @@ class _RequestCursor:
         if self.exhausted:
             return _INF
         if self._trace is not None:
-            return float(self._times[self._i])
+            return self._times_l[self._i]
         return self.all[self._i].arrival_time
 
     def pop(self) -> Request:
@@ -184,10 +213,40 @@ class _RequestCursor:
             req = all_[i]
             i += 1
             self._i = i
-            return req, (float(self._times[i]) if i < self.n else _INF)
+            return req, (self._times_l[i] if i < self.n else _INF)
         req = all_[i]
         self._i = i + 1
         return req, self.peek_time()
+
+    def pop_until(self, limit: float):
+        """``(cohort, next_time)``: every request with
+        ``arrival_time <= limit`` — the exact set the per-arrival loop
+        would pop — as one cohort, plus the arrival time of the first
+        request *past* the cohort (``inf`` at EOF), fused so the hot loop
+        pays one call. Trace mode checks the next arrival scalar first
+        (cohorts of one dominate sparse traces) and only falls back to a
+        ``searchsorted`` over the arrival column for true bursts, then
+        materializes the whole cohort in one slice (the NumPy-batched
+        arrival path); list/stream modes fall back to the scalar walk."""
+        i = self._i
+        if self._trace is not None:
+            times = self._times_l
+            n = self.n
+            j = i + 1
+            if j < n and times[j] <= limit:
+                j = int(self._times.searchsorted(limit, side="right"))
+            all_ = self.all
+            if j > len(all_):
+                lo = len(all_)
+                all_.extend(self._trace.materialize(
+                    lo, max(j, lo + self._chunk), row0=lo))
+            self._i = j
+            return all_[i:j], (times[j] if j < n else _INF)
+        out = []
+        while not self.exhausted and self.all[self._i].arrival_time <= limit:
+            out.append(self.all[self._i])
+            self._i += 1
+        return out, self.peek_time()
 
     def all_requests(self) -> List[Request]:
         """Every request (materializing any unserved tail) for RunResult."""
@@ -216,6 +275,7 @@ def _warm_start(controller, cluster: SimCluster, t: float, n: int) -> None:
             inst.activate_if_ready(t)
 
 
+@_gc_paused
 def simulate_events(requests: RequestSource, controller: BaseController,
                     cluster: SimCluster, *, control_interval: float = 1.0,
                     max_time: float = 7200.0, warm_start: int = 0,
@@ -225,7 +285,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     failures: Optional[FailurePlan] = None,
                     degradations: Optional[DegradationPlan] = None,
                     reference: bool = False,
-                    shadow_verify=None) -> RunResult:
+                    shadow_verify=None,
+                    phase_timers=None) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
     non-empty ticks yet batches arrivals/completions exactly like a
@@ -241,10 +302,15 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     :class:`repro.analysis.shadow.ShadowVerifier` (or any truthy value,
     or set ``CHIRON_SHADOW_VERIFY=1``) to rebuild the ledger/plane
     columns from the objects at control ticks and completion sweeps and
-    assert exact agreement. Raises ``ShadowVerifyError`` on desync."""
+    assert exact agreement. Raises ``ShadowVerifyError`` on desync.
+
+    ``phase_timers`` (``scripts/profile_sim.py --phases``) is an injected
+    accumulator with ``clock()``/``lap(name, t0)`` — the loop brackets
+    its six numbered phases with it; ``None`` (the default) costs one
+    predicted branch per phase."""
     from repro.analysis.shadow import resolve as _shadow_resolve
     shadow = _shadow_resolve(shadow_verify)
-    queue = GlobalQueue()
+    queue = make_queue(reference)
     cursor = _RequestCursor(requests)
     t = 0.0
     cluster.event_mode = True
@@ -269,6 +335,18 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     n_events = 0
     batch_seq = 0                    # event-batch stamp (ETA-cache key)
     eps = 1e-12
+    # One-slot completion staging: the single-dirty sweep (one admit or
+    # one completion per event, the steady-state shape) parks its fresh
+    # estimate here instead of heap-pushing it. When the *same* instance
+    # sweeps again before the estimate fires, the epoch bump that
+    # schedules the replacement has already made the staged tuple stale —
+    # it is overwritten in place, saving both the push and the later
+    # stale pop. A staged event otherwise behaves exactly like the heap
+    # head: it joins the t_next min, disarms the arrival fast path at its
+    # timestamp, and is heap-pushed (firing in exact tuple order) the
+    # moment it comes due or a different instance sweeps.
+    pend = None
+    use_pend = quantize == 0         # sparse fixed-tick keeps plain pushes
 
     # hot-path locals (attribute lookups hoisted out of the loop)
     observe_arrival = getattr(controller, "observe_arrival", None)
@@ -276,13 +354,25 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     route_interactive = getattr(controller, "route_interactive", None)
     route_arrival = getattr(controller, "route_arrival", None) \
         if quantize == 0 and not reference else None
+    route_burst = getattr(controller, "route_arrival_burst", None) \
+        if route_arrival is not None else None
     use_memo = not reference
     if reference:
         cluster.vec_min = 1 << 30        # scalar catch-up only
     queue_push = queue.push
-    cursor_pop_next = cursor.pop_next
     heappush = heapq.heappush
     heappop = heapq.heappop
+    heapify = heapq.heapify
+    pop_until = cursor.pop_until
+    ACTIVE = InstanceState.ACTIVE
+    cdirty = cluster.dirty               # stable set object, never rebound
+    timers = phase_timers
+    timing = timers is not None
+    # steady-state arrival micro-loop eligibility (see loop tail): only
+    # the plain event mode qualifies — shadow audits, phase timing, and
+    # sparse fixed-tick all need the full per-phase scan
+    inner_on = (route_burst is not None and route_interactive is not None
+                and shadow is None and not timing and quantize == 0)
 
     fail_rng = None
     if failures is not None:
@@ -307,15 +397,47 @@ def simulate_events(requests: RequestSource, controller: BaseController,
 
     t_arr = cursor.peek_time()
 
+    predrain = quantize == 0
+
     while True:
         # ---- termination: all requests arrived, none queued or running
         if t_arr == _INF and cluster.total_running == 0 and len(queue) == 0:
             break
 
+        # ---- stale completion estimates (superseded by a newer epoch, or
+        # on a retired instance) that land strictly before every other
+        # event source would each burn a full loop iteration doing
+        # provably nothing: no state change, no routing work (queue
+        # empty), no control tick, no timeline sample. Drain them in one
+        # tight pass, replicating the per-event chip-second accumulation
+        # exactly (it is NOT float-associative across segments), so
+        # results stay bit-identical to the one-iteration-per-pop flow.
+        if predrain and heap and not (queue._icount or queue._bcount):
+            pt = pend[0] if pend is not None else _INF
+            while heap:
+                ev = heap[0]
+                th = ev[0]
+                if th >= t_arr - eps or th >= next_control - eps \
+                        or th >= next_timeline - eps or th >= pt - eps \
+                        or th > max_time or ev[1] != _COMPLETION:
+                    break
+                inst = ev[3]
+                if ev[4] == inst._epoch \
+                        and inst.state == InstanceState.ACTIVE:
+                    break                    # live estimate — a real event
+                heappop(heap)
+                n_events += 1
+                if th > cluster.now:         # inline advance_time
+                    cluster.chip_seconds += \
+                        cluster._used_chips * (th - cluster.now)
+                    cluster.now = th
+
         # ---- next event time across all sources
         t_next = t_arr
         if heap and heap[0][0] < t_next:
             t_next = heap[0][0]
+        if pend is not None and pend[0] < t_next:
+            t_next = pend[0]
         if next_control < t_next:
             t_next = next_control
         if not control_parked and next_timeline < t_next:
@@ -334,30 +456,49 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         cluster.batch_seq = batch_seq
         changed = False
 
-        # 1. arrivals due at t. When nothing else shares the timestamp
-        #    (no heap event, no control tick — so steps 2-4 would change
-        #    nothing before routing) an interactive arrival into an empty
-        #    lane takes the zero-queuing fast path: it is placed directly,
+        if timing:
+            _t0 = timers.clock()
+
+        # 1. arrivals due at t, popped as one cohort (Trace mode finds
+        #    the extent with one searchsorted and materializes one
+        #    slice). When nothing else shares the timestamp (no heap
+        #    event, no control tick — so steps 2-4 would change nothing
+        #    before routing) interactive arrivals into empty lanes take
+        #    the zero-queuing fast path: the whole burst routes through
+        #    one ``route_arrival_burst`` call, placed directly and
         #    skipping the queue round-trip the full pass would undo.
         if t_arr <= t + eps:
             fast = route_arrival is not None \
                 and not (heap and heap[0][0] <= t + eps) \
+                and not (pend is not None and pend[0] <= t + eps) \
                 and next_control > t + eps
-            while t_arr <= t + eps:
-                req, t_arr = cursor_pop_next()
-                if observe_arrival is not None:
-                    observe_arrival(req, t)
-                if not (fast and queue._icount == 0
-                        and route_arrival(cluster, queue, req, t)):
-                    queue_push(req)
-                changed = True
-                n_events += 1
+            cohort, t_arr = cursor.pop_until(t + eps)
+            n_events += len(cohort)
+            changed = True
+            if fast and route_burst is not None:
+                route_burst(cluster, queue, cohort, t, observe_arrival)
+            else:
+                for req in cohort:
+                    if observe_arrival is not None:
+                        observe_arrival(req, t)
+                    if not (fast and queue._icount == 0
+                            and route_arrival(cluster, queue, req, t)):
+                        queue_push(req)
+
+        if timing:
+            _t0 = timers.lap("arrivals", _t0)
 
         # 2. instance events due at t (ready transitions, completion
         #    estimates, injected crashes; stale estimates are skipped via
         #    the epoch stamp). Instances that gained capacity are
         #    backfilled directly below.
-        freed = []
+        freed = ()                       # lazily a list once events fire
+        if pend is not None and pend[0] <= t + eps:
+            # repro-lint: ok(DET204, staged 5-tuple built inline)
+            heappush(heap, pend)         # due: fire in exact tuple order
+            pend = None
+        if heap and heap[0][0] <= t + eps:
+            freed = []
         while heap and heap[0][0] <= t + eps:
             _, kind, _, inst, epoch = heappop(heap)
             n_events += 1
@@ -408,6 +549,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                 freed.append(inst)
                 changed = True
 
+        if timing:
+            _t0 = timers.lap("heap_drain", _t0)
+
         # a parked control loop resumes as soon as anything happens
         if control_parked and changed:
             next_control = t
@@ -422,6 +566,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             cluster.catch_up(t, batch_seq)
             if shadow is not None:
                 shadow.verify_cluster(cluster)
+                shadow.verify_queue(queue)
                 shadow.maybe_verify_ledger(cursor.ledger, cursor.all, t)
             pre = (len(cluster.instances), cluster.scale_ups,
                    cluster.scale_downs)
@@ -443,6 +588,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             else:
                 next_control = t + control_interval
 
+        if timing:
+            _t0 = timers.lap("control", _t0)
+
         # 4. routing: the full preferential pass runs at control ticks; in
         #    between, interactive dispatch stays zero-queuing on every event
         #    and only just-freed instances are backfilled from the batch
@@ -459,35 +607,171 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                                i.itype != InstanceType.BATCH)
                 controller.backfill(freed, queue, t)
 
-        # 5. sweep instances touched this batch: surface completions to the
-        #    controller and (re)schedule their next completion estimate
-        #    (ETAs the vectorized catch-up already computed are reused)
-        if cluster.dirty:
-            for inst in cluster.drain_dirty():
+        if timing:
+            _t0 = timers.lap("routing", _t0)
+
+        # 5. sweep instances touched this batch: surface completions to
+        #    the controller, then one vectorized ETA recompute over the
+        #    plane columns (``sweep_etas``: cached catch-up ETAs reused,
+        #    the rest batch-recomputed) feeds a single bulk heap refill.
+        #    Epochs still advance per instance, so stale estimates cancel
+        #    exactly as the per-instance re-push did.
+        if cdirty:
+            if len(cdirty) == 1:
+                # single-dirty fast path (the common shape: one admit or
+                # one completion per event) — same operations as the
+                # general branch below, minus the list plumbing
+                inst = cdirty.pop()
                 pf = inst._pending_finished
                 if pf:
                     inst._pending_finished = []
                     for r in pf:
                         observe_completion(r)
                 if inst.state == InstanceState.ACTIVE:
-                    eta = cluster.cached_eta(inst, batch_seq)
-                    if eta < 0.0:
-                        eta = inst.next_event_in()
+                    if inst._eta_stamp != batch_seq:
+                        inst._eta_val = inst.next_event_in()
+                        inst._eta_stamp = batch_seq
+                    eta = inst._eta_val
                     if eta != _INF:
                         inst._epoch += 1
-                        heappush(heap, (t + eta, _COMPLETION,
-                                        next(ev_seq), inst, inst._epoch))
+                        ev = (t + eta, _COMPLETION,
+                              next(ev_seq), inst, inst._epoch)
+                        if use_pend:
+                            if pend is not None and pend[3] is not inst:
+                                # repro-lint: ok(DET204, staged 5-tuple)
+                                heappush(heap, pend)
+                            # a same-instance staged tuple was superseded
+                            # by the epoch bump above — dropped here
+                            # instead of lingering as a stale heap pop
+                            pend = ev
+                        else:
+                            # repro-lint: ok(DET204, ev built inline above)
+                            heappush(heap, ev)
+            else:
+                dirty = cluster.drain_dirty()
+                if pend is not None:
+                    # repro-lint: ok(DET204, staged 5-tuple)
+                    heappush(heap, pend)
+                    pend = None
+                for inst in dirty:
+                    pf = inst._pending_finished
+                    if pf:
+                        inst._pending_finished = []
+                        for r in pf:
+                            observe_completion(r)
+                refill = cluster.sweep_etas(dirty, batch_seq)
+                if refill:
+                    # bulk refill: extend+heapify beats k sifts once the
+                    # batch is a decent fraction of the heap; pop order
+                    # is identical either way (event seqs total-order)
+                    if 8 * len(refill) < len(heap):
+                        for inst, eta in refill:
+                            inst._epoch += 1
+                            heappush(heap, (t + eta, _COMPLETION,
+                                            next(ev_seq), inst,
+                                            inst._epoch))
+                    else:
+                        for inst, eta in refill:
+                            inst._epoch += 1
+                            heap.append((t + eta, _COMPLETION,
+                                         next(ev_seq), inst, inst._epoch))
+                        heapify(heap)
             if shadow is not None:
                 shadow.verify_cluster(cluster)
+
+        if timing:
+            _t0 = timers.lap("sweep", _t0)
 
         # 6. timeline sample (suppressed while parked — state is frozen)
         if t >= next_timeline - eps:
             _sample(t)
 
+        if timing:
+            timers.lap("sampling", _t0)
+
+        # ---- steady-state arrival micro-loop: while the next cohort
+        # lands strictly before every other event source (no heap event
+        # or staged completion due, no control tick, no timeline sample),
+        # phases 2/3/6 above are provably no-ops and phase 4 reduces to
+        # the zero-queuing retry — so the full scan degenerates to
+        # arrival → route → sweep. Run exactly those, with the phase
+        # bodies replicated verbatim (same float and tie-break order, so
+        # results are bit-identical); the win is the per-event fixed
+        # overhead of the outer loop, paid once per burst instead of
+        # once per arrival.
+        if inner_on:
+            while (next_control > t_arr + eps
+                   and next_timeline > t_arr + eps
+                   and t_arr <= max_time
+                   and not (heap and heap[0][0] <= t_arr + eps)
+                   and not (pend is not None and pend[0] <= t_arr + eps)):
+                t = t_arr
+                if t > cluster.now:          # inline advance_time
+                    cluster.chip_seconds += \
+                        cluster._used_chips * (t - cluster.now)
+                    cluster.now = t
+                batch_seq += 1
+                cluster.batch_seq = batch_seq
+                cohort, t_arr = pop_until(t + eps)
+                n_events += len(cohort)
+                route_burst(cluster, queue, cohort, t, observe_arrival)
+                if queue._icount:            # zero-queuing retry (phase 4)
+                    route_interactive(cluster, queue, t, use_memo)
+                if not cdirty:
+                    continue
+                if len(cdirty) == 1:
+                    inst = cdirty.pop()
+                    pf = inst._pending_finished
+                    if pf:
+                        inst._pending_finished = []
+                        for r in pf:
+                            observe_completion(r)
+                    if inst.state == ACTIVE:
+                        if inst._eta_stamp != batch_seq:
+                            inst._eta_val = inst.next_event_in()
+                            inst._eta_stamp = batch_seq
+                        eta = inst._eta_val
+                        if eta != _INF:
+                            inst._epoch += 1
+                            ev = (t + eta, _COMPLETION,
+                                  next(ev_seq), inst, inst._epoch)
+                            if pend is not None and pend[3] is not inst:
+                                # repro-lint: ok(DET204, staged 5-tuple)
+                                heappush(heap, pend)
+                            pend = ev
+                else:
+                    dirty = cluster.drain_dirty()
+                    if pend is not None:
+                        # repro-lint: ok(DET204, staged 5-tuple)
+                        heappush(heap, pend)
+                        pend = None
+                    for inst in dirty:
+                        pf = inst._pending_finished
+                        if pf:
+                            inst._pending_finished = []
+                            for r in pf:
+                                observe_completion(r)
+                    refill = cluster.sweep_etas(dirty, batch_seq)
+                    if refill:
+                        if 8 * len(refill) < len(heap):
+                            for inst, eta in refill:
+                                inst._epoch += 1
+                                heappush(heap, (t + eta, _COMPLETION,
+                                                next(ev_seq), inst,
+                                                inst._epoch))
+                        else:
+                            for inst, eta in refill:
+                                inst._epoch += 1
+                                heap.append((t + eta, _COMPLETION,
+                                             next(ev_seq), inst,
+                                             inst._epoch))
+                            heapify(heap)
+
     if timeline and t > timeline[-1].t:
         _sample(t)
     if shadow is not None:
         shadow.verify_cluster(cluster)
+        shadow.verify_queue(queue)
         shadow.verify_ledger(cursor.ledger, cursor.all)
     return RunResult(requests=cursor.all_requests(), timeline=timeline,
                      chip_seconds=cluster.chip_seconds,
@@ -599,6 +883,7 @@ def simulate(requests: RequestSource, controller: BaseController,
     raise ValueError(f"unknown engine {engine!r} (want 'event' or 'fixed')")
 
 
+@_gc_paused
 def simulate_fleet(requests: RequestSource, fleet, *,
                    control_interval: float = 1.0, max_time: float = 7200.0,
                    warm_start: int = 0, timeline_every: float = 5.0,
@@ -606,7 +891,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    failures: Optional[FailurePlan] = None,
                    degradations: Optional[DegradationPlan] = None,
                    reference: bool = False,
-                   shadow_verify=None) -> RunResult:
+                   shadow_verify=None,
+                   phase_timers=None) -> RunResult:
     """Multi-cluster event loop: one shared heap drives every cluster in a
     :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
     hierarchy (the paper's two tiers), under the fleet's Router/GlobalPlacer
@@ -641,6 +927,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         fc.cluster.ledger = cursor.ledger
         if reference:
             fc.cluster.vec_min = 1 << 30
+            fc.queue = ReferenceGlobalQueue()   # object-queue baseline
         _warm_start(fc.controller, fc.cluster, t, warm_start)
         fc.cluster.new_loading = [i for i in fc.cluster.instances
                                   if i.state == InstanceState.LOADING]
@@ -659,6 +946,9 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     eps = 1e-12
     heappush = heapq.heappush
     heappop = heapq.heappop
+    heapify = heapq.heapify
+    timers = phase_timers
+    timing = timers is not None
 
     fail_rng = None
     if failures is not None:
@@ -725,6 +1015,29 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                     for fc in clusters):
             break
 
+        # ---- stale completion estimates landing strictly before every
+        # other event source: drain without a loop iteration (see the
+        # single-cluster loop for the full argument; chip-time advances
+        # per event so accumulation stays bit-identical)
+        if heap and not any(fc.queue._icount or fc.queue._bcount
+                            for fc in clusters):
+            while heap:
+                ev = heap[0]
+                th = ev[0]
+                if th >= t_arr - eps or th >= next_control - eps \
+                        or th >= next_place - eps \
+                        or th >= next_timeline - eps or th > max_time \
+                        or ev[1] != _COMPLETION:
+                    break
+                inst = ev[3]
+                if ev[4] == inst._epoch \
+                        and inst.state == InstanceState.ACTIVE:
+                    break                    # live estimate — a real event
+                heappop(heap)
+                n_events += 1
+                for fc in clusters:
+                    fc.cluster.advance_time(th)
+
         # ---- next event time across all sources
         t_next = t_arr
         if heap and heap[0][0] < t_next:
@@ -749,15 +1062,22 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         changed = False
         freed: Dict[int, List] = {}      # id(fc) -> instances w/ capacity
 
-        # 1. arrivals due at t: forecast observation, then route — local
-        #    arrivals enqueue now, cross-region ones after the network hop
-        while t_arr <= t + eps:
-            req = cursor.pop()
-            fleet.observe_arrival(req, t)
-            _dispatch(req, t)
+        if timing:
+            _t0 = timers.clock()
+
+        # 1. arrivals due at t, popped as one cohort (one searchsorted +
+        #    one materialize slice): forecast observation, then route —
+        #    local arrivals enqueue now, cross-region after the hop
+        if t_arr <= t + eps:
+            cohort, t_arr = cursor.pop_until(t + eps)
+            n_events += len(cohort)
             changed = True
-            n_events += 1
-            t_arr = cursor.peek_time()
+            for req in cohort:
+                fleet.observe_arrival(req, t)
+                _dispatch(req, t)
+
+        if timing:
+            _t0 = timers.lap("arrivals", _t0)
 
         # 2. heap events due at t
         while heap and heap[0][0] <= t + eps:
@@ -821,6 +1141,9 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                                      []).append(inst)
                     changed = True
 
+        if timing:
+            _t0 = timers.lap("heap_drain", _t0)
+
         # a parked control loop resumes as soon as anything happens
         if control_parked and changed:
             next_control = t
@@ -836,6 +1159,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                 fc.cluster.catch_up(t, batch_seq)
                 if shadow is not None:
                     shadow.verify_cluster(fc.cluster)
+                    shadow.verify_queue(fc.queue)
                 pre += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
                 fc.controller.control(fc.cluster, fc.queue, t)
@@ -857,6 +1181,9 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                 control_parked = True
             else:
                 next_control = t + control_interval
+
+        if timing:
+            _t0 = timers.lap("control", _t0)
 
         # 4. placement review (tier 3): forecast-driven residency changes,
         #    batch-target selection, saturation hand-back
@@ -887,41 +1214,59 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                                    i.itype != InstanceType.BATCH)
                     fc.controller.backfill(flist, fc.queue, t)
 
+        if timing:
+            _t0 = timers.lap("routing", _t0)
+
         # 6. sweep dirty instances: completions surface to the owning
-        #    cluster's controller and the fleet rollup, estimates re-arm
+        #    cluster's controller and the fleet rollup, then each
+        #    cluster's vectorized ``sweep_etas`` pass bulk-refills the
+        #    shared heap (epochs still advance per instance)
         for fc in clusters:
             if not fc.cluster.dirty:
                 continue
-            for inst in fc.cluster.drain_dirty():
+            dirty = fc.cluster.drain_dirty()
+            for inst in dirty:
                 pf = inst._pending_finished
                 if pf:
                     inst._pending_finished = []
                     for r in pf:
                         fc.controller.observe_completion(r)
                         fleet.observe_completion(r, fc, t)
-                if inst.state == InstanceState.ACTIVE:
-                    eta = fc.cluster.cached_eta(inst, batch_seq)
-                    if eta < 0.0:
-                        eta = inst.next_event_in()
-                    if eta != _INF:
+            refill = fc.cluster.sweep_etas(dirty, batch_seq)
+            if refill:
+                if 8 * len(refill) < len(heap):
+                    for inst, eta in refill:
                         inst._epoch += 1
                         heappush(heap, (t + eta, _COMPLETION,
                                         next(ev_seq), inst,
                                         inst._epoch))
+                else:
+                    for inst, eta in refill:
+                        inst._epoch += 1
+                        heap.append((t + eta, _COMPLETION,
+                                     next(ev_seq), inst, inst._epoch))
+                    heapify(heap)
             if shadow is not None:
                 shadow.verify_cluster(fc.cluster)
         if shadow is not None and ran_control:
             shadow.maybe_verify_ledger(cursor.ledger, cursor.all, t)
 
+        if timing:
+            _t0 = timers.lap("sweep", _t0)
+
         # 7. timeline sample (suppressed while parked — state is frozen)
         if not control_parked and t >= next_timeline - eps:
             _sample(t)
+
+        if timing:
+            timers.lap("sampling", _t0)
 
     if timeline and t > timeline[-1].t:
         _sample(t)
     if shadow is not None:
         for fc in clusters:
             shadow.verify_cluster(fc.cluster)
+            shadow.verify_queue(fc.queue)
         shadow.verify_ledger(cursor.ledger, cursor.all)
     stats = fleet.finalize()
     return RunResult(

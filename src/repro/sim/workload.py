@@ -30,6 +30,7 @@ arrival-ordered chunks (:class:`TraceStream`).
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple, Union
 
@@ -37,7 +38,7 @@ import numpy as np
 
 from repro.serving.request import (BATCH_ITL_SLO, BATCH_TTFT_SLO,
                                    INTERACTIVE_ITL_SLO, INTERACTIVE_TTFT_SLO,
-                                   Request, RequestState, RequestType, SLO,
+                                   Request, RequestType, SLO,
                                    request_id_counter)
 
 # ShareGPT-ish lognormal parameters (Fig. 8: median input ~100 tokens with a
@@ -47,6 +48,10 @@ OUTPUT_MU, OUTPUT_SIGMA = 5.2, 0.9    # median ~180, mean ~270
 MAX_TOKENS = 2048
 
 DEFAULT_MODEL = "llama-8b"
+
+# infinite -1 row stamp for unledgered materialization (shared: `repeat`
+# is stateless and inexhaustible, so concurrent zips interleave safely)
+_NO_ROWS = itertools.repeat(-1)
 
 
 # =========================================================== columnar trace
@@ -178,14 +183,21 @@ class Trace:
         ins = self.prompt_len[lo:hi].tolist()
         outs = self.output_len[lo:hi].tolist()
         inter = self.interactive[lo:hi].tolist()
-        ttft = self.ttft_slo[lo:hi].tolist()
-        itl = self.itl_slo[lo:hi].tolist()
         midx = self.model_idx[lo:hi].tolist()
         models = self.models
         origins = self.origins or None
         oidx = self.origin_idx[lo:hi].tolist()
         it, ba = RequestType.INTERACTIVE, RequestType.BATCH
-        slos: dict = {}
+        # SLO interning columnar: one unique pass over the (ttft, itl)
+        # pair column — complex128 packs both float64 exactly, so equal
+        # pairs collapse to one shared SLO object, same as the old
+        # per-row dict intern but without a tuple-key lookup per row
+        key = self.ttft_slo[lo:hi] + self.itl_slo[lo:hi] * 1j
+        uniq, inv = np.unique(key, return_inverse=True)
+        slo_objs = [SLO(u.real, u.imag) for u in uniq.tolist()]
+        slo_col = [slo_objs[k] for k in inv.tolist()]
+        rows = range(row0, row0 + (hi - lo)) if row0 is not None \
+            else _NO_ROWS
         out = []
         # bulk construction bypasses the dataclass __init__ (measured ~3x
         # per-object): a dict literal covering every Request field becomes
@@ -194,24 +206,25 @@ class Trace:
         new = Request.__new__
         next_id = request_id_counter().__next__
         append = out.append
-        for i, (t, p, o, c, tt, il, m, g) in enumerate(
-                zip(arr, ins, outs, inter, ttft, itl, midx, oidx)):
-            slo = slos.get((tt, il))
-            if slo is None:
-                slo = slos[(tt, il)] = SLO(tt, il)
+        for t, p, o, c, m, g, slo, rw in zip(arr, ins, outs, inter,
+                                             midx, oidx, slo_col, rows):
             r = new(Request)
+            # fields at their dataclass defaults (state, outcome slots,
+            # preemptions, ...) are deliberately absent: the dataclass
+            # stores plain defaults as class attributes, so reads fall
+            # through and the first write creates the instance entry.
+            # Only ``itl_samples`` has a mutable factory default and must
+            # be per-instance from the start.
             r.__dict__ = {
                 "prompt_len": p, "output_len": o,
                 "request_type": it if c else ba, "slo": slo,
                 "arrival_time": t, "req_id": next_id(),
                 "model": models[m],
-                "origin": origins[g] if origins else None,
-                "state": RequestState.QUEUED, "tokens_generated": 0,
-                "first_token_time": None, "finish_time": None,
-                "itl_samples": [], "preemptions": 0, "saved_kv": None,
-                "prompt_tokens": None,
-                "row": -1 if row0 is None else row0 + i,
+                "itl_samples": [],
+                "row": rw,
             }
+            if origins:
+                r.__dict__["origin"] = origins[g]
             append(r)
         return out
 

@@ -269,8 +269,18 @@ def test_scan_admit_pins_can_admit_best_fit():
             inst._kv_dec_base = 0.0
             inst._n_dec = 0
         want = _best_fit([i for i in pool if i.can_admit(req)])
-        got = _scan_admit(pool, req)
+        got, rej = _scan_admit(pool, req)
         assert got is want, trial
+        # rej_slack invariant the positive-scan memo depends on: any
+        # prompt longer than rej is wall-rejected by every instance this
+        # scan wall-rejected (capacity/active rejections are
+        # request-independent)
+        for inst in pool:
+            if inst.active and len(inst.running) < inst.max_batch_size \
+                    and not inst.can_admit(req):
+                assert inst._c_wall - (inst._kv_prefill
+                                       + inst._kv_dec_base
+                                       + inst._n_dec * inst.vclock) <= rej
 
 
 # ------------------------------------------------------- materialize parity
@@ -287,13 +297,20 @@ def test_bulk_materialize_equals_constructor_requests():
             for i, (t, p, o, c, m) in enumerate(zip(
                 trace.arrival, trace.prompt_len, trace.output_len,
                 trace.interactive, trace.model_idx))]
-    for f, s in zip(fast, slow):
-        d1 = dict(f.__dict__)
-        d2 = dict(s.__dict__)
-        d1.pop("req_id")
-        d2.pop("req_id")
-        assert d1 == d2
-    # every declared Request field is present on the bulk-built object
     import dataclasses
     names = {fld.name for fld in dataclasses.fields(Request)}
-    assert set(fast[0].__dict__) == names
+    for f, s in zip(fast, slow):
+        for name in names:
+            if name == "req_id":
+                continue
+            assert getattr(f, name) == getattr(s, name), name
+    # bulk-built objects carry only non-default entries; every absent
+    # field must resolve through a dataclass class-attribute default
+    # equal to what the constructor would have stored
+    assert set(fast[0].__dict__) <= names
+    for name in names - set(fast[0].__dict__):
+        assert getattr(Request, name) == getattr(slow[0], name), name
+    # the one mutable factory default must stay per-instance
+    assert "itl_samples" in fast[0].__dict__
+    fast[0].itl_samples.append(1.0)
+    assert not fast[1].itl_samples

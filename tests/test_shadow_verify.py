@@ -39,6 +39,7 @@ def test_scenarios_pass_shadow_verify(name, seed):
     res = _run_events(name, seed, shadow=shadow)
     assert res.completion_rate() > 0
     assert shadow.ledger_checks > 0
+    assert shadow.queue_checks > 0
 
 
 @pytest.mark.parametrize("name,seed", [("diurnal", 3),
@@ -115,3 +116,34 @@ def test_ledger_desync_is_caught(monkeypatch):
     with pytest.raises(ShadowVerifyError, match="ledger `state`"):
         _run_events("diurnal", 7,
                     shadow=ShadowVerifier(ledger_interval=0.0))
+
+
+def test_queue_column_desync_is_caught(monkeypatch):
+    # mutation: every lane push skews the arrival key column by one
+    # second — the cell no longer rebuilds from the payload Request, so
+    # the first control-tick audit that sees a queued request must trip
+    from repro.serving.global_queue import _Lane
+    orig_push = _Lane.push
+
+    def skewed(self, s, req):
+        orig_push(self, s, req)
+        self.arrival[self.tail - 1] = req.arrival_time + 1.0
+
+    monkeypatch.setattr(_Lane, "push", skewed)
+    with pytest.raises(ShadowVerifyError, match="queue column"):
+        _run_events("burst_spikes", 7, shadow=ShadowVerifier())
+
+
+def test_queue_counter_desync_is_caught(monkeypatch):
+    # mutation: push double-counts interactive arrivals — the maintained
+    # O(1) counters drift from a recount of the live lane windows
+    from repro.serving.global_queue import GlobalQueue
+    orig_push = GlobalQueue.push
+
+    def double(self, req):
+        orig_push(self, req)
+        self._icount += 1
+
+    monkeypatch.setattr(GlobalQueue, "push", double)
+    with pytest.raises(ShadowVerifyError, match="queue counters"):
+        _run_events("burst_spikes", 7, shadow=ShadowVerifier())
