@@ -252,6 +252,57 @@ def run():
                 for c in res.clusters}
         json_rows.append(jrow)
 
+    # ---- flight-recorder overhead: diurnal with telemetry on vs off.
+    # The committed ``telemetry_overhead_frac`` is the PR 8 acceptance
+    # number (events/s within 5% of telemetry-off) and bench_trend
+    # schema-checks both telemetry fields. Estimator: the second of two
+    # back-to-back runs measures a few percent slower than the first
+    # regardless of configuration (turbo/cache decay — an off-vs-off
+    # control reproduces it), so per-pair ratios and best-of-k are both
+    # biased; instead alternate the arm order every pair (each arm gets
+    # equal first/second draws) and take the ratio of per-arm *medians*,
+    # which cancels the position bias and is robust to container noise.
+    walls = {True: [], False: []}
+    for i in range(max(repeats, 10)):
+        for tel in ((True, False) if i % 2 == 0 else (False, True)):
+            trace, kw = build_trace("diurnal", seed=3)
+            cluster = SimCluster(default_perf_factory(),
+                                 max_chips=MAX_CHIPS)
+            t0 = time.perf_counter()
+            res = simulate_events(trace, chiron(), cluster,
+                                  max_time=kw["max_time"], warm_start=2,
+                                  telemetry=tel)
+            w = time.perf_counter() - t0
+            walls[tel].append(w)
+            if tel:
+                res_on = res
+    wall_on = sorted(walls[True])[len(walls[True]) // 2]
+    wall_off = sorted(walls[False])[len(walls[False]) // 2]
+    overhead = wall_on / wall_off - 1.0
+    rec = res_on.telemetry
+    rows.append(Row("scenario/diurnal_telemetry", wall_on * 1e6,
+                    n=trace.n,
+                    events_per_s=round(res_on.n_events / wall_on),
+                    overhead=f"{overhead:+.1%}",
+                    decisions=rec.decisions.n, spans=rec.spans.n,
+                    **_finish_stats(res_on, res_on.requests)))
+    json_rows.append({
+        "scenario": "diurnal_telemetry", "n_requests": trace.n,
+        "wall_s": round(wall_on, 3),
+        "events": res_on.n_events,
+        "events_per_s": round(res_on.n_events / max(wall_off, 1e-9), 1),
+        "telemetry_events_per_s": round(
+            res_on.n_events / max(wall_on, 1e-9), 1),
+        "telemetry_overhead_frac": round(overhead, 4),
+        "sim_duration_s": round(res_on.duration, 1),
+        "slo_attainment": round(res_on.slo_attainment(), 4),
+        "completion_rate": round(res_on.completion_rate(), 4),
+        "decision_rows": rec.decisions.n,
+        "signal_rows": rec.signals.n,
+        "cluster_tick_rows": rec.cticks.n,
+        "span_rows": rec.spans.n,
+    })
+
     # ---- million-request replay: the scale point the columnar hot path
     # is sized for, in the committed baseline so bench_trend's wall-clock
     # gate tracks it across PRs. One run (no best-of: it is long);

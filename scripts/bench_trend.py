@@ -60,7 +60,8 @@ def _validate(doc, label: str) -> dict:
             raise SystemExit(f"bench_trend: {where} "
                              f"({r['scenario']}): 'events_per_s' must be "
                              "a number")
-        for k in ("wall_s", "slo_attainment", "completion_rate"):
+        for k in ("wall_s", "slo_attainment", "completion_rate",
+                  "telemetry_overhead_frac", "telemetry_events_per_s"):
             v = r.get(k)
             if v is not None and (isinstance(v, bool)
                                   or not isinstance(v, (int, float))):

@@ -31,6 +31,10 @@ FAST_TESTS = [
     "tests/test_global_queue.py",
     "tests/test_ledger.py",          # columnar ledger + decision
                                      # equivalence vs the reference path
+    "tests/test_obs.py",             # flight recorder: replay equivalence,
+                                     # span sampling, exporters, overhead
+    "tests/test_profile_sim.py",     # profile harness --phases --json
+                                     # contract
     "tests/test_queue_plane.py",     # columnar lane mechanics + reference
                                      # differential
     "tests/test_request_groups.py",

@@ -26,12 +26,19 @@ cheap ``perf_counter`` laps and this prints the per-phase wall-clock
 breakdown — phase attribution without cProfile's ~2x call-cost noise,
 so the next perf PR starts from data. Per-lap overhead is two clock
 reads; totals run ~5-10% above ``--plain`` wall.
+
+``--json`` (with ``--plain`` or ``--phases``) replaces the human
+report with one machine-readable JSON object on stdout — scenario,
+wall_s, events, events_per_s, completion_rate, and (under
+``--phases``) the per-phase seconds — for harnesses and the
+phase-attribution smoke test (tests/test_profile_sim.py).
 """
 from __future__ import annotations
 
 import argparse
 import cProfile
 import io
+import json
 import os
 import pstats
 import sys
@@ -112,14 +119,29 @@ def main() -> int:
                     help="no profiler: wall time + events/s only")
     ap.add_argument("--phases", action="store_true",
                     help="no profiler: per-phase wall-clock breakdown")
+    ap.add_argument("--json", action="store_true",
+                    help="with --plain/--phases: emit one JSON object "
+                         "instead of the human report")
     args = ap.parse_args()
 
-    if args.plain or args.phases:
+    if args.plain or args.phases or args.json:
         timers = PhaseTimers() if args.phases else None
         t0 = time.perf_counter()
         res = run_scenario(args.scenario, args.n_requests, args.seed,
                            args.max_chips, phase_timers=timers)
         wall = time.perf_counter() - t0
+        if args.json:
+            out = {
+                "scenario": args.scenario,
+                "wall_s": wall,
+                "events": res.n_events,
+                "events_per_s": res.n_events / wall,
+                "completion_rate": res.completion_rate(),
+            }
+            if timers is not None:
+                out["phases"] = dict(sorted(timers.buckets.items()))
+            print(json.dumps(out))
+            return 0
         print(f"{args.scenario}: {wall:.3f}s wall, {res.n_events} events, "
               f"{res.n_events / wall:,.0f} events/s, "
               f"completion={res.completion_rate():.4f}")

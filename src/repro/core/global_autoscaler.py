@@ -78,6 +78,10 @@ class BatchAutoscaler:
     # displace back into the queue.
     scale_down_derate: float = 0.8
     max_remove_per_cycle: int = 1
+    # QLM waiting-time estimate for the full backlog at the last
+    # ``compute_bbp`` call (NaN before any call / with no groups) — the
+    # flight recorder exports it as the per-tick ``wait_est`` signal
+    last_wait: float = float("nan")
     _grouper: Optional[IncrementalGrouper] = field(default=None, repr=False)
     _grouper_src: Optional[object] = field(default=None, repr=False)
 
@@ -90,11 +94,13 @@ class BatchAutoscaler:
         """
         bbp = 0
         ahead = 0
+        w = float("nan")
         for g in groups:
             ahead += g.n
             w = self.estimator.waiting_time(ahead, total_throughput, 1)
             if now + w > g.deadline:
                 bbp += 1
+        self.last_wait = w
         return bbp
 
     def _iter_batch(self, queue):
@@ -139,6 +145,7 @@ class BatchAutoscaler:
         maintained incrementally instead of re-clustered every tick)."""
         groups = self._groups_for(queued_batch)
         if not groups:
+            self.last_wait = float("nan")
             retire = (n_active_batch_requests == 0 and n_batch_instances > 0)
             return BatchScalingDecision(0, retire, 0, [])
 

@@ -1,0 +1,11 @@
+"""Observability plane: columnar flight recorder, decision ledger,
+request-lifecycle tracing and exporters (see ``repro.obs.recorder``).
+
+Engines gate on :func:`resolve` (``telemetry=`` argument or the
+``CHIRON_TELEMETRY`` environment variable); exports live in
+``repro.obs.export`` and the terminal dashboard CLI runs as
+``python -m repro.obs <run.jsonl>``.
+"""
+from repro.obs.recorder import FlightRecorder, resolve
+
+__all__ = ["FlightRecorder", "resolve"]

@@ -54,6 +54,8 @@ import numpy as np
 
 from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.backpressure import LocalMetrics
+from repro.obs.recorder import (SPAN_ADMIT as _SPAN_ADMIT,
+                                SPAN_PREEMPT as _SPAN_PREEMPT)
 from repro.serving.request import Request, RequestState, RequestType
 from repro.sim import ledger as _ledger
 from repro.sim.perf_model import STEP_OVERHEAD, PerfModel
@@ -529,6 +531,15 @@ class SimInstance:
         led = c.ledger if c is not None else None
         if led is not None and req.row >= 0:
             led.state[req.row] = _ledger.RUNNING
+        if c is not None and c.obs is not None:
+            # FlightRecorder.record_span inlined (the one per-request
+            # telemetry hook): sampling hash + one staged tuple append
+            rec = c.obs
+            if req.row >= 0 and ((req.row + 1) * 2654435761
+                                 + rec._span_mix) \
+                    & 0xFFFFFFFF < rec._span_limit:
+                rec._sp_stage.append(
+                    (now, req.row, _SPAN_ADMIT, self.id))
         # slotted SimSeq built without the constructor call (hot: once
         # per admission) — field-for-field what __init__ would set
         s = _new_seq(SimSeq)
@@ -657,6 +668,8 @@ class SimInstance:
             c = self._cluster
             if c is not None and c.ledger is not None and r.row >= 0:
                 c.ledger.state[r.row] = _ledger.PREEMPTED
+            if c is not None and c.obs is not None:
+                c.obs.record_evict(c, now, r, self)
             self.mark_dirty()
             self._sync_plane()
             return r
@@ -1174,6 +1187,9 @@ class SimCluster:
         # columnar outcome store installed by the event engines; None =
         # object-only recording (fixed tick, bare unit-test clusters)
         self.ledger = None
+        # flight recorder (repro.obs) attached by the engines when
+        # telemetry is armed; every hook is one predicted branch when off
+        self.obs = None
         # struct-of-arrays instance plane; ``catch_up`` uses the vectorized
         # pass at >= vec_min live instances (NumPy fixed costs lose below),
         # the scalar per-object loop otherwise. Equivalence tests pin
@@ -1265,6 +1281,7 @@ class SimCluster:
         perf = self.perf_factory(model)
         if self._used_chips + perf.chips > self.max_chips:
             return None
+        chips0 = self._used_chips
         inst = SimInstance(perf, itype, now, load_time=self.load_time,
                            **inst_kw)
         inst.event_mode = self.event_mode
@@ -1284,6 +1301,9 @@ class SimCluster:
             self.new_loading.append(inst)
         if not self.plane_live and len(self.instances) >= self.vec_min:
             self._arm_plane()
+        if self.obs is not None:
+            self.obs.record_provision(self, now, model, itype,
+                                      chips0, self._used_chips)
         return inst
 
     def _arm_plane(self) -> None:
@@ -1310,8 +1330,12 @@ class SimCluster:
 
     def retire(self, inst: SimInstance) -> List[Request]:
         """Remove an instance; returns displaced requests for requeueing."""
+        chips0 = self._used_chips
         displaced = self._remove_instance(inst)
         self.scale_downs += 1
+        if self.obs is not None:
+            self.obs.record_retire(self, self.now, inst,
+                                   chips0, self._used_chips)
         return displaced
 
     def degrade_instance(self, inst: SimInstance, factor: float,
@@ -1327,6 +1351,8 @@ class SimCluster:
             self.plane.slow[inst.slot] = factor
         inst.mark_dirty()            # completion estimates must re-fire
         self.degradations += 1
+        if self.obs is not None:
+            self.obs.record_degrade(self, now, inst, factor)
 
     def recover_instance(self, inst: SimInstance, now: float) -> None:
         if self.event_mode:
@@ -1335,6 +1361,8 @@ class SimCluster:
         if inst.slot >= 0:
             self.plane.slow[inst.slot] = 1.0
         inst.mark_dirty()
+        if self.obs is not None:
+            self.obs.record_recover(self, now, inst)
 
     def fail_instance(self, inst: SimInstance) -> List[Request]:
         """Crash an instance (failure injection): like ``retire`` but the
@@ -1342,8 +1370,12 @@ class SimCluster:
         hysteresis metric stays a controller property. In-flight requests
         lose their on-device KV (``saved_kv=None`` — they must re-prefill
         elsewhere) and are returned for requeueing."""
+        chips0 = self._used_chips
         displaced = self._remove_instance(inst)
         self.failures += 1
+        if self.obs is not None:
+            self.obs.record_fail(self, self.now, inst,
+                                 chips0, self._used_chips)
         return displaced
 
     def _remove_instance(self, inst: SimInstance) -> List[Request]:
@@ -1360,6 +1392,10 @@ class SimCluster:
             if led is not None and r.row >= 0:
                 led.state[r.row] = _ledger.PREEMPTED
             displaced.append(r)
+        obs = self.obs
+        if obs is not None:
+            for r in displaced:     # lifecycle spans: back to queued
+                obs.record_span(self.now, r.row, _SPAN_PREEMPT, inst.id)
         self.total_running -= len(inst.running)
         inst.running.clear()
         inst._batch_lifo.clear()

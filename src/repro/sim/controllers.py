@@ -24,6 +24,11 @@ from repro.core.baselines import LlumnixAutoscaler
 from repro.core.global_autoscaler import BatchAutoscaler, InteractiveAutoscaler
 from repro.core.local_autoscaler import LocalAutoscaler
 from repro.core.waiting_time import WaitingTimeEstimator
+from repro.obs.recorder import (R_BBP_ADD as _R_BBP_ADD,
+                                R_BBP_IDLE as _R_BBP_IDLE,
+                                R_BBP_TRIM as _R_BBP_TRIM,
+                                R_IBP_HIGH as _R_IBP_HIGH,
+                                R_IBP_LOW as _R_IBP_LOW)
 from repro.serving.global_queue import GlobalQueue
 from repro.serving.request import Request, RequestType
 from repro.sim.cluster import (SLOW_SUSPECT_RATIO, InstanceType, SimCluster,
@@ -114,6 +119,9 @@ class BaseController:
     """
 
     serves_batch_on_mixed = True
+    # flight recorder (repro.obs) attached by the engines when telemetry
+    # is armed; None costs one predicted branch per control tick
+    obs = None
 
     def route(self, cluster: SimCluster, queue: GlobalQueue, now: float) -> None:
         self.route_interactive(cluster, queue, now, use_memo=False)
@@ -625,14 +633,21 @@ class ChironController(BaseController):
         inter = cluster.by_model(model, InstanceType.INTERACTIVE)
         mixed = cluster.by_model(model, InstanceType.MIXED)
         n_running = sum(1 for i in inter + mixed if i.runs_interactive())
-        dec = self.interactive_scalers[model].update(n_running, len(inter),
-                                                     len(mixed))
+        iscaler = self.interactive_scalers[model]
+        dec = iscaler.update(n_running, len(inter), len(mixed))
+        obs = self.obs
         if dec.delta_instances > 0:
+            if obs is not None:     # Algorithm 1: IBP above the band
+                obs.set_context(_R_IBP_HIGH, dec.ibp,
+                                iscaler.theta + iscaler.delta)
             for _ in range(dec.delta_instances):
                 if self._provision(cluster, InstanceType.MIXED, now,
                                    model) is None:
                     break               # shared chip budget exhausted
         elif dec.delta_instances < 0:
+            if obs is not None:     # Algorithm 1: IBP below the band
+                obs.set_context(_R_IBP_LOW, dec.ibp,
+                                iscaler.theta - iscaler.delta)
             floor = self.min_instances if model in self._configured else 0
             idle_mixed = [i for i in mixed
                           if i.active and not i.runs_interactive()]
@@ -669,6 +684,8 @@ class ChironController(BaseController):
             spare_mixed_throughput=spare,
             n_active_batch_requests=n_active_batch)
         if dec2.retire_all:
+            if obs is not None:     # Algorithm 2: no batch work left
+                obs.set_context(_R_BBP_IDLE, float(dec2.bbp_before), 0.0)
             for inst in list(cluster.by_model(model, InstanceType.BATCH)):
                 for r in cluster.retire(inst):
                     queue.requeue(r)
@@ -676,16 +693,30 @@ class ChironController(BaseController):
             # Algorithm 2 minimality: surrender excess batch instances
             # while BBP stays 0 — idle/least-loaded (and still-loading)
             # instances first, displaced requests re-enter the queue
+            if obs is not None:
+                obs.set_context(_R_BBP_TRIM, float(dec2.bbp_before), 0.0)
             victims = sorted(cluster.by_model(model, InstanceType.BATCH),
                              key=lambda i: (i.active, i.n_running))
             for inst in victims[:dec2.remove_instances]:
                 for r in cluster.retire(inst):
                     queue.requeue(r)
         else:
+            if obs is not None and dec2.add_instances:
+                # Algorithm 2: BBP > 0, add until it clears
+                obs.set_context(_R_BBP_ADD, float(dec2.bbp_before), 0.0)
             for _ in range(dec2.add_instances):
                 if self._provision(cluster, InstanceType.BATCH, now,
                                    model) is None:
                     break               # shared chip budget exhausted
+        if obs is not None:
+            obs.record_signals(
+                now, cluster, model,
+                dec.ibp, iscaler.theta,
+                dec2.bbp_before, scaler.last_wait,
+                queue.n_interactive_for(model),
+                queue.n_batch_for(model),
+                len(inter), len(mixed),
+                len(cluster.by_model(model, InstanceType.BATCH)))
 
     def observe_completion(self, req: Request) -> None:
         # per-model output-length fit: each model's QLM estimator only

@@ -392,7 +392,7 @@ class GlobalPlacer:
             self._place_interactive(model, now, emit_warm)
             self._place_batch(model, now, emit_warm)
             self._drain_idle(model, now, redispatch)
-            self._hand_back(model, redispatch)
+            self._hand_back(model, now, redispatch)
         return redispatch
 
     def _refresh_theta(self, model: str, now: float) -> None:
@@ -476,7 +476,7 @@ class GlobalPlacer:
                 redispatch.extend(fleet.drain(model, fc, now))
                 actives.remove(fc)
 
-    def _hand_back(self, model: str, redispatch) -> None:
+    def _hand_back(self, model: str, now: float, redispatch) -> None:
         """Saturation hand-back: a budget-full cluster with a deep batch
         queue surrenders half of it to the cheapest cluster that can
         absorb the work."""
@@ -514,6 +514,9 @@ class GlobalPlacer:
                 moved += 1
             fc.stats.handbacks += moved
             fleet.handbacks += moved
+            if moved and fleet.obs is not None:
+                fleet.obs.record_handback(now, fc.name, alt.name, model,
+                                          moved)
 
     # --------------------------------------------------------- migrations
     def ensure_resident(self, model: str, fc: FleetCluster, now: float,
@@ -538,6 +541,8 @@ class GlobalPlacer:
         fc.resident[model] = "warming"
         fc.stats.migrations_in += 1
         fleet.migrations += 1
+        if fleet.obs is not None:
+            fleet.obs.record_migration(now, fc.name, model, delay)
         emit_warm(delay, (model, fc))
 
 
@@ -592,6 +597,9 @@ class Fleet:
         self.handbacks = 0
         self.egress_bytes = 0.0
         self.egress_cost_usd = 0.0
+        # flight recorder (repro.obs) attached by simulate_fleet when
+        # telemetry is armed; tier-3 actions land in its decision ledger
+        self.obs = None
         # bumped whenever some model's set of active residencies changes;
         # the Router's cached candidate orders key on it
         self.residency_epoch = 0
@@ -655,6 +663,8 @@ class Fleet:
                 dest.stats.remote_served += 1
             out.append((r, dest,
                         self.topology.latency(fc.region, dest.region)))
+        if self.obs is not None:
+            self.obs.record_drain(now, fc.name, model, len(out))
         return out
 
     def observe_completion(self, req: Request, fc: FleetCluster,

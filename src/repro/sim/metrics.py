@@ -30,6 +30,139 @@ class TimelinePoint:
     tokens_per_s: float
 
 
+class Timeline:
+    """Columnar run timeline: one struct-of-arrays row per sample
+    (amortized-doubling backing, the :class:`RequestLedger` idiom)
+    instead of a ``TimelinePoint`` object per sample, plus per-model
+    queue-depth columns the flat tuple could not express.
+
+    The object view survives for back-compat: iteration, indexing
+    (negative included) and slicing materialize :class:`TimelinePoint`
+    views lazily, so ``timeline[-1].t`` and every existing consumer keep
+    working; vectorized consumers read :meth:`col` directly."""
+
+    _COLUMNS = (
+        ("t", np.float64, 0.0), ("n_interactive", np.int32, 0),
+        ("n_mixed", np.int32, 0), ("n_batch", np.int32, 0),
+        ("chips", np.int32, 0), ("q_interactive", np.int32, 0),
+        ("q_batch", np.int32, 0), ("tokens_per_s", np.float64, 0.0),
+    )
+    __slots__ = ("n", "_cap", "_backing", "_q_int_models",
+                 "_q_batch_models")
+
+    def __init__(self):
+        self.n = 0
+        self._cap = 0
+        self._backing: Dict[str, np.ndarray] = {}
+        # model -> per-sample queue-depth column; created zero-filled on
+        # a model's first nonzero depth (rows before that are correctly
+        # zero — the lane did not exist yet)
+        self._q_int_models: Dict[str, np.ndarray] = {}
+        self._q_batch_models: Dict[str, np.ndarray] = {}
+
+    def _reserve(self, extra: int) -> None:
+        need = self.n + extra
+        cap = self._cap
+        if cap == 0:
+            cap = max(need, 256)
+            for name, dtype, fill in self._COLUMNS:
+                self._backing[name] = np.full(cap, fill, dtype=dtype)
+        elif need > cap:
+            while cap < need:
+                cap *= 2
+            for name, dtype, fill in self._COLUMNS:
+                back = np.full(cap, fill, dtype=dtype)
+                back[:self.n] = self._backing[name][:self.n]
+                self._backing[name] = back
+            for store in (self._q_int_models, self._q_batch_models):
+                for m, col in store.items():
+                    back = np.zeros(cap, dtype=np.int32)
+                    back[:self.n] = col[:self.n]
+                    store[m] = back
+        else:
+            return
+        self._cap = cap
+
+    def append_sample(self, t: float, n_interactive: int, n_mixed: int,
+                      n_batch: int, chips: int, q_interactive: int,
+                      q_batch: int, tokens_per_s: float, *,
+                      q_interactive_by_model=None,
+                      q_batch_by_model=None) -> None:
+        self._reserve(1)
+        i = self.n
+        b = self._backing
+        b["t"][i] = t
+        b["n_interactive"][i] = n_interactive
+        b["n_mixed"][i] = n_mixed
+        b["n_batch"][i] = n_batch
+        b["chips"][i] = chips
+        b["q_interactive"][i] = q_interactive
+        b["q_batch"][i] = q_batch
+        b["tokens_per_s"][i] = tokens_per_s
+        if q_interactive_by_model:
+            self._set_depths(self._q_int_models, q_interactive_by_model, i)
+        if q_batch_by_model:
+            self._set_depths(self._q_batch_models, q_batch_by_model, i)
+        self.n = i + 1
+
+    def _set_depths(self, store: Dict[str, np.ndarray],
+                    depths: Dict[str, int], i: int) -> None:
+        for m, v in depths.items():
+            col = store.get(m)
+            if col is None:
+                col = store[m] = np.zeros(self._cap, dtype=np.int32)
+            col[i] = v
+
+    # ------------------------------------------------------- column views
+    def col(self, name: str) -> np.ndarray:
+        """Exact-length view of one aggregate column."""
+        if self._cap == 0:
+            for cname, dtype, _ in self._COLUMNS:
+                if cname == name:
+                    return np.empty(0, dtype=dtype)
+            raise KeyError(name)
+        return self._backing[name][:self.n]
+
+    def queue_models(self) -> List[str]:
+        """Models with a per-model queue-depth column, sorted."""
+        return sorted(set(self._q_int_models) | set(self._q_batch_models))
+
+    def q_interactive_for(self, model: str) -> np.ndarray:
+        col = self._q_int_models.get(model)
+        return np.zeros(self.n, dtype=np.int32) if col is None \
+            else col[:self.n]
+
+    def q_batch_for(self, model: str) -> np.ndarray:
+        col = self._q_batch_models.get(model)
+        return np.zeros(self.n, dtype=np.int32) if col is None \
+            else col[:self.n]
+
+    # ----------------------------------------------- object view (compat)
+    def _point(self, i: int) -> TimelinePoint:
+        b = self._backing
+        return TimelinePoint(
+            float(b["t"][i]), int(b["n_interactive"][i]),
+            int(b["n_mixed"][i]), int(b["n_batch"][i]),
+            int(b["chips"][i]), int(b["q_interactive"][i]),
+            int(b["q_batch"][i]), float(b["tokens_per_s"][i]))
+
+    def __len__(self) -> int:
+        return self.n
+
+    def __iter__(self):
+        for i in range(self.n):
+            yield self._point(i)
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self._point(j) for j in range(*i.indices(self.n))]
+        if i < 0:
+            i += self.n
+        if not 0 <= i < self.n:
+            raise IndexError("timeline index out of range")
+        return self._point(i)
+
+
 @dataclass
 class ClusterStats:
     """Per-cluster rollup of a fleet run (attributed at completion time —
@@ -87,6 +220,9 @@ class RunResult:
     # columnar outcome store (event-core runs); aggregate metrics reduce
     # over it vectorized instead of walking ``requests``
     ledger: Optional[RequestLedger] = None
+    # flight recorder (repro.obs.FlightRecorder) when the run was made
+    # with telemetry on; None otherwise
+    telemetry: Optional[object] = None
     # --- fleet runs (simulate_fleet) ---
     clusters: List[ClusterStats] = field(default_factory=list)
     migrations: int = 0             # placement copies scheduled
@@ -235,8 +371,18 @@ class RunResult:
     def instance_counts_at(self, t: float) -> Tuple[int, int, int]:
         """(interactive, mixed, batch) instance counts at time ``t``
         (stepwise-left over the timeline samples)."""
+        tl = self.timeline
+        if isinstance(tl, Timeline):
+            # columnar fast path, bit-identical to the stepwise-left scan:
+            # index of the last sample with sample.t <= t
+            i = int(np.searchsorted(tl.col("t"), t, side="right")) - 1
+            if i < 0:
+                return (0, 0, 0)
+            return (int(tl.col("n_interactive")[i]),
+                    int(tl.col("n_mixed")[i]),
+                    int(tl.col("n_batch")[i]))
         last = (0, 0, 0)
-        for p in self.timeline:
+        for p in tl:
             if p.t > t:
                 break
             last = (p.n_interactive, p.n_mixed, p.n_batch)

@@ -60,7 +60,7 @@ from repro.serving.request import Request
 from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.ledger import RequestLedger
-from repro.sim.metrics import RunResult, TimelinePoint
+from repro.sim.metrics import RunResult, Timeline
 from repro.sim.perf_model import PerfModel
 from repro.sim.workload import Trace, TraceStream
 
@@ -286,6 +286,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     degradations: Optional[DegradationPlan] = None,
                     reference: bool = False,
                     shadow_verify=None,
+                    telemetry=None,
                     phase_timers=None) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
@@ -304,12 +305,21 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     columns from the objects at control ticks and completion sweeps and
     assert exact agreement. Raises ``ShadowVerifyError`` on desync.
 
+    ``telemetry`` arms the flight recorder (``repro.obs``): pass a
+    :class:`repro.obs.FlightRecorder` (or any truthy value, or set
+    ``CHIRON_TELEMETRY=1``) to record control-plane signal/tick columns,
+    the decision ledger, and sampled request-lifecycle spans. The
+    recorder rides on the result as ``RunResult.telemetry``; decisions
+    are bit-identical either way.
+
     ``phase_timers`` (``scripts/profile_sim.py --phases``) is an injected
     accumulator with ``clock()``/``lap(name, t0)`` — the loop brackets
     its six numbered phases with it; ``None`` (the default) costs one
     predicted branch per phase."""
     from repro.analysis.shadow import resolve as _shadow_resolve
+    from repro.obs.recorder import resolve as _obs_resolve
     shadow = _shadow_resolve(shadow_verify)
+    rec = _obs_resolve(telemetry)
     queue = make_queue(reference)
     cursor = _RequestCursor(requests)
     t = 0.0
@@ -318,6 +328,12 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     cluster.completion_grain = completion_grain
     cluster.quantize = quantize
     cluster.ledger = cursor.ledger
+    if rec is not None:
+        # attach before the warm start so bootstrap provisions land in
+        # the decision ledger too (replay() then matches scale_ups)
+        rec.register_cluster(cluster, "cluster")
+        cluster.obs = rec
+        controller.obs = rec
 
     _warm_start(controller, cluster, t, warm_start)
     # instances provisioned before this call (still LOADING) also need
@@ -327,7 +343,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
 
     heap: list = []                  # (time, kind, seq, instance, epoch)
     ev_seq = itertools.count()
-    timeline: List[TimelinePoint] = []
+    timeline = Timeline()
     next_control = 0.0
     control_parked = False
     next_timeline = 0.0
@@ -371,6 +387,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     # steady-state arrival micro-loop eligibility (see loop tail): only
     # the plain event mode qualifies — shadow audits, phase timing, and
     # sparse fixed-tick all need the full per-phase scan
+    # (the flight recorder does not disqualify: its hooks live on the
+    # state mutations — admit/evict/provision — which the micro-loop
+    # reaches through the same routing calls as the full scan)
     inner_on = (route_burst is not None and route_interactive is not None
                 and shadow is None and not timing and quantize == 0)
 
@@ -389,9 +408,13 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         nonlocal last_sample_t, next_timeline
         rate = cluster.take_tokens() / max(now - last_sample_t, 1e-9)
         n_i, n_m, n_b = cluster.counts_by_type()
-        timeline.append(TimelinePoint(
+        timeline.append_sample(
             now, n_i, n_m, n_b, cluster.used_chips(),
-            queue.n_interactive, queue.n_batch, rate))
+            queue.n_interactive, queue.n_batch, rate,
+            q_interactive_by_model={m: queue.n_interactive_for(m)
+                                    for m in queue.interactive_models()},
+            q_batch_by_model={m: queue.n_batch_for(m)
+                              for m in queue.batch_models()})
         last_sample_t = now
         next_timeline = now + timeline_every
 
@@ -577,6 +600,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                                 next(ev_seq), inst, 0))
             post = (len(cluster.instances), cluster.scale_ups,
                     cluster.scale_downs)
+            if rec is not None:
+                rec.record_cluster_tick(t, cluster, queue)
             quiescent = (pre == post and len(queue) == 0
                          and cluster.total_running == 0
                          and cluster.n_loading == 0)
@@ -773,6 +798,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         shadow.verify_cluster(cluster)
         shadow.verify_queue(queue)
         shadow.verify_ledger(cursor.ledger, cursor.all)
+    if rec is not None:
+        cluster.obs = None
+        controller.obs = None
     return RunResult(requests=cursor.all_requests(), timeline=timeline,
                      chip_seconds=cluster.chip_seconds,
                      peak_chips=cluster.peak_chips,
@@ -781,7 +809,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                      duration=t, failures=cluster.failures,
                      n_events=n_events,
                      degradations=cluster.degradations,
-                     ledger=cursor.ledger)
+                     ledger=cursor.ledger, telemetry=rec)
 
 
 def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
@@ -800,7 +828,7 @@ def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
     t = 0.0
     next_control = 0.0
     next_timeline = 0.0
-    timeline: List[TimelinePoint] = []
+    timeline = Timeline()
 
     _warm_start(controller, cluster, t, warm_start)
 
@@ -835,10 +863,10 @@ def simulate_fixed_tick(requests: RequestSource, controller: BaseController,
         # 5. timeline sample
         if t >= next_timeline:
             n_i, n_m, n_b = cluster.counts_by_type()
-            timeline.append(TimelinePoint(
+            timeline.append_sample(
                 t, n_i, n_m, n_b, cluster.used_chips(),
                 queue.n_interactive, queue.n_batch,
-                tok_this_tick / dt))
+                tok_this_tick / dt)
             next_timeline = t + timeline_every
 
         t += dt
@@ -862,20 +890,25 @@ def simulate(requests: RequestSource, controller: BaseController,
              warm_start: int = 0, timeline_every: float = 1.0,
              engine: str = "event",
              failures: Optional[FailurePlan] = None,
-             degradations: Optional[DegradationPlan] = None) -> RunResult:
+             degradations: Optional[DegradationPlan] = None,
+             telemetry=None) -> RunResult:
     """Compatibility wrapper: dispatch to the event-driven core (default)
     or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies;
-    failure/degradation injection needs the event core).
+    failure/degradation injection and flight-recorder telemetry need the
+    event core).
     """
     if engine == "event":
         return simulate_events(requests, controller, cluster,
                                control_interval=control_interval,
                                max_time=max_time, warm_start=warm_start,
                                timeline_every=timeline_every,
-                               failures=failures, degradations=degradations)
+                               failures=failures, degradations=degradations,
+                               telemetry=telemetry)
     if engine == "fixed":
         if failures is not None or degradations is not None:
             raise ValueError("failure injection requires engine='event'")
+        if telemetry:
+            raise ValueError("telemetry requires engine='event'")
         return simulate_fixed_tick(requests, controller, cluster, dt=dt,
                                    control_interval=control_interval,
                                    max_time=max_time, warm_start=warm_start,
@@ -892,6 +925,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    degradations: Optional[DegradationPlan] = None,
                    reference: bool = False,
                    shadow_verify=None,
+                   telemetry=None,
                    phase_timers=None) -> RunResult:
     """Multi-cluster event loop: one shared heap drives every cluster in a
     :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
@@ -912,14 +946,24 @@ def simulate_fleet(requests: RequestSource, fleet, *,
 
     ``shadow_verify`` mirrors :func:`simulate_events`: a truthy value (or
     ``CHIRON_SHADOW_VERIFY=1``) audits every cluster's plane and the
-    shared ledger at control ticks and completion sweeps."""
+    shared ledger at control ticks and completion sweeps.
+
+    ``telemetry`` mirrors :func:`simulate_events` too: one shared
+    :class:`repro.obs.FlightRecorder` spans the fleet — clusters are
+    registered under their fleet names, and tier-3 placement actions
+    (migrations, hand-backs, drains) land in the decision ledger
+    alongside every cluster's own Chiron actions."""
     from repro.analysis.shadow import resolve as _shadow_resolve
+    from repro.obs.recorder import resolve as _obs_resolve
     shadow = _shadow_resolve(shadow_verify)
+    rec = _obs_resolve(telemetry)
     cursor = _RequestCursor(requests)
     clusters = list(fleet.clusters)
     by_sim = {id(fc.cluster): fc for fc in clusters}
     t = 0.0
     use_memo = not reference
+    if rec is not None:
+        fleet.obs = rec
     for fc in clusters:
         fc.cluster.event_mode = True
         fc.cluster.now = 0.0
@@ -928,13 +972,17 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         if reference:
             fc.cluster.vec_min = 1 << 30
             fc.queue = ReferenceGlobalQueue()   # object-queue baseline
+        if rec is not None:
+            rec.register_cluster(fc.cluster, fc.name)
+            fc.cluster.obs = rec
+            fc.controller.obs = rec
         _warm_start(fc.controller, fc.cluster, t, warm_start)
         fc.cluster.new_loading = [i for i in fc.cluster.instances
                                   if i.state == InstanceState.LOADING]
 
     heap: list = []                  # (time, kind, seq, payload, epoch)
     ev_seq = itertools.count()
-    timeline: List[TimelinePoint] = []
+    timeline = Timeline()
     next_control = 0.0
     next_place = fleet.placer.interval
     control_parked = False
@@ -991,6 +1039,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
         toks = n_i = n_m = n_b = chips = q_i = q_b = 0
+        qi_m: Dict[str, int] = {}
+        qb_m: Dict[str, int] = {}
         for fc in clusters:
             toks += fc.cluster.take_tokens()
             i, m, b = fc.cluster.counts_by_type()
@@ -998,11 +1048,17 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             n_m += m
             n_b += b
             chips += fc.cluster.used_chips()
-            q_i += fc.queue.n_interactive
-            q_b += fc.queue.n_batch
+            q = fc.queue
+            q_i += q.n_interactive
+            q_b += q.n_batch
+            for mdl in q.interactive_models():
+                qi_m[mdl] = qi_m.get(mdl, 0) + q.n_interactive_for(mdl)
+            for mdl in q.batch_models():
+                qb_m[mdl] = qb_m.get(mdl, 0) + q.n_batch_for(mdl)
         rate = toks / max(now - last_sample_t, 1e-9)
-        timeline.append(TimelinePoint(now, n_i, n_m, n_b, chips,
-                                      q_i, q_b, rate))
+        timeline.append_sample(now, n_i, n_m, n_b, chips, q_i, q_b, rate,
+                               q_interactive_by_model=qi_m,
+                               q_batch_by_model=qb_m)
         last_sample_t = now
         next_timeline = now + timeline_every
 
@@ -1168,6 +1224,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                                     next(ev_seq), inst, 0))
                 post += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
+                if rec is not None:
+                    rec.record_cluster_tick(t, fc.cluster, fc.queue)
             quiescent = (pre == post and pending_net == 0
                          and all(len(fc.queue) == 0
                                  and fc.cluster.total_running == 0
@@ -1268,6 +1326,11 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             shadow.verify_cluster(fc.cluster)
             shadow.verify_queue(fc.queue)
         shadow.verify_ledger(cursor.ledger, cursor.all)
+    if rec is not None:
+        fleet.obs = None
+        for fc in clusters:
+            fc.cluster.obs = None
+            fc.controller.obs = None
     stats = fleet.finalize()
     return RunResult(
         requests=cursor.all_requests(), timeline=timeline,
@@ -1282,7 +1345,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         migrations=fleet.migrations, handbacks=fleet.handbacks,
         egress_bytes=fleet.egress_bytes,
         egress_cost_usd=fleet.egress_cost_usd,
-        ledger=cursor.ledger)
+        ledger=cursor.ledger, telemetry=rec)
 
 
 def default_perf_factory(**perf_kw) -> Callable[[str], PerfModel]:

@@ -1,0 +1,335 @@
+"""Flight recorder: decision-ledger equivalence, deterministic span
+sampling, exporter round-trips, gating, and the telemetry overhead
+guard.
+
+The correctness bar mirrors tests/test_ledger.py's decision-equivalence
+suite: on seeded scenarios the recorder must be a *passive* observer —
+telemetry-on runs bit-identical to telemetry-off — while its decision
+ledger alone reconstructs the run's scale-action totals and the
+per-type instance timeline exactly (replay equivalence).
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.obs import FlightRecorder, resolve
+from repro.obs.export import to_jsonl, to_perfetto, to_prometheus
+from repro.obs.recorder import (HANDBACK, KIND_NAMES, MIGRATE, PROVISION,
+                                RETIRE)
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController
+from repro.sim.metrics import Timeline, TimelinePoint
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (default_perf_factory, simulate,
+                                 simulate_events, simulate_fleet)
+
+
+def _run(name, seed=7, *, n=0, telemetry=None):
+    trace, kw = build_trace(name, n_requests=n, seed=seed)
+    cluster = SimCluster(default_perf_factory(), max_chips=400)
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    return simulate_events(trace, ctrl, cluster, max_time=kw["max_time"],
+                           warm_start=2, failures=kw.get("failures"),
+                           degradations=kw.get("degradations"),
+                           telemetry=telemetry)
+
+
+def _run_fleet(name, seed=7, *, n=600, telemetry=None):
+    trace, kw = build_trace(name, n_requests=n, seed=seed)
+    return simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                          warm_start=1, telemetry=telemetry)
+
+
+def _fingerprint(res):
+    return (res.scale_ups, res.scale_downs, res.peak_chips, res.n_events,
+            res.failures, res.degradations, res.duration,
+            res.chip_seconds,
+            tuple((p.t, p.n_interactive, p.n_mixed, p.n_batch, p.chips,
+                   p.q_interactive, p.q_batch) for p in res.timeline))
+
+
+# --------------------------------------------------------- passive observer
+@pytest.mark.parametrize("scenario", ["diurnal", "multi_model_fleet"])
+def test_telemetry_off_bit_identical(scenario):
+    off = _run(scenario, telemetry=False)
+    on = _run(scenario, telemetry=True)
+    assert off.telemetry is None
+    assert on.telemetry is not None
+    assert _fingerprint(off) == _fingerprint(on)
+
+
+# -------------------------------------------------------- replay equivalence
+@pytest.mark.parametrize("scenario",
+                         ["diurnal", "multi_model_fleet",
+                          "instance_failures"])
+def test_replay_reconstructs_scale_actions(scenario):
+    res = _run(scenario, telemetry=True)
+    rep = res.telemetry.replay()
+    assert rep["scale_ups"] == res.scale_ups
+    assert rep["scale_downs"] == res.scale_downs
+    assert rep["failures"] == res.failures
+    assert rep["degradations"] == res.degradations
+
+
+@pytest.mark.parametrize("scenario", ["diurnal", "multi_model_fleet",
+                                      "instance_failures"])
+def test_replay_rebuilds_instance_timeline(scenario):
+    res = _run(scenario, telemetry=True)
+    tl = res.timeline
+    counts = res.telemetry.replay_instance_counts(tl.col("t"))
+    assert (counts[:, 0] == tl.col("n_interactive")).all()
+    assert (counts[:, 1] == tl.col("n_mixed")).all()
+    assert (counts[:, 2] == tl.col("n_batch")).all()
+
+
+def test_fleet_replay_multi_region():
+    res = _run_fleet("multi_region", telemetry=True)
+    rec = res.telemetry
+    rep = rec.replay()
+    assert rep["scale_ups"] == res.scale_ups
+    assert rep["scale_downs"] == res.scale_downs
+    assert rep["migrations"] == res.migrations
+    assert rep["handbacks"] == res.handbacks
+    # all three regional clusters registered under their spec names and
+    # produced per-tick rows
+    assert set(rec.cluster_names) == {"us-central", "eu-west", "ap-south"}
+    assert set(np.unique(rec.cticks.col("cluster"))) == {0, 1, 2}
+    # decision rows carry the cluster they fired on
+    kinds = rec.decisions.col("kind")
+    assert (kinds == PROVISION).sum() == res.scale_ups
+    assert (kinds == RETIRE).sum() == res.scale_downs
+    if res.migrations:
+        assert (kinds == MIGRATE).sum() == res.migrations
+    if res.handbacks:
+        sel = kinds == HANDBACK
+        assert int(rec.decisions.col("count")[sel].sum()) == res.handbacks
+        # hand-backs name a destination peer
+        assert (rec.decisions.col("peer")[sel] >= 0).all()
+
+
+def test_decision_timeline_is_ordered_and_labelled():
+    res = _run("burst_spikes", telemetry=True)
+    rec = res.telemetry
+    t = rec.decisions.col("t")
+    assert (np.diff(t) >= 0).all()
+    kinds = rec.decisions.col("kind")
+    assert set(np.unique(kinds)).issubset(set(range(len(KIND_NAMES))))
+    # provisions report the chip delta they caused
+    sel = kinds == PROVISION
+    assert (rec.decisions.col("chips_after")[sel]
+            > rec.decisions.col("chips_before")[sel]).all()
+
+
+# ------------------------------------------------------------ span sampling
+def test_span_sampling_deterministic():
+    a = _run("diurnal", telemetry=FlightRecorder(span_sample=0.5,
+                                                 span_seed=3)).telemetry
+    b = _run("diurnal", telemetry=FlightRecorder(span_sample=0.5,
+                                                 span_seed=3)).telemetry
+    for name in ("t", "row", "event"):
+        assert (a.spans.col(name) == b.spans.col(name)).all()
+    # instance ids draw from a process-global counter, so they shift
+    # between runs — but the assignment *pattern* must be identical
+    _, ia = np.unique(a.spans.col("instance"), return_inverse=True)
+    _, ib = np.unique(b.spans.col("instance"), return_inverse=True)
+    assert (ia == ib).all()
+    # a different seed samples a different subset of rows
+    c = _run("diurnal", telemetry=FlightRecorder(span_sample=0.5,
+                                                 span_seed=4)).telemetry
+    assert set(np.unique(a.spans.col("row"))) \
+        != set(np.unique(c.spans.col("row")))
+    # sampled() is the verdict the hot path applied
+    rows_a = set(np.unique(a.spans.col("row")).tolist())
+    assert all(a.sampled(r) for r in rows_a)
+    assert 0 < a.spans.n < c.spans.n + a.spans.n  # both non-empty
+
+
+def test_span_sample_full_coverage():
+    res = _run("diurnal", telemetry=FlightRecorder(span_sample=1.0))
+    rec = res.telemetry
+    led = res.ledger
+    # every request that ever ran produced at least one admit span
+    ran = set(np.flatnonzero(~np.isnan(led.first_token_time)).tolist())
+    spanned = set(np.unique(rec.spans.col("row")).tolist())
+    assert ran <= spanned
+    # half-rate sampling keeps roughly half (deterministic hash, not RNG)
+    half = _run("diurnal",
+                telemetry=FlightRecorder(span_sample=0.5)).telemetry
+    frac = len(np.unique(half.spans.col("row"))) / max(len(spanned), 1)
+    assert 0.3 < frac < 0.7
+
+
+# ---------------------------------------------------------------- exporters
+def test_jsonl_roundtrip_and_cli(tmp_path, capsys):
+    res = _run("multi_model_fleet", telemetry=True)
+    rec = res.telemetry
+    path = tmp_path / "run.jsonl"
+    n_lines = to_jsonl(res, path)
+    lines = [json.loads(s) for s in path.read_text().splitlines()]
+    assert len(lines) == n_lines
+    assert lines[0]["kind"] == "meta"
+    assert lines[0]["scale_ups"] == res.scale_ups
+    by_kind = {}
+    for row in lines:
+        by_kind.setdefault(row["kind"], []).append(row)
+    assert len(by_kind["signal"]) == rec.signals.n
+    assert len(by_kind["cluster"]) == rec.cticks.n
+    assert len(by_kind["decision"]) == rec.decisions.n
+    assert len(by_kind["timeline"]) == len(res.timeline)
+    # decisions decode their vocabularies
+    acts = {r["action"] for r in by_kind["decision"]}
+    assert acts <= set(KIND_NAMES)
+    # timeline rows carry the per-model queue-depth split
+    models = sorted({r["model"] for r in by_kind["signal"]})
+    assert all(sorted(r["q_by_model"]) == models
+               for r in by_kind["timeline"])
+    # the dashboard CLI consumes the export end-to-end
+    from repro.obs.__main__ import main
+    assert main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "control plane" in out
+    assert "decision ledger" in out
+    assert "request waterfalls" in out
+    for m in models:
+        assert f"model {m}" in out
+    # --model filters to one dashboard
+    assert main([str(path), "--model", models[0],
+                 "--waterfalls", "3"]) == 0
+    out = capsys.readouterr().out
+    assert f"model {models[0]}" in out
+    assert f"model {models[1]}" not in out
+
+
+def test_perfetto_schema(tmp_path):
+    res = _run("diurnal", telemetry=True)
+    path = tmp_path / "trace.json"
+    doc = to_perfetto(res, path)
+    assert json.loads(path.read_text()) == doc
+    events = doc["traceEvents"]
+    assert events, "empty trace"
+    phases = {e["ph"] for e in events}
+    assert phases <= {"M", "C", "X"}
+    for e in events:
+        if e["ph"] == "X":
+            assert e["dur"] >= 0.0
+            assert e["ts"] >= 0.0
+            assert e["name"] in ("queued", "prefill", "decode", "exec")
+        elif e["ph"] == "C":
+            assert e["name"] in ("queue_depth", "chips")
+    # one queued span per sampled request
+    n_queued = sum(e["ph"] == "X" and e["name"] == "queued"
+                   for e in events)
+    assert n_queued == len(np.unique(res.telemetry.spans.col("row")))
+
+
+def test_prometheus_text(tmp_path):
+    res = _run("diurnal", telemetry=True)
+    text = to_prometheus(res)
+    assert "# TYPE chiron_scale_actions_total counter" in text
+    assert f'chiron_scale_actions_total{{action="scale_ups"}} ' \
+        f"{res.scale_ups}" in text
+    assert "chiron_slo_attainment" in text
+    assert "chiron_completion_rate" in text
+    assert "chiron_queue_depth" in text
+    assert "chiron_chips_in_use" in text
+    path = tmp_path / "metrics.prom"
+    to_prometheus(res, path)
+    assert path.read_text() == text
+
+
+def test_export_requires_telemetry():
+    res = _run("diurnal", n=50, telemetry=False)
+    with pytest.raises(ValueError, match="telemetry"):
+        to_prometheus(res)
+
+
+# ------------------------------------------------------------------- gating
+def test_resolve_env_gating(monkeypatch):
+    monkeypatch.delenv("CHIRON_TELEMETRY", raising=False)
+    assert resolve(None) is None
+    assert resolve(False) is None
+    assert isinstance(resolve(True), FlightRecorder)
+    rec = FlightRecorder(span_sample=0.25)
+    assert resolve(rec) is rec
+    monkeypatch.setenv("CHIRON_TELEMETRY", "1")
+    assert isinstance(resolve(None), FlightRecorder)
+    assert resolve(False) is None
+    for off in ("", "0", "false", "no"):
+        monkeypatch.setenv("CHIRON_TELEMETRY", off)
+        assert resolve(None) is None
+
+
+def test_fixed_tick_rejects_telemetry():
+    trace, kw = build_trace("trace_replay", n_requests=40, seed=1)
+    cluster = SimCluster(default_perf_factory(), max_chips=64)
+    with pytest.raises(ValueError, match="event"):
+        simulate(trace, ChironController(), cluster, engine="fixed",
+                 max_time=kw["max_time"], telemetry=True)
+
+
+# ------------------------------------------------------- columnar timeline
+def test_timeline_columnar_backcompat():
+    res = _run("multi_model_fleet", telemetry=False)
+    tl = res.timeline
+    assert isinstance(tl, Timeline)
+    assert len(tl) == tl.n > 0
+    p = tl[-1]
+    assert isinstance(p, TimelinePoint)
+    assert p.t == tl.col("t")[-1]
+    assert [q.t for q in tl[1:3]] == list(tl.col("t")[1:3])
+    assert len(list(iter(tl))) == len(tl)
+    with pytest.raises(IndexError):
+        tl[len(tl)]
+    # per-model depth columns tile the aggregate columns
+    models = tl.queue_models()
+    assert models
+    qi = sum(tl.q_interactive_for(m).astype(np.int64) for m in models)
+    qb = sum(tl.q_batch_for(m).astype(np.int64) for m in models)
+    assert (qi == tl.col("q_interactive")).all()
+    assert (qb == tl.col("q_batch")).all()
+    # unknown models read as empty lanes, not errors
+    assert (tl.q_interactive_for("no-such-model") == 0).all()
+
+
+def test_instance_counts_at_matches_object_view():
+    res = _run("diurnal", n=300, telemetry=False)
+    tl = res.timeline
+    for p in (tl[0], tl[len(tl) // 2], tl[-1]):
+        assert res.instance_counts_at(p.t) \
+            == (p.n_interactive, p.n_mixed, p.n_batch)
+
+
+# ----------------------------------------------------------- overhead guard
+def test_telemetry_overhead_guard():
+    """Telemetry-on must stay within a few percent of telemetry-off on
+    the diurnal scenario. The committed benchmark
+    (BENCH_scenarios.json: ``diurnal_telemetry``) pins the <5% events/s
+    acceptance number under best-of-repeats; this in-test guard uses
+    CPU time with a wider margin so CI noise cannot flake it while an
+    order-of-magnitude regression (e.g. un-staged per-row numpy writes)
+    still fails fast."""
+    import time
+
+    def timed(telemetry):
+        trace, kw = build_trace("diurnal", n_requests=3000, seed=7)
+        cluster = SimCluster(default_perf_factory(), max_chips=400)
+        t0 = time.process_time()
+        simulate_events(trace, ChironController(), cluster,
+                        max_time=kw["max_time"], warm_start=2,
+                        telemetry=telemetry)
+        return time.process_time() - t0
+
+    best_on = best_off = math.inf
+    for i in range(6):
+        if i % 2:
+            best_off = min(best_off, timed(False))
+            best_on = min(best_on, timed(True))
+        else:
+            best_on = min(best_on, timed(True))
+            best_off = min(best_off, timed(False))
+    assert best_on <= best_off * 1.25, \
+        f"telemetry overhead {best_on / best_off - 1:.1%} (limit 25%)"

@@ -1,0 +1,52 @@
+"""Phase-attribution smoke test for ``scripts/profile_sim.py``.
+
+Runs the profiler harness in ``--phases --json`` mode as a subprocess
+(the same way CI and trend tooling invoke it) and checks the
+machine-readable contract: the six event-loop phases are present, their
+wall-clock laps are positive, and the loop total stays within the
+documented envelope of the end-to-end wall (lap overhead is two clock
+reads per phase, so the sum can never dwarf the wall it decomposes).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPT = os.path.join(ROOT, "scripts", "profile_sim.py")
+
+PHASES = ("arrivals", "heap_drain", "control", "routing", "sweep",
+          "sampling")
+
+
+def _run_json(*argv):
+    out = subprocess.run(
+        [sys.executable, SCRIPT, *argv, "--json"],
+        capture_output=True, text=True, check=True, cwd=ROOT)
+    return json.loads(out.stdout)
+
+
+@pytest.mark.parametrize("scenario", ["diurnal"])
+def test_phases_json_contract(scenario):
+    rep = _run_json(scenario, "-n", "400", "--phases")
+    assert rep["scenario"] == scenario
+    assert rep["events"] > 0
+    assert rep["wall_s"] > 0
+    assert rep["events_per_s"] == pytest.approx(
+        rep["events"] / rep["wall_s"])
+    assert 0.0 <= rep["completion_rate"] <= 1.0
+    phases = rep["phases"]
+    assert set(phases) == set(PHASES)
+    assert all(v >= 0.0 for v in phases.values())
+    total = sum(phases.values())
+    # the six laps tile the loop body: nonempty, and bounded by the
+    # end-to-end wall plus lap overhead slack
+    assert 0.0 < total <= rep["wall_s"] * 1.5
+
+
+def test_plain_json_has_no_phases():
+    rep = _run_json("diurnal", "-n", "200")
+    assert "phases" not in rep
+    assert rep["events"] > 0
