@@ -190,7 +190,10 @@ def run():
                 res = simulate_fleet(trace, kw["fleet"](),
                                      max_time=kw["max_time"], warm_start=1,
                                      failures=kw.get("failures"),
-                                     degradations=kw.get("degradations"))
+                                     degradations=kw.get("degradations"),
+                                     outages=kw.get("outages"),
+                                     flash_crowds=kw.get("flash_crowds"),
+                                     detector=kw.get("detector"))
             else:
                 cluster = SimCluster(default_perf_factory(),
                                      max_chips=MAX_CHIPS)
@@ -199,9 +202,16 @@ def run():
                 res = simulate_events(trace, ctrl, cluster,
                                       max_time=kw["max_time"], warm_start=2,
                                       failures=kw.get("failures"),
-                                      degradations=kw.get("degradations"))
+                                      degradations=kw.get("degradations"),
+                                      outages=kw.get("outages"),
+                                      flash_crowds=kw.get("flash_crowds"),
+                                      detector=kw.get("detector"))
             wall = min(wall, time.perf_counter() - t0)
         extra = {}
+        recov = res.recovery_metrics()
+        if recov:
+            extra["ttr_s"] = round(recov[0]["time_to_recover_s"], 1)
+            extra["dip"] = round(recov[0]["max_attainment_dip"], 3)
         if res.failures:
             extra["failures"] = res.failures
         if res.degradations:
@@ -233,6 +243,17 @@ def run():
             "failures": res.failures,
             "degradations": res.degradations,
         }
+        if recov:
+            # chaos scenarios: first-shock recovery scorecard feeds the
+            # bench_trend gate (time-to-recover regressions fail)
+            sh = recov[0]
+            jrow["skipped_injections"] = res.skipped_injections
+            jrow["time_to_detect_s"] = round(sh["time_to_detect_s"], 2)
+            jrow["time_to_recover_s"] = round(sh["time_to_recover_s"], 2)
+            jrow["max_attainment_dip"] = round(sh["max_attainment_dip"], 4)
+            jrow["window_attainment"] = round(sh["window_attainment"], 4)
+            jrow["window_by_tenant"] = {
+                t: round(v, 4) for t, v in sh["window_by_tenant"].items()}
         if res.clusters:
             jrow["migrations"] = res.migrations
             jrow["handbacks"] = res.handbacks

@@ -8,10 +8,15 @@ threshold** (default 20%). The replay scenarios (``trace_replay``,
 ``million_replay``) are additionally gated on absolute **wall-clock**
 (>20% slower fails) — they are the scale points the columnar hot path is
 sized for, and events/s alone can mask a wall regression if the event
-count drifts. New scenarios (present only in the new file) and removed
-ones are reported but never fail the gate; SLO/completion changes are
-surfaced for eyeballs, not gated (they are workload properties, not
-perf).
+count drifts. The chaos scenarios (``zone_outage``, ``flash_crowd``)
+carry recovery fields (``time_to_detect_s``, ``time_to_recover_s``,
+``max_attainment_dip``) and are additionally gated on
+**time-to-recover**: a run that takes >20% longer (beyond a one-bin
+30 s jitter floor) to bring attainment back within epsilon of its
+pre-shock baseline — or that stops recovering at all — fails. New
+scenarios (present only in the new file) and removed ones are reported
+but never fail the gate; SLO/completion changes are surfaced for
+eyeballs, not gated (they are workload properties, not perf).
 
 Usage::
 
@@ -61,7 +66,9 @@ def _validate(doc, label: str) -> dict:
                              f"({r['scenario']}): 'events_per_s' must be "
                              "a number")
         for k in ("wall_s", "slo_attainment", "completion_rate",
-                  "telemetry_overhead_frac", "telemetry_events_per_s"):
+                  "telemetry_overhead_frac", "telemetry_events_per_s",
+                  "time_to_detect_s", "time_to_recover_s",
+                  "max_attainment_dip", "skipped_injections"):
             v = r.get(k)
             if v is not None and (isinstance(v, bool)
                                   or not isinstance(v, (int, float))):
@@ -119,6 +126,24 @@ def main(argv) -> int:
             if dwall > threshold:
                 note += f" WALL REGRESSION ({dwall:+.1%})"
                 failures.append((name, -dwall))
+        # recovery gate (chaos scenarios): -1.0 means "never recovered",
+        # 0.0 means "attainment never left the band" — both are valid
+        # states, but old-recovered -> new-not-recovered always fails,
+        # and a >threshold slowdown past a one-bin jitter floor fails
+        o_ttr, n_ttr = o.get("time_to_recover_s"), n.get("time_to_recover_s")
+        if o_ttr is not None and n_ttr is not None:
+            if n_ttr < 0.0 and o_ttr >= 0.0:
+                note += " RECOVERY REGRESSION (no longer recovers)"
+                failures.append((name, -1.0))
+            elif n_ttr >= 0.0 and o_ttr >= 0.0 \
+                    and n_ttr > max(o_ttr * (1.0 + threshold),
+                                    o_ttr + 30.0):
+                dttr = n_ttr / max(o_ttr, 1e-9) - 1.0
+                note += f" RECOVERY REGRESSION (ttr {o_ttr:.0f}s -> " \
+                        f"{n_ttr:.0f}s)"
+                failures.append((name, -dttr))
+            elif n_ttr != o_ttr:
+                note += f" ttr: {o_ttr} -> {n_ttr}"
         for k in ("slo_attainment", "completion_rate"):
             if abs(n.get(k, 1.0) - o.get(k, 1.0)) > 1e-6:
                 note += f" {k}: {o.get(k)} -> {n.get(k)}"

@@ -24,6 +24,8 @@ import time
 FAST_TESTS = [
     "tests/test_analysis.py",        # invariant auditor rules + clean tree
     "tests/test_autoscalers.py",
+    "tests/test_chaos.py",           # zone outages, flash crowds, noisy
+                                     # detection, recovery metrics, tenants
     "tests/test_configs.py",
     "tests/test_event_sim.py",
     "tests/test_fleet.py",           # multi-cluster placement/routing plane,

@@ -43,22 +43,26 @@ _NAN = float("nan")
 _INF = float("inf")
 
 # ---------------------------------------------------------------- codes
-# int8 decision kinds (stable: rows round-trip through JSONL exports)
+# int8 decision kinds (stable: rows round-trip through JSONL exports;
+# new kinds append at the end so existing codes never shift)
 (PROVISION, RETIRE, FAIL, DEGRADE, RECOVER, EVICT, MIGRATE, HANDBACK,
- DRAIN) = range(9)
+ DRAIN, OUTAGE, RESTORE, FLASH) = range(12)
 KIND_NAMES = ("provision", "retire", "fail", "degrade", "recover",
-              "evict", "migrate", "handback", "drain")
+              "evict", "migrate", "handback", "drain", "outage",
+              "restore", "flash")
 
 # int8 decision reasons: which control-law term fired. BOOTSTRAP covers
 # warm starts and the controller's keep-a-foothold provisions (step 0);
 # IBP_* are Algorithm 1's band exits, BBP_* Algorithm 2's branches;
 # PREEMPT is interactive-over-batch eviction; INJECTED marks plan-driven
-# failures/degradations; PLACEMENT marks fleet-tier residency moves.
+# failures/degradations; PLACEMENT marks fleet-tier residency moves;
+# OUTAGE marks correlated zone-outage crashes and their staged restores;
+# FLASH marks a flash-crowd onset.
 (R_BOOTSTRAP, R_IBP_HIGH, R_IBP_LOW, R_BBP_ADD, R_BBP_IDLE, R_BBP_TRIM,
- R_PREEMPT, R_INJECTED, R_PLACEMENT) = range(9)
+ R_PREEMPT, R_INJECTED, R_PLACEMENT, R_OUTAGE, R_FLASH) = range(11)
 REASON_NAMES = ("bootstrap", "ibp_high", "ibp_low", "bbp_add",
                 "bbp_idle", "bbp_trim", "preempt", "injected",
-                "placement")
+                "placement", "outage", "flash")
 
 # int8 span events
 SPAN_ADMIT, SPAN_PREEMPT = 0, 1
@@ -227,7 +231,8 @@ class FlightRecorder:
                  "cluster_names", "_cluster_codes",
                  "model_names", "_model_codes",
                  "itype_names", "_itype_codes",
-                 "_ctx_reason", "_ctx_value", "_ctx_threshold")
+                 "_ctx_reason", "_ctx_value", "_ctx_threshold",
+                 "inj_reason")
 
     def __init__(self, *, span_sample: float = 0.25, span_seed: int = 0):
         self.signals = SignalColumns()
@@ -254,6 +259,10 @@ class FlightRecorder:
         self._ctx_reason = R_BOOTSTRAP
         self._ctx_value = _NAN
         self._ctx_threshold = _NAN
+        # injection-reason context: FAIL rows default to plan-driven
+        # crashes; the engines set R_OUTAGE around a correlated zone
+        # outage so each victim's row carries the term that fired
+        self.inj_reason = R_INJECTED
 
     # ------------------------------------------------------- vocabularies
     def register_cluster(self, cluster, name: str) -> int:
@@ -336,9 +345,35 @@ class FlightRecorder:
     def record_fail(self, cluster, now: float, inst,
                     chips_before: int, chips_after: int) -> None:
         self.decisions.append(now, self._cluster_code(cluster), FAIL,
-                              R_INJECTED, self._model_code(inst.model),
+                              self.inj_reason,
+                              self._model_code(inst.model),
                               self._itype_code(inst.itype), _NAN, _NAN,
                               chips_before, chips_after, -1, 1)
+
+    def record_outage(self, cluster, now: float, victims: int,
+                      withheld_chips: int) -> None:
+        """Correlated zone-outage onset: one row with the victim count
+        (``count``) and the chip budget withheld (``value``); each
+        victim's crash still lands as its own FAIL row (stamped
+        ``R_OUTAGE`` via ``inj_reason``)."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), OUTAGE,
+                              R_OUTAGE, -1, -1, float(withheld_chips),
+                              _NAN, chips, chips, -1, victims)
+
+    def record_restore(self, cluster, now: float, chips_back: int) -> None:
+        """One staged tranche of withheld outage capacity returning."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), RESTORE,
+                              R_OUTAGE, -1, -1, float(chips_back), _NAN,
+                              chips, chips, -1, 1)
+
+    def record_flash_crowd(self, cluster, now: float, model: str) -> None:
+        """Flash-crowd onset marker (the shock arrivals ride the trace)."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), FLASH,
+                              R_FLASH, self._model_code(model), -1, _NAN,
+                              _NAN, chips, chips, -1, 1)
 
     def record_degrade(self, cluster, now: float, inst,
                        factor: float) -> None:
@@ -477,6 +512,9 @@ class FlightRecorder:
             "migrations": int(counts[MIGRATE]),
             "handbacks": int(weights[kinds == HANDBACK].sum()),
             "drains": int(counts[DRAIN]),
+            "outages": int(counts[OUTAGE]),
+            "restores": int(counts[RESTORE]),
+            "flash_crowds": int(counts[FLASH]),
         }
 
     def replay_instance_counts(self, times) -> np.ndarray:

@@ -61,6 +61,8 @@ class Request:
     # originating region (multi-cluster fleets): the router measures
     # network latency / egress from here; None = single-region workload
     origin: Optional[str] = None
+    # paying tenant (per-tenant attainment rollups); None = single-tenant
+    tenant: Optional[str] = None
 
     # lifecycle
     state: RequestState = RequestState.QUEUED

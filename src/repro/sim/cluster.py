@@ -48,6 +48,7 @@ import enum
 import heapq
 import itertools
 import math
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -77,6 +78,36 @@ _STALLED_ITL = 1e12
 # health-EWMA ratio (observed ITL / healthy-model ITL) above which an
 # instance is suspected slow and routed around (slow-node degradation)
 SLOW_SUSPECT_RATIO = 1.8
+
+_HASH_SCALE = 1.0 / 4294967296.0     # uint32 hash -> [0, 1)
+
+
+@dataclass(frozen=True)
+class DetectorConfig:
+    """Noisy slow-node detector knobs (``SimCluster.detector``).
+
+    The detector sees one *observed* ITL-ratio sample per instance per
+    control tick — the ground-truth ``slow_factor`` corrupted by
+    multiplicative measurement noise and optional sample-level
+    false-positive / false-negative flips — and tests the window median
+    through the health EWMA. Detection therefore takes a few ticks and
+    can mis-fire, like a real control plane; the fluid-exact ratio is
+    never read by the detection path.
+
+    All randomness is a counter-based integer hash of (instance id,
+    sample index, seed): deterministic, replayable, and independent of
+    every seeded RNG stream in the engines, so detector noise can never
+    perturb victim draws or arrival sequences.
+    """
+    window: int = 5        # median window (samples = control ticks)
+    alpha: float = 0.5     # health-EWMA gain on the window median
+    noise: float = 0.1     # multiplicative measurement noise (+-10%)
+    fp_rate: float = 0.0   # P(healthy sample reads as slow)
+    fn_rate: float = 0.0   # P(slow sample reads as healthy)
+    seed: int = 0          # decorrelates the sample hash stream
+
+
+_DEFAULT_DETECTOR = DetectorConfig()
 
 # Mirror registries: ``SimInstance`` fluid scalar -> ``InstancePlane``
 # column kept in sync at every mutation site (directly, via
@@ -328,10 +359,13 @@ class SimInstance:
         self.created_at = now
         # slow-node degradation: ground-truth ITL inflation (set by the
         # injection event) and the *observed* health signal the control
-        # plane detects it with — an EWMA of observed-vs-model ITL ratio
-        # updated at control ticks. Routing avoids suspected instances.
+        # plane detects it with — an EWMA over the median of a ring
+        # buffer of noisy observed-ITL-ratio samples pushed at control
+        # ticks (see DetectorConfig). Routing avoids suspected instances.
         self.slow_factor = 1.0
         self.health_ewma = 1.0
+        self._obs_buf: List[float] = []   # noisy ITL-ratio sample window
+        self._obs_n = 0                   # samples drawn (hash counter)
         # O(1) aggregates over ``running`` (the routing/control hot path
         # queries these every pass; scanning the batch would be O(B))
         self._kv_tokens = 0.0        # fixed-tick: sum of ctx_tokens
@@ -465,14 +499,18 @@ class SimInstance:
         itl = self._itl_now(self.max_batch_size, max(self.mean_ctx(), 512.0))
         return spare / itl
 
-    def update_health(self, alpha: float = 0.5) -> None:
-        """EWMA the observed-vs-model ITL ratio (the detection signal for
-        slow-node degradation; called once per control tick). In the fluid
-        model the observed ITL is exactly ``model * slow_factor``, so the
-        ratio needs no second perf evaluation. Idle instances update too
-        (a health probe): routing refuses suspected instances, so without
-        this a drained victim could never clear its flag after recovery
-        and would strand healthy capacity forever.
+    def update_health(self, alpha: Optional[float] = None) -> None:
+        """Push one *noisy* observed-ITL-ratio sample and re-test health
+        (the detection signal for slow-node degradation; called once per
+        control tick). The sample is the ground-truth ``slow_factor``
+        corrupted by deterministic hash noise plus optional FP/FN flips
+        (``DetectorConfig``); the detector EWMAs the window **median**,
+        so detection lags injection by a few ticks and isolated flipped
+        samples are suppressed — the fluid-exact ratio is no longer read
+        by the detection path. Idle instances update too (a health
+        probe): routing refuses suspected instances, so without this a
+        drained victim could never clear its flag after recovery and
+        would strand healthy capacity forever.
 
         A flip of the *suspected* flag bumps the cluster route version:
         routing reads health only through that flag, and the positive
@@ -480,11 +518,35 @@ class SimInstance:
         version capturing every routing-visible change."""
         if not self.active:
             return
+        c = self._cluster
+        det = c.detector if c is not None else _DEFAULT_DETECTOR
+        n = self._obs_n = self._obs_n + 1
+        # counter-based integer hash (Knuth multiplicative) — one draw
+        # per (instance, sample index, seed); no RNG object, so sampling
+        # can never perturb the engines' seeded victim/arrival streams
+        h = ((self.id + 1) * 2654435761 + n * 40503
+             + (det.seed + 1) * 69069) & 0xFFFFFFFF
+        obs = self.slow_factor \
+            * (1.0 + det.noise * (2.0 * h * _HASH_SCALE - 1.0))
+        if det.fp_rate > 0.0 or det.fn_rate > 0.0:
+            h2 = (h * 2654435761 + 0x9E3779B9) & 0xFFFFFFFF
+            if self.slow_factor == 1.0:
+                if h2 * _HASH_SCALE < det.fp_rate:
+                    obs = SLOW_SUSPECT_RATIO * 1.25  # spurious slow read
+            elif h2 * _HASH_SCALE < det.fn_rate:
+                obs = 1.0                            # missed slow read
+        buf = self._obs_buf
+        if len(buf) < det.window:
+            buf.append(obs)
+        else:
+            buf[n % det.window] = obs
+        stat = sorted(buf)[len(buf) // 2]            # window median
+        a = det.alpha if alpha is None else alpha
         was = self.health_ewma > SLOW_SUSPECT_RATIO
-        self.health_ewma += alpha * (self.slow_factor - self.health_ewma)
+        self.health_ewma += a * (stat - self.health_ewma)
         if (self.health_ewma > SLOW_SUSPECT_RATIO) != was \
-                and self._cluster is not None:
-            self._cluster.route_version += 1
+                and c is not None:
+            c.route_version += 1
 
     @property
     def suspected_slow(self) -> bool:
@@ -1142,6 +1204,9 @@ class SimCluster:
         self.scale_downs = 0
         self.failures = 0            # crash-injected removals (not scaling)
         self.degradations = 0        # slow-node injections (instance kept)
+        # noisy slow-node detector knobs (engines thread a per-run config
+        # through; tests/scenarios may assign directly before the run)
+        self.detector = _DEFAULT_DETECTOR
         self.chip_seconds = 0.0
         self.peak_chips = 0
         self._used_chips = 0         # maintained by provision/retire

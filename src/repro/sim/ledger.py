@@ -68,24 +68,27 @@ class RequestLedger:
 
     Workload columns (``arrival``, ``prompt_len``, ``output_len``,
     ``interactive``, ``ttft_slo``, ``itl_slo``, ``model_idx``,
-    ``origin_idx``) are immutable inputs; outcome columns
+    ``origin_idx``, ``tenant_idx``) are immutable inputs; outcome columns
     (``first_token_time``, ``finish_time``, ``tokens_generated``,
     ``state``, ``mean_itl``) are written by the event core via row id.
     """
 
     __slots__ = ("n", "arrival", "prompt_len", "output_len", "interactive",
                  "ttft_slo", "itl_slo", "model_idx", "origin_idx",
-                 "models", "origins", "first_token_time", "finish_time",
+                 "tenant_idx", "models", "origins", "tenants",
+                 "first_token_time", "finish_time",
                  "tokens_generated", "state", "mean_itl",
                  "_backing", "_cap")
 
     def __init__(self, n: int, *, models: Tuple[str, ...] = (),
-                 origins: Tuple[str, ...] = ()):
+                 origins: Tuple[str, ...] = (),
+                 tenants: Tuple[str, ...] = ()):
         self.n = n
         self._backing: Dict[str, np.ndarray] = {}
         self._cap = 0
         self.models = tuple(models)
         self.origins = tuple(origins)
+        self.tenants = tuple(tenants)
         self.arrival = np.zeros(n, dtype=np.float64)
         self.prompt_len = np.zeros(n, dtype=np.int64)
         self.output_len = np.zeros(n, dtype=np.int64)
@@ -94,6 +97,7 @@ class RequestLedger:
         self.itl_slo = np.zeros(n, dtype=np.float64)
         self.model_idx = np.zeros(n, dtype=np.int32)
         self.origin_idx = np.zeros(n, dtype=np.int32)
+        self.tenant_idx = np.zeros(n, dtype=np.int32)
         self.first_token_time = np.full(n, np.nan)
         self.finish_time = np.full(n, np.nan)
         self.tokens_generated = np.zeros(n, dtype=np.int64)
@@ -106,7 +110,8 @@ class RequestLedger:
         """Ledger over an arrival-sorted :class:`~repro.sim.workload.Trace`
         — row i is trace row i. The workload columns are shared views
         (the trace is immutable by convention), outcome columns fresh."""
-        led = cls(trace.n, models=trace.models, origins=trace.origins)
+        led = cls(trace.n, models=trace.models, origins=trace.origins,
+                  tenants=getattr(trace, "tenants", ()))
         led.arrival = trace.arrival
         led.prompt_len = trace.prompt_len
         led.output_len = trace.output_len
@@ -115,6 +120,9 @@ class RequestLedger:
         led.itl_slo = trace.itl_slo
         led.model_idx = trace.model_idx
         led.origin_idx = trace.origin_idx
+        tidx = getattr(trace, "tenant_idx", None)
+        if tidx is not None:
+            led.tenant_idx = tidx
         return led
 
     @classmethod
@@ -128,6 +136,8 @@ class RequestLedger:
         mseen: Dict[str, int] = {}
         origins: List[str] = []
         oseen: Dict[str, int] = {}
+        tenants: List[str] = []
+        tseen: Dict[str, int] = {}
         led = cls(len(reqs))
         for i, r in enumerate(reqs):
             if assign_rows:
@@ -143,6 +153,12 @@ class RequestLedger:
                     oi = oseen[r.origin] = len(origins)
                     origins.append(r.origin)
                 led.origin_idx[i] = oi
+            if r.tenant is not None:
+                ti = tseen.get(r.tenant)
+                if ti is None:
+                    ti = tseen[r.tenant] = len(tenants)
+                    tenants.append(r.tenant)
+                led.tenant_idx[i] = ti
             led.arrival[i] = r.arrival_time
             led.prompt_len[i] = r.prompt_len
             led.output_len[i] = r.output_len
@@ -159,6 +175,7 @@ class RequestLedger:
                 led.mean_itl[i] = sum(r.itl_samples) / len(r.itl_samples)
         led.models = tuple(models)
         led.origins = tuple(origins)
+        led.tenants = tuple(tenants)
         return led
 
     # column -> (dtype, fill value for unwritten outcome cells)
@@ -167,6 +184,7 @@ class RequestLedger:
         ("output_len", np.int64, 0), ("interactive", bool, False),
         ("ttft_slo", np.float64, 0.0), ("itl_slo", np.float64, 0.0),
         ("model_idx", np.int32, 0), ("origin_idx", np.int32, 0),
+        ("tenant_idx", np.int32, 0),
         ("first_token_time", np.float64, np.nan),
         ("finish_time", np.float64, np.nan),
         ("tokens_generated", np.int64, 0), ("state", np.int8, 0),
@@ -213,6 +231,8 @@ class RequestLedger:
         base = self.n
         mremap = self._merge_vocab("models", trace.models)
         oremap = self._merge_vocab("origins", trace.origins)
+        tremap = self._merge_vocab("tenants",
+                                   getattr(trace, "tenants", ()))
         self._reserve(trace.n)
         b = self._backing
         hi = base + trace.n
@@ -225,6 +245,10 @@ class RequestLedger:
         b["model_idx"][base:hi] = mremap[trace.model_idx]
         b["origin_idx"][base:hi] = oremap[trace.origin_idx] \
             if len(oremap) else trace.origin_idx
+        tidx = getattr(trace, "tenant_idx", None)
+        if tidx is None:
+            tidx = np.zeros(trace.n, dtype=np.int32)
+        b["tenant_idx"][base:hi] = tremap[tidx] if len(tremap) else tidx
         # outcome cells keep their fill values (nan / 0)
         self.n = hi
         self._expose()

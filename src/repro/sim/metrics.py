@@ -163,6 +163,17 @@ class Timeline:
         return self._point(i)
 
 
+@dataclass(frozen=True)
+class Shock:
+    """One injected chaos window (zone outage / flash crowd) carried on
+    ``RunResult.shocks`` — :meth:`RunResult.recovery_metrics` scores the
+    run's behaviour per shock."""
+    kind: str            # "outage" | "flash_crowd"
+    t0: float            # injection onset
+    t1: float            # end of injection (capacity restored / ramp over)
+    label: str = ""      # victim cluster name or the shock model
+
+
 @dataclass
 class ClusterStats:
     """Per-cluster rollup of a fleet run (attributed at completion time —
@@ -217,6 +228,10 @@ class RunResult:
     failures: int = 0               # injected instance crashes
     n_events: int = 0               # event-core loop events (0: fixed tick)
     degradations: int = 0           # injected slow-node events
+    skipped_injections: int = 0     # chaos events with no eligible victim
+    # injected chaos windows (outages / flash crowds) this run carried;
+    # recovery_metrics() scores each one
+    shocks: List[Shock] = field(default_factory=list)
     # columnar outcome store (event-core runs); aggregate metrics reduce
     # over it vectorized instead of walking ``requests``
     ledger: Optional[RequestLedger] = None
@@ -388,6 +403,115 @@ class RunResult:
             last = (p.n_interactive, p.n_mixed, p.n_batch)
         return last
 
+    def recovery_metrics(self, *, bin_s: float = 30.0,
+                         epsilon: float = 0.02,
+                         baseline_window: float = 600.0) -> List[Dict]:
+        """Per-shock recovery scorecard, vectorized off the ledger and
+        timeline columns. For each :class:`Shock` in ``shocks``:
+
+        - ``baseline_attainment``: SLO attainment over arrivals in the
+          ``baseline_window`` seconds before onset.
+        - ``max_attainment_dip``: baseline minus the worst ``bin_s``
+          attainment bin at/after onset (0.0 when attainment held).
+        - ``time_to_recover_s``: seconds from onset until binned
+          attainment is back within ``epsilon`` of baseline *and stays
+          there* (end of the last populated bin below the band); 0.0
+          when attainment never left the band, -1.0 when it has not
+          recovered by end of run.
+        - ``time_to_detect_s``: seconds from onset until the control
+          plane visibly reacts — the first timeline sample where the
+          live-instance count rises above its running minimum since
+          onset (re-provisioning after an outage) or above the onset
+          count (scale-out into a flash crowd); -1.0 if it never does.
+        - attainment over arrivals inside the shock window [t0, t1]:
+          overall, per SLO class (interactive / batch), and per tenant
+          when the trace carries a tenant column.
+
+        Needs the columnar ledger (event-engine runs); returns ``[]``
+        for ledger-less or shock-free runs."""
+        led = self.ledger
+        if led is None or not led.n or not self.shocks:
+            return []
+        arrival = led.arrival
+        met = led.slo_met_mask().astype(np.float64)
+        nbins = max(int(max(self.duration, float(arrival[-1])) / bin_s)
+                    + 1, 1)
+        bins = np.minimum((arrival / bin_s).astype(np.int64), nbins - 1)
+        tot = np.bincount(bins, minlength=nbins)
+        hit = np.bincount(bins, weights=met, minlength=nbins)
+        have = tot > 0
+        att = np.ones(nbins)
+        att[have] = hit[have] / tot[have]
+        interactive = led.interactive.astype(bool)
+        tl = self.timeline
+        if isinstance(tl, Timeline) and len(tl):
+            tl_t = tl.col("t")
+            tl_n = (tl.col("n_interactive").astype(np.int64)
+                    + tl.col("n_mixed") + tl.col("n_batch"))
+        else:
+            tl_t = np.empty(0)
+            tl_n = np.empty(0, dtype=np.int64)
+
+        def _att(mask: np.ndarray) -> float:
+            return float(met[mask].mean()) if mask.any() else 1.0
+
+        out: List[Dict] = []
+        for shock in self.shocks:
+            t0, t1 = shock.t0, shock.t1
+            pre = (arrival >= t0 - baseline_window) & (arrival < t0)
+            baseline = _att(pre)
+            b0 = min(int(t0 / bin_s), nbins)
+            post_have = have.copy()
+            post_have[:b0] = False
+            vals = att[post_have]
+            max_dip = float(max(0.0, baseline - vals.min())) \
+                if vals.size else 0.0
+            low = post_have & (att < baseline - epsilon)
+            if not low.any():
+                ttr = 0.0
+            else:
+                last_low = int(np.nonzero(low)[0][-1])
+                last_pop = int(np.nonzero(have)[0][-1])
+                # still below the band in the final populated bin: the
+                # run ended before attainment came back
+                ttr = -1.0 if last_low >= last_pop \
+                    else float((last_low + 1) * bin_s - t0)
+            ttd = -1.0
+            if tl_t.size:
+                i0 = int(np.searchsorted(tl_t, t0, side="right")) - 1
+                n0 = int(tl_n[i0]) if i0 >= 0 else 0
+                post = np.nonzero(tl_t > t0)[0]
+                if post.size:
+                    seg = tl_n[post]
+                    runmin = np.minimum.accumulate(np.minimum(seg, n0))
+                    react = np.nonzero(seg > runmin)[0]
+                    if react.size:
+                        ttd = float(tl_t[post[react[0]]] - t0)
+            win = (arrival >= t0) & (arrival <= t1)
+            by_tenant: Dict[str, float] = {}
+            tenants = getattr(led, "tenants", ())
+            if tenants and win.any():
+                tidx = led.tenant_idx[win]
+                w_tot = np.bincount(tidx, minlength=len(tenants))
+                w_hit = np.bincount(tidx, weights=met[win],
+                                    minlength=len(tenants))
+                for ti, name in enumerate(tenants):
+                    if w_tot[ti]:
+                        by_tenant[name] = float(w_hit[ti] / w_tot[ti])
+            out.append({
+                "kind": shock.kind, "label": shock.label,
+                "t0": float(t0), "t1": float(t1),
+                "baseline_attainment": baseline,
+                "max_attainment_dip": max_dip,
+                "time_to_recover_s": ttr,
+                "time_to_detect_s": ttd,
+                "window_attainment": _att(win),
+                "window_interactive": _att(win & interactive),
+                "window_batch": _att(win & ~interactive),
+                "window_by_tenant": by_tenant,
+            })
+        return out
+
     def summary(self) -> Dict[str, float]:
         out = {
             "slo_attainment": self.slo_attainment(),
@@ -409,6 +533,8 @@ class RunResult:
             out["failures"] = self.failures
         if self.degradations:
             out["degradations"] = self.degradations
+        if self.skipped_injections:
+            out["skipped_injections"] = self.skipped_injections
         if self.clusters:               # fleet run: per-cluster/region rollups
             out["migrations"] = self.migrations
             out["handbacks"] = self.handbacks

@@ -25,7 +25,9 @@ objects for legacy callers while ``build_trace`` hands the columnar form
 straight to ``simulate_events`` (lazy chunked materialization).
 ``sim_kwargs`` carries a suggested ``max_time`` and, where relevant,
 a ``failures`` :class:`~repro.sim.simulator.FailurePlan` /
-``degradations`` :class:`~repro.sim.simulator.DegradationPlan` to pass to
+``degradations`` :class:`~repro.sim.simulator.DegradationPlan` /
+``outages`` :class:`~repro.sim.simulator.OutagePlan` /
+``flash_crowds`` :class:`~repro.sim.simulator.FlashCrowdPlan` to pass to
 ``simulate_events``, a ``models`` tuple for configuring a multi-model
 controller (``ChironController(models=...)``), and — for the fleet
 scenarios — a zero-arg ``fleet`` factory building the
@@ -436,6 +438,112 @@ def heterogeneous_accelerators(n_requests: int, seed: int = 0, *,
         return Fleet(specs, FleetTopology(regions), models=("llama-8b",))
 
     return trace, {"max_time": trace.duration + 900.0, "fleet": fleet}
+
+
+def _tenant_column(rng: np.random.Generator, n: int,
+                   tenants: Sequence[str],
+                   weights: Sequence[float]) -> np.ndarray:
+    w = np.asarray(weights, dtype=np.float64)
+    return rng.choice(len(tenants), size=n, p=w / w.sum()).astype(np.int32)
+
+
+@register("zone_outage",
+          "two-region fleet where every instance in one zone crashes at "
+          "once mid-trace and its chip budget returns in staged tranches: "
+          "the hierarchy must re-provision into the surviving zone and "
+          "then back as capacity is restored",
+          default_n=3000)
+def zone_outage(n_requests: int, seed: int = 0, *,
+                arrival_rate: float = 12.0,
+                interactive_frac: float = 0.9,
+                chips_per_cluster: int = 96,
+                victim: Optional[str] = "us-east",
+                outage_at_frac: float = 0.3,
+                outage_duration: Optional[float] = None,
+                recovery_stages: int = 2,
+                stage_interval: float = 30.0,
+                batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.simulator import OutagePlan
+    regions = ("us", "eu")
+    tenants = ("acme", "globex")
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    oidx = _origin_column(rng, n_requests, regions, (0.55, 0.45))
+    tidx = _tenant_column(rng, n_requests, tenants, (0.6, 0.4))
+    trace = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo,
+                       origin_idx=oidx, origins=regions,
+                       tenant_idx=tidx, tenants=tenants)
+    span = trace.duration
+    # the outage scales with the trace so short smoke runs still leave
+    # post-restoration traffic to measure recovery against
+    if outage_duration is None:
+        outage_duration = 0.2 * span
+    plan = OutagePlan(start=outage_at_frac * span,
+                      duration=outage_duration, cluster=victim,
+                      recovery_stages=recovery_stages,
+                      stage_interval=stage_interval, seed=seed)
+
+    def fleet():
+        from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology
+        specs = [ClusterSpec("us-east", "us", max_chips=chips_per_cluster),
+                 ClusterSpec("eu-west", "eu", max_chips=chips_per_cluster)]
+        topo = FleetTopology(regions, latency={("us", "eu"): 0.07})
+        return Fleet(specs, topo, models=("llama-8b",))
+
+    return trace, {"max_time": span + 900.0, "fleet": fleet,
+                   "outages": plan}
+
+
+@register("flash_crowd",
+          "steady single-model stream plus a seeded ramp of a second "
+          "model that goes zero-to-dominant in minutes: on-the-fly model "
+          "discovery, placement warm-up, and recovery once the crowd "
+          "passes",
+          default_n=3000)
+def flash_crowd(n_requests: int, seed: int = 0, *,
+                arrival_rate: float = 10.0,
+                interactive_frac: float = 0.9,
+                crowd_model: str = "llama-70b",
+                peak_rate: float = 8.0,
+                ramp: Optional[float] = None,
+                crowd_duration: Optional[float] = None,
+                crowd_at_frac: float = 0.3,
+                batch_ttft_slo: float = 900.0) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.simulator import FlashCrowdPlan
+    tenants = ("acme", "globex")
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _token_lengths(rng, n_requests)
+    cls = rng.random(n_requests) < interactive_frac
+    tidx = _tenant_column(rng, n_requests, tenants, (0.6, 0.4))
+    base = make_trace(times, ins, outs, cls, batch_ttft_slo=batch_ttft_slo,
+                      models=("llama-8b",),
+                      tenant_idx=tidx, tenants=tenants, sort=False)
+    span = base.duration
+    # crowd window scales with the trace (same reasoning as zone_outage)
+    if crowd_duration is None:
+        crowd_duration = 0.3 * span
+    if ramp is None:
+        ramp = 0.25 * crowd_duration
+    plan = FlashCrowdPlan(start=crowd_at_frac * span, ramp=ramp,
+                          duration=crowd_duration, model=crowd_model,
+                          peak_rate=peak_rate, seed=seed)
+    # the crowd itself: seeded ramp arrivals of the second model, all
+    # interactive, attributed to the crowd-heavy tenant
+    crowd_t = plan.arrival_times()
+    n_crowd = crowd_t.size
+    ins_c, outs_c = _token_lengths(rng, n_crowd)
+    crowd = make_trace(crowd_t, ins_c, outs_c,
+                       np.ones(n_crowd, dtype=bool),
+                       models=(crowd_model,),
+                       tenant_idx=np.ones(n_crowd, dtype=np.int32),
+                       tenants=tenants, sort=False)
+    trace = Trace.concat([base, crowd]).sorted_by_arrival()
+    return trace, {"max_time": trace.duration + 900.0,
+                   "models": ("llama-8b", crowd_model),
+                   "flash_crowds": plan}
 
 
 @register("instance_failures",

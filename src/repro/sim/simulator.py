@@ -54,13 +54,15 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.obs.recorder import (R_INJECTED as _R_INJECTED,
+                                R_OUTAGE as _R_OUTAGE)
 from repro.serving.global_queue import (GlobalQueue, ReferenceGlobalQueue,
                                         make_queue)
 from repro.serving.request import Request
 from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.ledger import RequestLedger
-from repro.sim.metrics import RunResult, Timeline
+from repro.sim.metrics import RunResult, Shock, Timeline
 from repro.sim.perf_model import PerfModel
 from repro.sim.workload import Trace, TraceStream
 
@@ -68,7 +70,10 @@ from repro.sim.workload import Trace, TraceStream
 # and COMPLETION before FAILURE at equal timestamps (an instance activates
 # before its estimates fire; finishes land before the crash takes them).
 # _NET (cross-region arrival) and _WARM (placement warm-up) are fleet-only.
-_READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM = range(7)
+# _OUTAGE/_RESTORE drive correlated zone failures with staged capacity
+# return; _BURST marks a flash-crowd onset in the decision ledger.
+(_READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM,
+ _OUTAGE, _RESTORE, _BURST) = range(10)
 
 _INF = float("inf")
 
@@ -98,12 +103,17 @@ def _gc_paused(fn):
 
 @dataclass
 class FailurePlan:
-    """Crash schedule for failure injection: at each time in ``times`` one
-    uniformly-drawn *active* instance crashes (no-op when none is active).
-    Victim draws come from ``default_rng(seed)`` over the id-sorted active
-    list, so a plan is fully deterministic for a given run."""
+    """Crash schedule for failure injection: at each time in ``times``,
+    ``victims`` uniformly-drawn *active* instances crash (a correlated
+    multi-victim burst when > 1). Victim draws come from
+    ``default_rng(seed)`` over the id-sorted active list; exactly one
+    draw is consumed per scheduled victim whether or not an eligible
+    instance exists at event time (ineligible slots are counted in
+    ``RunResult.skipped_injections`` instead of silently shifting every
+    later draw), so a plan is fully deterministic for a given run."""
     times: Sequence[float]
     seed: int = 0
+    victims: int = 1
 
     def sorted_times(self) -> List[float]:
         return sorted(float(t) for t in self.times)
@@ -124,6 +134,87 @@ class DegradationPlan:
 
     def sorted_times(self) -> List[float]:
         return sorted(float(t) for t in self.times)
+
+
+@dataclass
+class OutagePlan:
+    """Correlated zone outage: at ``start`` every live instance (or the
+    seeded ``fraction`` of them) in the target cluster crashes *at once*
+    and that share of the zone's chip budget is withheld; capacity
+    returns in ``recovery_stages`` equal steps every ``stage_interval``
+    seconds starting at ``start + duration``. Displaced requests lose
+    their KV and requeue; the control hierarchy must re-provision into
+    the staged budget as it comes back.
+
+    ``cluster`` names the victim zone for :func:`simulate_fleet`
+    (``Fleet.by_name``); the single-cluster engine ignores it (the only
+    cluster *is* the zone). Partial outages (``fraction`` < 1) draw the
+    victim subset with ``default_rng(seed)`` over the id-sorted live
+    list — fully deterministic per run."""
+    start: float
+    duration: float = 300.0
+    cluster: Optional[str] = None
+    fraction: float = 1.0
+    recovery_stages: int = 1
+    stage_interval: float = 60.0
+    seed: int = 0
+
+    def end_time(self) -> float:
+        """Time the last withheld capacity stage is restored."""
+        stages = max(1, int(self.recovery_stages))
+        return self.start + self.duration \
+            + (stages - 1) * self.stage_interval
+
+
+@dataclass
+class FlashCrowdPlan:
+    """Flash-crowd demand shock: ``model`` goes from zero to a dominant
+    arrival share within minutes, exercising on-the-fly model discovery,
+    placement warm-up, and (in fleet mode) the Router's spillover.
+
+    The shock *arrivals* are a seeded trace merged into the run's input
+    at build time (:func:`arrival_times` generates the ramp; the
+    ``flash_crowd`` scenario wraps it) — arrivals must flow through the
+    normal cursor/ledger plumbing to stay columnar. The plan passed to
+    the engines marks the shock window on ``RunResult.shocks`` for the
+    recovery metrics and fires a ``_BURST`` heap event at onset so the
+    decision ledger carries the term that fired."""
+    start: float
+    ramp: float = 120.0         # seconds from zero to peak rate
+    duration: float = 600.0     # total elevated-arrival window
+    model: str = "llama-70b"
+    peak_rate: float = 20.0     # arrivals/s at the top of the ramp
+    seed: int = 0
+
+    def end_time(self) -> float:
+        return self.start + self.duration
+
+    def arrival_times(self) -> np.ndarray:
+        """Seeded arrival offsets for the shock (absolute times): the
+        expected count for a linear zero-to-peak ramp followed by a
+        plateau, placed by inverse-CDF sampling of that rate profile —
+        deterministic for a given seed."""
+        rng = np.random.default_rng(self.seed)
+        span = max(float(self.duration), 1e-9)
+        ramp = min(max(float(self.ramp), 1e-9), span)
+        area = 0.5 * ramp + (span - ramp)    # rate units of peak_rate
+        n = max(1, int(round(self.peak_rate * area)))
+        u = np.sort(rng.random(n)) * area
+        cut = 0.5 * ramp
+        times = np.where(u < cut,
+                         np.sqrt(np.maximum(2.0 * u * ramp, 0.0)),
+                         ramp + (u - cut))
+        return self.start + times
+
+
+def _as_plans(value, klass) -> List:
+    """Normalize an engine chaos-plan kwarg: None, a single plan, or a
+    sequence of plans -> list."""
+    if value is None:
+        return []
+    if isinstance(value, klass):
+        return [value]
+    return list(value)
 
 
 class _RequestCursor:
@@ -284,6 +375,9 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     quantize: float = 0.0,
                     failures: Optional[FailurePlan] = None,
                     degradations: Optional[DegradationPlan] = None,
+                    outages=None,
+                    flash_crowds=None,
+                    detector=None,
                     reference: bool = False,
                     shadow_verify=None,
                     telemetry=None,
@@ -328,6 +422,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     cluster.completion_grain = completion_grain
     cluster.quantize = quantize
     cluster.ledger = cursor.ledger
+    if detector is not None:
+        cluster.detector = detector
     if rec is not None:
         # attach before the warm start so bootstrap provisions land in
         # the decision ledger too (replay() then matches scale_ups)
@@ -403,6 +499,16 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         deg_rng = np.random.default_rng(degradations.seed)
         for td in degradations.sorted_times():
             heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
+    skipped_injections = 0
+    shocks: List[Shock] = []
+    for plan in _as_plans(outages, OutagePlan):
+        heappush(heap, (float(plan.start), _OUTAGE, next(ev_seq), plan, 0))
+        shocks.append(Shock("outage", float(plan.start), plan.end_time(),
+                            plan.cluster or ""))
+    for plan in _as_plans(flash_crowds, FlashCrowdPlan):
+        heappush(heap, (float(plan.start), _BURST, next(ev_seq), plan, 0))
+        shocks.append(Shock("flash_crowd", float(plan.start),
+                            plan.end_time(), plan.model))
 
     def _sample(now: float) -> None:
         nonlocal last_sample_t, next_timeline
@@ -535,11 +641,18 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     freed.append(inst)
                     changed = True
             elif kind == _FAIL:
-                # crash a uniformly-drawn active instance (id-ordered
-                # registry + seeded rng -> deterministic victim per run)
-                active = cluster.active_sorted()
-                if active:
-                    victim = active[int(fail_rng.integers(len(active)))]
+                # crash ``victims`` uniformly-drawn active instances
+                # (id-ordered registry + seeded rng -> deterministic
+                # victims per run). Exactly one draw per victim slot,
+                # eligible or not: an empty fleet skips the slot and
+                # counts it instead of shifting every later draw.
+                for _ in range(max(1, failures.victims)):
+                    draw = int(fail_rng.integers(1 << 30))
+                    active = cluster.active_sorted()
+                    if not active:
+                        skipped_injections += 1
+                        continue
+                    victim = active[draw % len(active)]
                     if victim in freed:
                         freed.remove(victim)
                     displaced = cluster.fail_instance(victim)
@@ -552,21 +665,79 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     cluster.dirty.discard(victim)
                     changed = True
             elif kind == _DEGRADE:
-                # slow a uniformly-drawn healthy active instance; recovery
-                # is scheduled as its own event
+                # slow a uniformly-drawn healthy active instance (one
+                # draw per event whether or not a candidate exists — see
+                # _FAIL); recovery is scheduled as its own event
+                draw = int(deg_rng.integers(1 << 30))
                 cands = [i for i in cluster.active_sorted()
                          if i.slow_factor == 1.0]
                 if cands:
-                    victim = cands[int(deg_rng.integers(len(cands)))]
+                    victim = cands[draw % len(cands)]
                     cluster.degrade_instance(victim, degradations.factor, t)
                     heappush(heap, (t + degradations.duration,
                                     _RECOVER, next(ev_seq), victim, 0))
                     changed = True
+                else:
+                    skipped_injections += 1
             elif kind == _RECOVER:
                 if inst.state != InstanceState.RETIRED \
                         and inst.slow_factor != 1.0:
                     cluster.recover_instance(inst, t)
                     changed = True
+            elif kind == _OUTAGE:
+                # correlated zone outage: every live instance (or the
+                # seeded fraction) crashes at once and the zone's chip
+                # budget is withheld; staged _RESTORE events return it
+                plan = inst                     # payload: the OutagePlan
+                victims = sorted(cluster.instances, key=lambda i: i.id)
+                if plan.fraction < 1.0 and victims:
+                    k = min(len(victims), max(1, math.ceil(
+                        plan.fraction * len(victims))))
+                    sel = np.random.default_rng(plan.seed).permutation(
+                        len(victims))[:k]
+                    sel.sort()
+                    victims = [victims[int(i)] for i in sel]
+                if not victims:
+                    skipped_injections += 1
+                withhold = int(round(min(plan.fraction, 1.0)
+                                     * cluster.max_chips))
+                if rec is not None:
+                    rec.record_outage(cluster, t, len(victims), withhold)
+                    rec.inj_reason = _R_OUTAGE
+                for victim in victims:
+                    if victim in freed:
+                        freed.remove(victim)
+                    displaced = cluster.fail_instance(victim)
+                    for r in victim.drain_finished():
+                        observe_completion(r)
+                    for r in displaced:
+                        queue.requeue(r)
+                    cluster.dirty.discard(victim)
+                if rec is not None:
+                    rec.inj_reason = _R_INJECTED
+                stages = max(1, int(plan.recovery_stages))
+                base_amt, rem = divmod(withhold, stages)
+                for k2 in range(stages):
+                    amt = base_amt + (1 if k2 < rem else 0)
+                    heappush(heap, (plan.start + plan.duration
+                                    + k2 * plan.stage_interval,
+                                    _RESTORE, next(ev_seq), amt, 0))
+                cluster.max_chips -= withhold
+                cluster.route_version += 1
+                changed = True
+            elif kind == _RESTORE:
+                # one staged tranche of withheld outage capacity returns
+                cluster.max_chips += inst       # payload: chip count
+                cluster.route_version += 1
+                if rec is not None:
+                    rec.record_restore(cluster, t, inst)
+                changed = True
+            elif kind == _BURST:
+                # flash-crowd onset: the shock arrivals ride the trace;
+                # this marks the term that fired in the decision ledger
+                if rec is not None:
+                    rec.record_flash_crowd(cluster, t, inst.model)
+                changed = True
             elif epoch == inst._epoch and inst.state == InstanceState.ACTIVE:
                 inst.advance(t)
                 freed.append(inst)
@@ -809,6 +980,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                      duration=t, failures=cluster.failures,
                      n_events=n_events,
                      degradations=cluster.degradations,
+                     skipped_injections=skipped_injections,
+                     shocks=shocks,
                      ledger=cursor.ledger, telemetry=rec)
 
 
@@ -891,11 +1064,13 @@ def simulate(requests: RequestSource, controller: BaseController,
              engine: str = "event",
              failures: Optional[FailurePlan] = None,
              degradations: Optional[DegradationPlan] = None,
+             outages=None,
+             flash_crowds=None,
              telemetry=None) -> RunResult:
     """Compatibility wrapper: dispatch to the event-driven core (default)
     or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies;
-    failure/degradation injection and flight-recorder telemetry need the
-    event core).
+    failure/degradation/outage injection and flight-recorder telemetry
+    need the event core).
     """
     if engine == "event":
         return simulate_events(requests, controller, cluster,
@@ -903,9 +1078,11 @@ def simulate(requests: RequestSource, controller: BaseController,
                                max_time=max_time, warm_start=warm_start,
                                timeline_every=timeline_every,
                                failures=failures, degradations=degradations,
+                               outages=outages, flash_crowds=flash_crowds,
                                telemetry=telemetry)
     if engine == "fixed":
-        if failures is not None or degradations is not None:
+        if failures is not None or degradations is not None \
+                or outages is not None or flash_crowds is not None:
             raise ValueError("failure injection requires engine='event'")
         if telemetry:
             raise ValueError("telemetry requires engine='event'")
@@ -923,6 +1100,9 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    completion_grain: float = 0.25,
                    failures: Optional[FailurePlan] = None,
                    degradations: Optional[DegradationPlan] = None,
+                   outages=None,
+                   flash_crowds=None,
+                   detector=None,
                    reference: bool = False,
                    shadow_verify=None,
                    telemetry=None,
@@ -969,6 +1149,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         fc.cluster.now = 0.0
         fc.cluster.completion_grain = completion_grain
         fc.cluster.ledger = cursor.ledger
+        if detector is not None:
+            fc.cluster.detector = detector
         if reference:
             fc.cluster.vec_min = 1 << 30
             fc.queue = ReferenceGlobalQueue()   # object-queue baseline
@@ -1008,6 +1190,18 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         deg_rng = np.random.default_rng(degradations.seed)
         for td in degradations.sorted_times():
             heappush(heap, (td, _DEGRADE, next(ev_seq), None, 0))
+    skipped_injections = 0
+    shocks: List[Shock] = []
+    for plan in _as_plans(outages, OutagePlan):
+        if plan.cluster is not None and plan.cluster not in fleet.by_name:
+            raise ValueError(f"OutagePlan: unknown cluster {plan.cluster!r}")
+        heappush(heap, (float(plan.start), _OUTAGE, next(ev_seq), plan, 0))
+        shocks.append(Shock("outage", float(plan.start), plan.end_time(),
+                            plan.cluster or clusters[0].name))
+    for plan in _as_plans(flash_crowds, FlashCrowdPlan):
+        heappush(heap, (float(plan.start), _BURST, next(ev_seq), plan, 0))
+        shocks.append(Shock("flash_crowd", float(plan.start),
+                            plan.end_time(), plan.model))
 
     def emit_warm(delay: float, payload) -> None:
         heappush(heap, (t + max(delay, 0.0), _WARM,
@@ -1158,9 +1352,16 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                                      []).append(inst)
                     changed = True
             elif kind == _FAIL:
-                active = _all_active()
-                if active:
-                    victim = active[int(fail_rng.integers(len(active)))]
+                # one draw per victim slot, eligible or not (see the
+                # single-cluster loop) — seeded victim sequences never
+                # shift when the fleet happens to be empty
+                for _ in range(max(1, failures.victims)):
+                    draw = int(fail_rng.integers(1 << 30))
+                    active = _all_active()
+                    if not active:
+                        skipped_injections += 1
+                        continue
+                    victim = active[draw % len(active)]
                     fc = by_sim[id(victim._cluster)]
                     flist = freed.get(id(fc))
                     if flist and victim in flist:
@@ -1174,20 +1375,79 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                     fc.cluster.dirty.discard(victim)
                     changed = True
             elif kind == _DEGRADE:
+                draw = int(deg_rng.integers(1 << 30))
                 cands = [i for i in _all_active() if i.slow_factor == 1.0]
                 if cands:
-                    victim = cands[int(deg_rng.integers(len(cands)))]
+                    victim = cands[draw % len(cands)]
                     victim._cluster.degrade_instance(
                         victim, degradations.factor, t)
                     heappush(heap, (t + degradations.duration,
                                     _RECOVER, next(ev_seq), victim, 0))
                     changed = True
+                else:
+                    skipped_injections += 1
             elif kind == _RECOVER:
                 inst = payload
                 if inst.state != InstanceState.RETIRED \
                         and inst.slow_factor != 1.0:
                     inst._cluster.recover_instance(inst, t)
                     changed = True
+            elif kind == _OUTAGE:
+                # correlated zone outage against one named fleet cluster
+                plan = payload
+                fc = fleet.by_name[plan.cluster] \
+                    if plan.cluster is not None else clusters[0]
+                victims = sorted(fc.cluster.instances, key=lambda i: i.id)
+                if plan.fraction < 1.0 and victims:
+                    k = min(len(victims), max(1, math.ceil(
+                        plan.fraction * len(victims))))
+                    sel = np.random.default_rng(plan.seed).permutation(
+                        len(victims))[:k]
+                    sel.sort()
+                    victims = [victims[int(i)] for i in sel]
+                if not victims:
+                    skipped_injections += 1
+                withhold = int(round(min(plan.fraction, 1.0)
+                                     * fc.cluster.max_chips))
+                if rec is not None:
+                    rec.record_outage(fc.cluster, t, len(victims),
+                                      withhold)
+                    rec.inj_reason = _R_OUTAGE
+                flist = freed.get(id(fc))
+                for victim in victims:
+                    if flist and victim in flist:
+                        flist.remove(victim)
+                    displaced = fc.cluster.fail_instance(victim)
+                    for r in victim.drain_finished():
+                        fc.controller.observe_completion(r)
+                        fleet.observe_completion(r, fc, t)
+                    for r in displaced:
+                        fc.queue.requeue(r)
+                    fc.cluster.dirty.discard(victim)
+                if rec is not None:
+                    rec.inj_reason = _R_INJECTED
+                stages = max(1, int(plan.recovery_stages))
+                base_amt, rem = divmod(withhold, stages)
+                for k2 in range(stages):
+                    amt = base_amt + (1 if k2 < rem else 0)
+                    heappush(heap, (plan.start + plan.duration
+                                    + k2 * plan.stage_interval,
+                                    _RESTORE, next(ev_seq), (fc, amt), 0))
+                fc.cluster.max_chips -= withhold
+                fc.cluster.route_version += 1
+                changed = True
+            elif kind == _RESTORE:
+                fc, amt = payload
+                fc.cluster.max_chips += amt
+                fc.cluster.route_version += 1
+                if rec is not None:
+                    rec.record_restore(fc.cluster, t, amt)
+                changed = True
+            elif kind == _BURST:
+                if rec is not None:
+                    rec.record_flash_crowd(clusters[0].cluster, t,
+                                           payload.model)
+                changed = True
             else:                        # completion estimate
                 inst = payload
                 if epoch == inst._epoch \
@@ -1341,6 +1601,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         duration=t,
         failures=sum(fc.cluster.failures for fc in clusters),
         degradations=sum(fc.cluster.degradations for fc in clusters),
+        skipped_injections=skipped_injections, shocks=shocks,
         n_events=n_events, clusters=stats,
         migrations=fleet.migrations, handbacks=fleet.handbacks,
         egress_bytes=fleet.egress_bytes,

@@ -4,7 +4,8 @@ Two dialects are understood on load:
 
 - **Native** (what ``save_trace`` writes): one row per request with the
   canonical columns ``arrival, prompt_len, output_len, interactive,
-  ttft_slo, itl_slo, model``. Round-trips a synthetic scenario exactly.
+  ttft_slo, itl_slo, model`` (plus ``origin``/``tenant`` when the trace
+  carries those vocabularies). Round-trips a synthetic scenario exactly.
 - **Azure-LLM-inference style** (azure-public-dataset): ``TIMESTAMP,
   ContextTokens, GeneratedTokens`` — ISO timestamps are vectorized through
   ``numpy.datetime64`` and normalized so the trace starts at t=0; missing
@@ -55,6 +56,7 @@ _ALIASES: Dict[str, Sequence[str]] = {
     "itl_slo": ("itl_slo", "slo_itl"),
     "model": ("model", "model_name", "deployment"),
     "origin": ("origin", "origin_region", "region", "source_region"),
+    "tenant": ("tenant", "tenant_id", "customer", "account"),
 }
 
 _INTERACTIVE_WORDS = {"1", "true", "interactive", "chat", "conversation"}
@@ -84,18 +86,22 @@ def save_trace(trace: Trace, path: str) -> None:
     compresses)."""
     models = trace.models
     origins = trace.origins
+    tenants = trace.tenants
     cols = zip(trace.arrival.tolist(), trace.prompt_len.tolist(),
                trace.output_len.tolist(), trace.interactive.tolist(),
                trace.ttft_slo.tolist(), trace.itl_slo.tolist(),
-               trace.model_idx.tolist(), trace.origin_idx.tolist())
+               trace.model_idx.tolist(), trace.origin_idx.tolist(),
+               trace.tenant_idx.tolist())
     with _open(path, "w") as f:
         if _fmt_path(path).endswith(".jsonl"):
-            for t, p, o, c, tt, il, m, g in cols:
+            for t, p, o, c, tt, il, m, g, tn in cols:
                 row = {"arrival": t, "prompt_len": p, "output_len": o,
                        "interactive": bool(c), "ttft_slo": tt,
                        "itl_slo": il, "model": models[m]}
                 if origins:
                     row["origin"] = origins[g]
+                if tenants:
+                    row["tenant"] = tenants[tn]
                 f.write(json.dumps(row) + "\n")
         else:
             w = csv.writer(f, lineterminator="\n")   # RFC-4180 quoting
@@ -103,11 +109,15 @@ def save_trace(trace: Trace, path: str) -> None:
                       "interactive", "ttft_slo", "itl_slo", "model"]
             if origins:
                 header.append("origin")
+            if tenants:
+                header.append("tenant")
             w.writerow(header)
-            for t, p, o, c, tt, il, m, g in cols:
+            for t, p, o, c, tt, il, m, g, tn in cols:
                 row = [repr(t), p, o, int(c), repr(tt), repr(il), models[m]]
                 if origins:
                     row.append(origins[g])
+                if tenants:
+                    row.append(tenants[tn])
                 w.writerow(row)
 
 
@@ -163,13 +173,21 @@ def _columns_to_trace(cols: Dict[str, List], n: int, *,
         origin_idx = np.asarray(origin_idx, dtype=np.int32)
     else:
         origins, origin_idx = (), None
+    if "tenant" in cols:
+        tnames = np.array([str(v) for v in cols["tenant"]])
+        tenants, tenant_idx = np.unique(tnames, return_inverse=True)
+        tenants = tuple(tenants.tolist())
+        tenant_idx = np.asarray(tenant_idx, dtype=np.int32)
+    else:
+        tenants, tenant_idx = (), None
     # make_trace owns the class-mask SLO defaulting and the sort — one
     # rule for generated and loaded traces alike
     return make_trace(arrival, prompt, output, interactive,
                       ttft_slo=ttft, itl_slo=itl,
                       batch_ttft_slo=batch_ttft_slo,
                       model_idx=model_idx, models=models,
-                      origin_idx=origin_idx, origins=origins)
+                      origin_idx=origin_idx, origins=origins,
+                      tenant_idx=tenant_idx, tenants=tenants)
 
 
 def _read_columns(rows):

@@ -23,6 +23,9 @@ Trace schema (one row per request):
   model_idx    int32    index into ``models`` (the model vocabulary)
   origin_idx   int32    index into ``origins`` (originating regions;
                         empty ``origins`` = single-region workload)
+  tenant_idx   int32    index into ``tenants`` (paying tenants for
+                        per-tenant attainment; empty ``tenants`` =
+                        single-tenant workload)
 
 ``repro.sim.trace_io`` round-trips this schema to CSV/JSONL (including
 Azure-LLM-inference-style traces) and streams multi-day files in
@@ -73,6 +76,8 @@ class Trace:
     models: Tuple[str, ...] = (DEFAULT_MODEL,)
     origin_idx: Optional[np.ndarray] = None   # None/empty origins = no column
     origins: Tuple[str, ...] = ()
+    tenant_idx: Optional[np.ndarray] = None   # None/empty tenants = no column
+    tenants: Tuple[str, ...] = ()
 
     def __post_init__(self):
         self.arrival = np.asarray(self.arrival, dtype=np.float64)
@@ -85,11 +90,16 @@ class Trace:
         self.model_idx = np.asarray(self.model_idx, dtype=np.int32)
         self.models = tuple(self.models)
         self.origins = tuple(self.origins)
+        self.tenants = tuple(self.tenants)
         if self.origin_idx is None:
             self.origin_idx = np.zeros(n, dtype=np.int32)
         self.origin_idx = np.asarray(self.origin_idx, dtype=np.int32)
+        if self.tenant_idx is None:
+            self.tenant_idx = np.zeros(n, dtype=np.int32)
+        self.tenant_idx = np.asarray(self.tenant_idx, dtype=np.int32)
         for name in ("prompt_len", "output_len", "interactive",
-                     "ttft_slo", "itl_slo", "model_idx", "origin_idx"):
+                     "ttft_slo", "itl_slo", "model_idx", "origin_idx",
+                     "tenant_idx"):
             if getattr(self, name).shape != (n,):
                 raise ValueError(f"Trace column {name!r} has shape "
                                  f"{getattr(self, name).shape}, want ({n},)")
@@ -99,6 +109,9 @@ class Trace:
         if n and self.origins and (self.origin_idx.min() < 0 or
                                    self.origin_idx.max() >= len(self.origins)):
             raise ValueError("Trace.origin_idx out of range of origins")
+        if n and self.tenants and (self.tenant_idx.min() < 0 or
+                                   self.tenant_idx.max() >= len(self.tenants)):
+            raise ValueError("Trace.tenant_idx out of range of tenants")
 
     # ------------------------------------------------------------ basics
     @property
@@ -124,7 +137,8 @@ class Trace:
                      self.output_len[idx], self.interactive[idx],
                      self.ttft_slo[idx], self.itl_slo[idx],
                      self.model_idx[idx], self.models,
-                     self.origin_idx[idx], self.origins)
+                     self.origin_idx[idx], self.origins,
+                     self.tenant_idx[idx], self.tenants)
 
     def head(self, n: int) -> "Trace":
         return self.take(slice(0, n))
@@ -152,6 +166,12 @@ class Trace:
                                   [t.origin_idx for t in traces])
         else:
             origins, oidx = (), [t.origin_idx for t in traces]
+        # same folding rule for tenants: tenant-less traces become ""
+        if any(t.tenants for t in traces):
+            tenants, tidx = merge([t.tenants or ("",) for t in traces],
+                                  [t.tenant_idx for t in traces])
+        else:
+            tenants, tidx = (), [t.tenant_idx for t in traces]
         return Trace(
             np.concatenate([t.arrival for t in traces]),
             np.concatenate([t.prompt_len for t in traces]),
@@ -160,7 +180,8 @@ class Trace:
             np.concatenate([t.ttft_slo for t in traces]),
             np.concatenate([t.itl_slo for t in traces]),
             np.concatenate(midx), models,
-            np.concatenate(oidx), origins)
+            np.concatenate(oidx), origins,
+            np.concatenate(tidx), tenants)
 
     # ----------------------------------------------------- materialization
     def materialize(self, lo: int = 0, hi: Optional[int] = None, *,
@@ -187,6 +208,8 @@ class Trace:
         models = self.models
         origins = self.origins or None
         oidx = self.origin_idx[lo:hi].tolist()
+        tenants = self.tenants or None
+        tidx = self.tenant_idx[lo:hi].tolist()
         it, ba = RequestType.INTERACTIVE, RequestType.BATCH
         # SLO interning columnar: one unique pass over the (ttft, itl)
         # pair column — complex128 packs both float64 exactly, so equal
@@ -206,8 +229,9 @@ class Trace:
         new = Request.__new__
         next_id = request_id_counter().__next__
         append = out.append
-        for t, p, o, c, m, g, slo, rw in zip(arr, ins, outs, inter,
-                                             midx, oidx, slo_col, rows):
+        for t, p, o, c, m, g, tn, slo, rw in zip(arr, ins, outs, inter,
+                                                 midx, oidx, tidx,
+                                                 slo_col, rows):
             r = new(Request)
             # fields at their dataclass defaults (state, outcome slots,
             # preemptions, ...) are deliberately absent: the dataclass
@@ -225,6 +249,8 @@ class Trace:
             }
             if origins:
                 r.__dict__["origin"] = origins[g]
+            if tenants:
+                r.__dict__["tenant"] = tenants[tn]
             append(r)
         return out
 
@@ -233,8 +259,10 @@ class Trace:
         """Columnarize a request list (round-trip / legacy ingestion)."""
         models: List[str] = []
         origins: List[str] = []
+        tenants: List[str] = []
         midx = np.empty(len(reqs), dtype=np.int32)
         oidx = np.zeros(len(reqs), dtype=np.int32)
+        tidx = np.zeros(len(reqs), dtype=np.int32)
         for i, r in enumerate(reqs):
             if r.model not in models:
                 models.append(r.model)
@@ -243,6 +271,11 @@ class Trace:
                 if r.origin not in origins:
                     origins.append(r.origin)
                 oidx[i] = origins.index(r.origin)
+            tenant = getattr(r, "tenant", None)
+            if tenant is not None:
+                if tenant not in tenants:
+                    tenants.append(tenant)
+                tidx[i] = tenants.index(tenant)
         return cls(
             np.array([r.arrival_time for r in reqs], dtype=np.float64),
             np.array([r.prompt_len for r in reqs], dtype=np.int64),
@@ -251,7 +284,8 @@ class Trace:
             np.array([r.slo.ttft for r in reqs], dtype=np.float64),
             np.array([r.slo.itl for r in reqs], dtype=np.float64),
             midx, tuple(models) or (DEFAULT_MODEL,),
-            oidx, tuple(origins))
+            oidx, tuple(origins),
+            tidx, tuple(tenants))
 
 
 def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
@@ -263,6 +297,8 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
                models: Sequence[str] = (DEFAULT_MODEL,),
                origin_idx: Optional[np.ndarray] = None,
                origins: Sequence[str] = (),
+               tenant_idx: Optional[np.ndarray] = None,
+               tenants: Sequence[str] = (),
                sort: bool = True) -> Trace:
     """Assemble a Trace from columns, filling SLO columns from the class
     mask (interactive -> paper defaults; batch -> ``batch_ttft_slo``)."""
@@ -280,7 +316,8 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
         model_idx = np.zeros(n, dtype=np.int32)
     tr = Trace(arrival, prompt_len, output_len, interactive,
                ttft_slo, itl_slo, model_idx, tuple(models),
-               origin_idx, tuple(origins))
+               origin_idx, tuple(origins),
+               tenant_idx, tuple(tenants))
     return tr.sorted_by_arrival() if sort else tr
 
 

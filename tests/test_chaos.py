@@ -1,0 +1,305 @@
+"""Correlated-failure chaos plane: zone outages with staged capacity
+return, flash-crowd demand shocks, noisy slow-node detection, injection
+hardening (empty-fleet victim slots), recovery metrics, and the tenant
+column's end-to-end round trip."""
+import numpy as np
+import pytest
+
+from repro.sim.cluster import (SLOW_SUSPECT_RATIO, DetectorConfig,
+                               InstanceType, SimCluster)
+from repro.sim.controllers import ChironController
+from repro.sim.ledger import RequestLedger
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (FailurePlan, FlashCrowdPlan, OutagePlan,
+                                 default_perf_factory, simulate_events,
+                                 simulate_fleet)
+from repro.sim.trace_io import load_trace, save_trace
+from repro.sim.workload import Trace, make_trace
+
+MODEL = "llama-8b"
+
+
+def _cluster(max_chips=400):
+    return SimCluster(default_perf_factory(), max_chips=max_chips)
+
+
+def _run_single(name, seed=0, *, n=2000, telemetry=None,
+                shadow_verify=None):
+    trace, kw = build_trace(name, n_requests=n, seed=seed)
+    ctrl = ChironController(models=kw["models"]) if "models" in kw \
+        else ChironController()
+    return simulate_events(trace, ctrl, _cluster(), max_time=kw["max_time"],
+                           warm_start=2, outages=kw.get("outages"),
+                           flash_crowds=kw.get("flash_crowds"),
+                           telemetry=telemetry, shadow_verify=shadow_verify)
+
+
+def _fingerprint(res):
+    return (res.scale_ups, res.scale_downs, res.peak_chips, res.n_events,
+            res.failures, res.skipped_injections, res.duration,
+            res.chip_seconds, tuple(res.shocks),
+            tuple((p.t, p.n_interactive, p.n_mixed, p.n_batch, p.chips,
+                   p.q_interactive, p.q_batch) for p in res.timeline))
+
+
+def _steady_trace(n=300, rate=12.0, seed=0, t0=0.0):
+    rng = np.random.default_rng(seed)
+    times = t0 + np.cumsum(rng.exponential(1.0 / rate, n))
+    ins = np.full(n, 100, dtype=np.int64)
+    outs = np.full(n, 60, dtype=np.int64)
+    return make_trace(times, ins, outs, np.ones(n, dtype=bool))
+
+
+# ------------------------------------------------------------ zone outage
+def test_zone_outage_single_engine_dips_and_recovers():
+    res = _run_single("zone_outage", seed=0, n=3000)
+    assert res.failures > 0                    # victims crashed at once
+    assert res.skipped_injections == 0
+    (shock,) = res.shocks
+    assert shock.kind == "outage"
+    (rec,) = res.recovery_metrics()
+    assert rec["max_attainment_dip"] > 0.05    # the outage visibly hurts
+    assert rec["time_to_detect_s"] >= 0.0      # re-provisioning observed
+    assert rec["time_to_recover_s"] >= 0.0     # ...and attainment returns
+    assert rec["time_to_recover_s"] != -1.0
+    # per-tenant attainment is reported during the shock window
+    assert set(rec["window_by_tenant"]) == {"acme", "globex"}
+
+
+def test_zone_outage_fleet_reprovisions_within_horizon():
+    trace, kw = build_trace("zone_outage", n_requests=3000, seed=0)
+    res = simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                         warm_start=1, outages=kw["outages"],
+                         telemetry=True)
+    assert res.failures > 0
+    (rec,) = res.recovery_metrics()
+    assert rec["time_to_detect_s"] >= 0.0
+    assert rec["time_to_recover_s"] >= 0.0
+    rep = res.telemetry.replay()
+    assert rep["outages"] == 1
+    assert rep["restores"] == kw["outages"].recovery_stages
+    # the surviving cluster keeps interactive attainment usable
+    assert rec["window_attainment"] > 0.5
+
+
+def test_outage_withholds_and_restores_capacity_in_stages():
+    trace = _steady_trace(400, rate=10.0, seed=1)
+    span = trace.duration
+    plan = OutagePlan(start=0.3 * span, duration=0.15 * span,
+                      recovery_stages=3, stage_interval=5.0, seed=1)
+    cluster = _cluster(max_chips=200)
+    res = simulate_events(trace, ChironController(), cluster,
+                          max_time=span + 600.0, warm_start=2,
+                          outages=plan)
+    # every withheld tranche came back: full budget restored by run end
+    assert cluster.max_chips == 200
+    assert res.completion_rate() == 1.0
+
+
+def test_outage_unknown_fleet_cluster_raises():
+    trace, kw = build_trace("zone_outage", n_requests=500, seed=0,
+                            victim="not-a-zone")
+    with pytest.raises(ValueError, match="not-a-zone"):
+        simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                       outages=kw["outages"])
+
+
+# ------------------------------------------------------------ flash crowd
+def test_flash_crowd_single_engine_discovers_model():
+    res = _run_single("flash_crowd", seed=0, n=3000)
+    (shock,) = res.shocks
+    assert shock.kind == "flash_crowd" and shock.label == "llama-70b"
+    by_model = res.slo_by_model()
+    assert "llama-70b" in by_model             # the crowd got served
+    (rec,) = res.recovery_metrics()
+    assert rec["time_to_recover_s"] >= 0.0     # recovered (or never dipped)
+    assert res.completion_rate() > 0.95
+
+
+def test_flash_crowd_fleet_engine_serves_crowd():
+    from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology
+    trace, kw = build_trace("flash_crowd", n_requests=2500, seed=1)
+    fleet = Fleet([ClusterSpec("us-a", "us", max_chips=200),
+                   ClusterSpec("us-b", "us", max_chips=200)],
+                  FleetTopology(("us",)),
+                  models=("llama-8b", "llama-70b"))
+    res = simulate_fleet(trace, fleet, max_time=kw["max_time"],
+                         warm_start=1, flash_crowds=kw["flash_crowds"],
+                         telemetry=True)
+    assert "llama-70b" in res.slo_by_model()
+    assert res.telemetry.replay()["flash_crowds"] == 1
+    (rec,) = res.recovery_metrics()
+    assert rec["kind"] == "flash_crowd"
+
+
+def test_flash_crowd_arrivals_ramp_then_plateau():
+    plan = FlashCrowdPlan(start=100.0, ramp=60.0, duration=300.0,
+                          peak_rate=10.0, seed=3)
+    times = plan.arrival_times()
+    assert np.array_equal(times, plan.arrival_times())   # seeded
+    assert float(times.min()) >= plan.start
+    assert float(times.max()) <= plan.end_time() + 1e-9
+    # the ramp's first half carries fewer arrivals than the same-width
+    # plateau slice (rate climbs zero -> peak across the ramp)
+    first = np.count_nonzero(times < plan.start + 30.0)
+    mid = np.count_nonzero((times >= plan.start + 120.0)
+                           & (times < plan.start + 150.0))
+    assert first < mid
+
+
+# ------------------------------------------- injection hardening (draws)
+def test_failure_on_empty_fleet_is_skipped_not_shifted():
+    trace = _steady_trace(200, rate=10.0, seed=2, t0=50.0)
+    plan = FailurePlan(times=[1.0, 60.0], seed=9)
+    res = simulate_events(trace, ChironController(), _cluster(),
+                          max_time=trace.duration + 600.0, warm_start=0,
+                          failures=plan)
+    # t=1.0 fires before any instance exists -> counted, not crashed
+    assert res.skipped_injections == 1
+    assert res.failures == 1
+
+
+def test_chaos_runs_are_seed_deterministic():
+    a = _run_single("zone_outage", seed=4, n=1200)
+    b = _run_single("zone_outage", seed=4, n=1200)
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+# ------------------------------------ telemetry / shadow decision parity
+@pytest.mark.parametrize("scenario", ["zone_outage", "flash_crowd"])
+def test_chaos_telemetry_shadow_bit_identical(scenario):
+    off = _run_single(scenario, seed=2, n=1200)
+    on = _run_single(scenario, seed=2, n=1200, telemetry=True,
+                     shadow_verify=True)
+    assert off.telemetry is None and on.telemetry is not None
+    assert _fingerprint(off) == _fingerprint(on)
+
+
+# ----------------------------------------------------- noisy detection
+def _active_instance(cluster):
+    inst = cluster.provision(MODEL, InstanceType.MIXED, 0.0, static_batch=8)
+    inst.ready_time = 0.0
+    inst.activate_if_ready(0.0)
+    return inst
+
+
+def test_detector_flags_slow_instance_from_samples():
+    cluster = _cluster(40)
+    inst = _active_instance(cluster)
+    for _ in range(3):                        # warm the window healthy
+        inst.update_health()
+    assert not inst.suspected_slow
+    inst.slow_factor = 4.0
+    ticks = 0
+    while not inst.suspected_slow and ticks < 10:
+        inst.update_health()
+        ticks += 1
+    assert inst.suspected_slow and ticks <= 6
+    inst.slow_factor = 1.0
+    for _ in range(10):
+        inst.update_health()
+    assert not inst.suspected_slow             # clears after recovery
+
+
+def test_detector_noise_perturbs_observations():
+    """Detection runs on noisy observed samples, not the fluid-exact
+    ratio: with noise on, the EWMA never equals the true slow factor."""
+    noisy = _cluster(40)
+    noisy.detector = DetectorConfig(window=1, noise=0.3, seed=5)
+    exact = _cluster(40)
+    exact.detector = DetectorConfig(window=1, noise=0.0)
+    a, b = _active_instance(noisy), _active_instance(exact)
+    a.slow_factor = b.slow_factor = 4.0
+    for _ in range(8):
+        a.update_health()
+        b.update_health()
+    assert a.suspected_slow and b.suspected_slow
+    assert a.health_ewma != pytest.approx(b.health_ewma, abs=1e-6)
+
+
+def test_detector_false_positive_and_negative_knobs():
+    fp = _cluster(40)
+    fp.detector = DetectorConfig(window=1, fp_rate=1.0, noise=0.0)
+    healthy = _active_instance(fp)
+    for _ in range(8):
+        healthy.update_health()
+    assert healthy.suspected_slow              # every sample a false alarm
+
+    fn = _cluster(40)
+    fn.detector = DetectorConfig(window=1, fn_rate=1.0, noise=0.0)
+    slow = _active_instance(fn)
+    slow.slow_factor = 8.0
+    for _ in range(8):
+        slow.update_health()
+    assert not slow.suspected_slow             # every sample masked
+
+
+def test_detector_config_threads_through_engine():
+    trace = _steady_trace(150, rate=8.0, seed=3)
+    det = DetectorConfig(window=3, alpha=0.7, noise=0.2, seed=11)
+    res = simulate_events(trace, ChironController(), _cluster(),
+                          max_time=trace.duration + 600.0, warm_start=1,
+                          detector=det)
+    assert res.completion_rate() == 1.0
+
+
+def test_detector_median_suppresses_single_outlier():
+    """One bad sample in a window of healthy ones must not quarantine the
+    instance — the median statistic absorbs isolated outliers."""
+    cluster = _cluster(40)
+    cluster.detector = DetectorConfig(window=5, noise=0.0)
+    inst = _active_instance(cluster)
+    for _ in range(5):                         # warm window, all healthy
+        inst.update_health()
+    inst.slow_factor = 6.0                     # one-tick transient blip
+    inst.update_health()
+    inst.slow_factor = 1.0
+    for _ in range(4):
+        inst.update_health()
+        assert not inst.suspected_slow         # median-of-5 holds the line
+
+
+# --------------------------------------------------------- tenant column
+def _tenant_trace(n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(0.2, n))
+    ins = np.full(n, 64, dtype=np.int64)
+    outs = np.full(n, 32, dtype=np.int64)
+    tidx = (rng.random(n) < 0.4).astype(np.int32)
+    return make_trace(times, ins, outs, np.ones(n, dtype=bool),
+                      tenant_idx=tidx, tenants=("acme", "globex"))
+
+
+@pytest.mark.parametrize("ext", ["csv", "jsonl"])
+def test_tenant_column_roundtrips_through_trace_io(tmp_path, ext):
+    tr = _tenant_trace()
+    path = str(tmp_path / f"t.{ext}")
+    save_trace(tr, path)
+    back = load_trace(path)
+    names = [tr.tenants[i] for i in tr.tenant_idx]
+    names_back = [back.tenants[i] for i in back.tenant_idx]
+    assert names_back == names
+    assert set(back.tenants) == {"acme", "globex"}
+
+
+def test_tenantless_trace_io_omits_column(tmp_path):
+    tr = _steady_trace(20)
+    path = str(tmp_path / "t.csv")
+    save_trace(tr, path)
+    with open(path) as f:
+        assert "tenant" not in f.readline()
+    assert load_trace(path).tenants == ()
+
+
+def test_tenant_column_concat_and_ledger():
+    a = _tenant_trace(20, seed=1)
+    b = _steady_trace(10)                      # tenant-less folds in as ""
+    merged = Trace.concat([a, b])
+    assert "acme" in merged.tenants and "" in merged.tenants
+    led = RequestLedger.from_trace(a)
+    assert led.tenants == ("acme", "globex")
+    assert np.array_equal(led.tenant_idx, a.tenant_idx)
+    # materialized requests carry the tenant name
+    reqs = a.materialize()
+    assert [r.tenant for r in reqs] == [a.tenants[i] for i in a.tenant_idx]
+    assert b.materialize()[0].tenant is None
