@@ -193,10 +193,14 @@ def run():
                                      degradations=kw.get("degradations"),
                                      outages=kw.get("outages"),
                                      flash_crowds=kw.get("flash_crowds"),
-                                     detector=kw.get("detector"))
+                                     detector=kw.get("detector"),
+                                     overload=kw.get("overload"))
             else:
+                # overload scenarios cap the cluster (sustained saturation
+                # is the point); everything else gets the full budget
                 cluster = SimCluster(default_perf_factory(),
-                                     max_chips=MAX_CHIPS)
+                                     max_chips=kw.get("max_chips",
+                                                      MAX_CHIPS))
                 ctrl = chiron(models=kw["models"]) if "models" in kw \
                     else chiron()
                 res = simulate_events(trace, ctrl, cluster,
@@ -205,7 +209,8 @@ def run():
                                       degradations=kw.get("degradations"),
                                       outages=kw.get("outages"),
                                       flash_crowds=kw.get("flash_crowds"),
-                                      detector=kw.get("detector"))
+                                      detector=kw.get("detector"),
+                                      overload=kw.get("overload"))
             wall = min(wall, time.perf_counter() - t0)
         extra = {}
         recov = res.recovery_metrics()
@@ -237,12 +242,17 @@ def run():
             "slo_by_model": {m: round(v, 4)
                              for m, v in res.slo_by_model().items()},
             "completion_rate": round(res.completion_rate(), 4),
+            "goodput": round(res.goodput(), 4),
+            "goodput_interactive": round(
+                res.goodput(RequestType.INTERACTIVE), 4),
             "gpu_hours": round(res.gpu_hours(), 3),
             "peak_chips": res.peak_chips,
             "hysteresis": round(res.hysteresis, 3),
             "failures": res.failures,
             "degradations": res.degradations,
         }
+        jrow.update({k: round(v, 4)
+                     for k, v in res.outcome_rates().items()})
         if recov:
             # chaos scenarios: first-shock recovery scorecard feeds the
             # bench_trend gate (time-to-recover regressions fail)

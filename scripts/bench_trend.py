@@ -13,7 +13,12 @@ carry recovery fields (``time_to_detect_s``, ``time_to_recover_s``,
 ``max_attainment_dip``) and are additionally gated on
 **time-to-recover**: a run that takes >20% longer (beyond a one-bin
 30 s jitter floor) to bring attainment back within epsilon of its
-pre-shock baseline — or that stops recovering at all — fails. New
+pre-shock baseline — or that stops recovering at all — fails. Rows
+carrying a ``goodput`` field (all of them, now that the overload plane
+stamps outcome rates) are gated on **goodput**: SLO-met completions/s
+dropping by more than the threshold fails — the overload scenarios
+(``retry_storm``, ``graceful_brownout``) exist precisely to keep that
+number honest under saturation. New
 scenarios (present only in the new file) and removed ones are reported
 but never fail the gate; SLO/completion changes are surfaced for
 eyeballs, not gated (they are workload properties, not perf).
@@ -68,7 +73,9 @@ def _validate(doc, label: str) -> dict:
         for k in ("wall_s", "slo_attainment", "completion_rate",
                   "telemetry_overhead_frac", "telemetry_events_per_s",
                   "time_to_detect_s", "time_to_recover_s",
-                  "max_attainment_dip", "skipped_injections"):
+                  "max_attainment_dip", "skipped_injections",
+                  "goodput", "goodput_interactive", "reject_rate",
+                  "shed_rate", "expired_rate"):
             v = r.get(k)
             if v is not None and (isinstance(v, bool)
                                   or not isinstance(v, (int, float))):
@@ -144,7 +151,17 @@ def main(argv) -> int:
                 failures.append((name, -dttr))
             elif n_ttr != o_ttr:
                 note += f" ttr: {o_ttr} -> {n_ttr}"
-        for k in ("slo_attainment", "completion_rate"):
+        # goodput gate (overload scenarios): SLO-met completions/s is the
+        # plane's currency — a >threshold drop means graceful degradation
+        # stopped being graceful, and fails like a perf regression
+        o_gp, n_gp = o.get("goodput"), n.get("goodput")
+        if o_gp is not None and n_gp is not None and o_gp > 0:
+            dgp = n_gp / o_gp - 1.0
+            if dgp < -threshold:
+                note += f" GOODPUT REGRESSION ({dgp:+.1%})"
+                failures.append((name, dgp))
+        for k in ("slo_attainment", "completion_rate", "goodput",
+                  "shed_rate", "reject_rate"):
             if abs(n.get(k, 1.0) - o.get(k, 1.0)) > 1e-6:
                 note += f" {k}: {o.get(k)} -> {n.get(k)}"
         print(f"{name:28s} {o['events_per_s']:10.0f} "

@@ -35,6 +35,8 @@ FAST_TESTS = [
                                      # equivalence vs the reference path
     "tests/test_obs.py",             # flight recorder: replay equivalence,
                                      # span sampling, exporters, overhead
+    "tests/test_overload.py",        # admission/shedding/retries/brownout/
+                                     # breakers + attempt-column round trip
     "tests/test_profile_sim.py",     # profile harness --phases --json
                                      # contract
     "tests/test_queue_plane.py",     # columnar lane mechanics + reference

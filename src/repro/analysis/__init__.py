@@ -48,6 +48,10 @@ MIR103    columnar-queue payload write (``req_objs[i] = req``) without
           paired writes to every key column (``seq``, ``arrival``,
           ``deadline``, ``row``) in the same function (``None``
           cell-clears exempt)
+MIR104    terminal lifecycle write (``req.state = RequestState.<T>``
+          for T in FINISHED/REJECTED/SHED/EXPIRED) without a ``state``
+          column write naming the *same* terminal code in the same
+          function (MIR101 alone cannot tell the codes apart)
 DET201    unseeded global RNG: ``random.<fn>()`` or ``np.random.<fn>()``
           not going through ``default_rng``/``Generator``/``SeedSequence``
 DET202    wall-clock read (``time.time``/``monotonic``/``perf_counter``,

@@ -21,6 +21,12 @@ from repro.sim.ledger import LEDGER_MIRRORS
 # must refresh every key column in the same function
 _QUEUE_PAYLOAD = "req_objs"
 
+# MIR104: terminal lifecycle writes (`req.state = RequestState.<T>` for a
+# terminal T) must pair with a `state` column write mentioning the SAME
+# terminal code name in the same function — MIR101 alone would accept a
+# FINISHED column write as cover for a REJECTED object write.
+_TERMINAL_NAMES = ("FINISHED", "REJECTED", "SHED", "EXPIRED")
+
 # DET201: construction of *seeded* generators is the sanctioned idiom
 _SEEDED_NP = frozenset({"default_rng", "Generator", "SeedSequence",
                         "RandomState", "PCG64", "Philox"})
@@ -149,12 +155,17 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
     paired, in the same function, with writes to every key column in
     :data:`repro.serving.global_queue.QUEUE_KEY_COLUMNS` (``None``
     assignments clear a freed cell and are exempt — the key cells behind
-    the cursor are dead)."""
+    the cursor are dead).
+    MIR104: every *terminal* state write must pair with a ``state``
+    column write naming the same terminal code (see
+    :data:`_TERMINAL_NAMES`)."""
     for fn in _functions(tree):
         if fn.name in _INIT_FUNCS:
             continue
         obj_writes: List[Tuple[str, str, str, int]] = []
         payload_writes: List[int] = []
+        term_writes: List[Tuple[str, int]] = []
+        term_cols: set = set()
         mirror_cols = set()
         plane_synced = False
 
@@ -174,6 +185,10 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
                             continue
                         obj_writes.append((a, LEDGER_MIRRORS[a], "MIR101",
                                            tgt.lineno))
+                        if a == "state":
+                            for term in _TERMINAL_NAMES:
+                                if _mentions(node, term):
+                                    term_writes.append((term, tgt.lineno))
                     elif a in PLANE_MIRRORS:
                         obj_writes.append((a, PLANE_MIRRORS[a], "MIR102",
                                            tgt.lineno))
@@ -184,6 +199,10 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
                         container_write(base, tgt.lineno)
                     else:
                         mirror_cols.add(base)
+                        if base == "state":
+                            for term in _TERMINAL_NAMES:
+                                if _mentions(node, term):
+                                    term_cols.add(term)
                         if base == _QUEUE_PAYLOAD \
                                 and not (isinstance(node, ast.Assign)
                                          and isinstance(node.value,
@@ -222,6 +241,17 @@ def _check_mirrors(tree: ast.Module, out: _Collector) -> None:
                          f"`{fn.name}` (suppress with "
                          "`# mirror-sync: ok(<reason>)` if the columns "
                          "are settled elsewhere)", fn_line=fn.lineno)
+
+        for term, lineno in term_writes:
+            if term not in term_cols:
+                out.emit("MIR104", lineno,
+                         f"terminal state write `RequestState.{term}` "
+                         "without a `state` column write naming "
+                         f"`{term}` in `{fn.name}` — route terminal "
+                         "transitions through the RequestLedger "
+                         "`mark_*` helpers (suppress with "
+                         "`# mirror-sync: ok(<reason>)` if the column "
+                         "is settled elsewhere)", fn_line=fn.lineno)
 
         for attr, col, rule, lineno in obj_writes:
             if col in mirror_cols:

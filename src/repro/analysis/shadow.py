@@ -129,6 +129,7 @@ class ShadowVerifier:
             return
         state = ledger.state
         tokens = ledger.tokens_generated
+        retries = ledger.retries
         ftt = ledger.first_token_time
         fin = ledger.finish_time
         mitl = ledger.mean_itl
@@ -145,6 +146,10 @@ class ShadowVerifier:
                 _fail("ledger `tokens_generated` out of sync",
                       f"{where}: column={int(tokens[row])} "
                       f"object={r.tokens_generated}")
+            if int(retries[row]) != r.retries:
+                _fail("ledger `retries` out of sync",
+                      f"{where}: column={int(retries[row])} "
+                      f"object={r.retries}")
             self._check_optional(ftt, row, r.first_token_time,
                                  "first_token_time", where)
             self._check_optional(fin, row, r.finish_time,

@@ -87,6 +87,54 @@ def _dashboard(groups: Dict[str, list], model: Optional[str],
                       f"(max {max(vals):.2f})", file=out)
 
 
+_OVERLOAD_ACTIONS = ("reject", "shed", "expire", "breaker", "brownout")
+
+
+def _overload(groups: Dict[str, list], meta: dict, width: int,
+              out) -> None:
+    """Shed/reject/breaker panel: only rendered when the run carried the
+    overload plane (any overload-kind decision rows, or nonzero outcome
+    rates in the meta header)."""
+    rows = [r for r in groups["decision"]
+            if r.get("action") in _OVERLOAD_ACTIONS]
+    rates = {k: meta.get(k, 0.0) or 0.0
+             for k in ("reject_rate", "shed_rate", "expired_rate")}
+    if not rows and not any(rates.values()):
+        return
+    print("== overload plane ==", file=out)
+    print(f"  goodput {meta.get('goodput', 0.0):.2f} req/s   "
+          f"rejected {rates['reject_rate']:.1%}   "
+          f"shed {rates['shed_rate']:.1%}   "
+          f"expired {rates['expired_rate']:.1%}", file=out)
+    counts: Dict[str, int] = {}
+    for r in rows:
+        # shed/expire sweeps are aggregate rows: `count` requests each
+        counts[r["action"]] = counts.get(r["action"], 0) \
+            + int(r.get("count", 1))
+    if counts:
+        print("  events     " + "  ".join(
+            f"{k}={counts[k]}" for k in _OVERLOAD_ACTIONS if k in counts),
+            file=out)
+    # per-action activity over time (event counts per time bucket)
+    t1 = max((r["t"] for r in rows), default=0.0)
+    for action in _OVERLOAD_ACTIONS:
+        ts = [r["t"] for r in rows if r["action"] == action]
+        if not ts or t1 <= 0:
+            continue
+        buckets = [0.0] * width
+        for t in ts:
+            buckets[min(int(t / t1 * (width - 1)), width - 1)] += 1
+        print(f"    {action:<8} {_spark(buckets, width)}", file=out)
+    trans = [r for r in rows if r["action"] in ("breaker", "brownout")]
+    for r in trans[:12]:
+        val = r.get("value")
+        vs = f" value={val:.3g}" if isinstance(val, float) \
+            and val == val else ""
+        print(f"  t={r['t']:9.2f}  {r['action']:<8} "
+              f"{r.get('reason'):<10} cluster={r.get('cluster')}{vs}",
+              file=out)
+
+
 def _decisions(groups: Dict[str, list], model: Optional[str],
                out, limit: int = 40) -> None:
     rows = groups["decision"]
@@ -172,6 +220,7 @@ def main(argv=None) -> int:
               f"scale_ups={meta.get('scale_ups')} "
               f"scale_downs={meta.get('scale_downs')}", file=out)
     _dashboard(groups, args.model, args.width, out)
+    _overload(groups, meta, args.width, out)
     _decisions(groups, args.model, out)
     _waterfalls(groups, args.model, args.waterfalls, args.width, out)
     return 0

@@ -40,6 +40,10 @@ def _meta(result, rec: FlightRecorder) -> Dict:
         "degradations": result.degradations,
         "span_sample": rec.span_sample,
         "span_seed": rec.span_seed,
+        # overload-plane currency: goodput + terminal outcome rates ride
+        # in the header so dashboards need no second pass over the rows
+        "goodput": result.goodput(),
+        **result.outcome_rates(),
         # repro-lint: ok(DET202, export stamp only - never read back into simulation state)
         "generated_unix": time.time(),
     }
@@ -226,6 +230,15 @@ def to_prometheus(result, path=None) -> str:
     metric("chiron_completion_rate", "gauge",
            "Fraction of requests finished",
            [({}, result.completion_rate())])
+    metric("chiron_goodput", "gauge",
+           "SLO-met completions per second of simulated time",
+           [({}, result.goodput())])
+    rates = result.outcome_rates()
+    metric("chiron_overload_outcome_rate", "gauge",
+           "Fraction of submitted requests per overload terminal state",
+           [({"outcome": "rejected"}, rates["reject_rate"]),
+            ({"outcome": "shed"}, rates["shed_rate"]),
+            ({"outcome": "expired"}, rates["expired_rate"])])
     metric("chiron_chip_seconds_total", "counter",
            "Chip-seconds consumed over the run",
            [({}, result.chip_seconds)])

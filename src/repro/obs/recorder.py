@@ -46,10 +46,12 @@ _INF = float("inf")
 # int8 decision kinds (stable: rows round-trip through JSONL exports;
 # new kinds append at the end so existing codes never shift)
 (PROVISION, RETIRE, FAIL, DEGRADE, RECOVER, EVICT, MIGRATE, HANDBACK,
- DRAIN, OUTAGE, RESTORE, FLASH) = range(12)
+ DRAIN, OUTAGE, RESTORE, FLASH, REJECT, SHED, EXPIRE, BREAKER,
+ BROWNOUT) = range(17)
 KIND_NAMES = ("provision", "retire", "fail", "degrade", "recover",
               "evict", "migrate", "handback", "drain", "outage",
-              "restore", "flash")
+              "restore", "flash", "reject", "shed", "expire", "breaker",
+              "brownout")
 
 # int8 decision reasons: which control-law term fired. BOOTSTRAP covers
 # warm starts and the controller's keep-a-foothold provisions (step 0);
@@ -57,12 +59,17 @@ KIND_NAMES = ("provision", "retire", "fail", "degrade", "recover",
 # PREEMPT is interactive-over-batch eviction; INJECTED marks plan-driven
 # failures/degradations; PLACEMENT marks fleet-tier residency moves;
 # OUTAGE marks correlated zone-outage crashes and their staged restores;
-# FLASH marks a flash-crowd onset.
+# FLASH marks a flash-crowd onset. The overload plane's terms:
+# INFEASIBLE (admission estimated the TTFT unreachable), DEADLINE (the
+# queued request's deadline passed), RETRY_EXHAUSTED (client gave up),
+# BREAKER (circuit-breaker transition), OVERLOAD (brownout hysteresis).
 (R_BOOTSTRAP, R_IBP_HIGH, R_IBP_LOW, R_BBP_ADD, R_BBP_IDLE, R_BBP_TRIM,
- R_PREEMPT, R_INJECTED, R_PLACEMENT, R_OUTAGE, R_FLASH) = range(11)
+ R_PREEMPT, R_INJECTED, R_PLACEMENT, R_OUTAGE, R_FLASH, R_INFEASIBLE,
+ R_DEADLINE, R_RETRY_EXHAUSTED, R_BREAKER, R_OVERLOAD) = range(16)
 REASON_NAMES = ("bootstrap", "ibp_high", "ibp_low", "bbp_add",
                 "bbp_idle", "bbp_trim", "preempt", "injected",
-                "placement", "outage", "flash")
+                "placement", "outage", "flash", "infeasible", "deadline",
+                "retry_exhausted", "breaker", "overload")
 
 # int8 span events
 SPAN_ADMIT, SPAN_PREEMPT = 0, 1
@@ -422,6 +429,57 @@ class FlightRecorder:
                               DRAIN, R_PLACEMENT, self._model_code(model),
                               -1, _NAN, _NAN, 0, 0, -1, moved)
 
+    # ------------------------------------------------------ overload hooks
+    def record_reject(self, cluster, now: float, model: str,
+                      wait_est: float, budget: float,
+                      reason: int = R_INFEASIBLE) -> None:
+        """Admission refusal: the estimated wait (``value``) against the
+        TTFT budget it blew (``threshold``); ``reason`` carries the term
+        that fired (INFEASIBLE at admission, RETRY_EXHAUSTED when the
+        client abandoned after its last attempt)."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), REJECT,
+                              reason, self._model_code(model), -1,
+                              wait_est, budget, chips, chips, -1, 1)
+
+    def record_shed(self, cluster, now: float, model: str,
+                    count: int) -> None:
+        """Brownout shed sweep: ``count`` queued interactive requests of
+        ``model`` dropped as infeasible."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), SHED,
+                              R_OVERLOAD, self._model_code(model), -1,
+                              _NAN, _NAN, chips, chips, -1, count)
+
+    def record_expire(self, cluster, now: float, model: str,
+                      count: int) -> None:
+        """Deadline sweep: ``count`` queued interactive requests whose
+        deadline passed before service."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), EXPIRE,
+                              R_DEADLINE, self._model_code(model), -1,
+                              _NAN, _NAN, chips, chips, -1, count)
+
+    def record_breaker(self, now: float, cluster_name: str,
+                       state_code: int, ewma: float,
+                       threshold: float) -> None:
+        """Circuit-breaker transition: the new state lands in ``itype``
+        (0 closed / 1 half-open / 2 open — breaker rows carry no
+        instance type) with the rejection EWMA and trip threshold."""
+        self.decisions.append(now, self.cluster_code_by_name(cluster_name),
+                              BREAKER, R_BREAKER, -1, state_code, ewma,
+                              threshold, 0, 0, -1, 1)
+
+    def record_brownout(self, cluster, now: float, entered: bool,
+                        depth: int, threshold: float) -> None:
+        """Brownout enter (``itype`` 1) / exit (``itype`` 0) with the
+        interactive backlog that tripped the hysteresis."""
+        chips = cluster.used_chips()
+        self.decisions.append(now, self._cluster_code(cluster), BROWNOUT,
+                              R_OVERLOAD, -1, 1 if entered else 0,
+                              float(depth), threshold, chips, chips,
+                              -1, 1)
+
     # ---------------------------------------------------------- tick hooks
     def record_signals(self, now: float, cluster, model: str,
                        ibp: float, theta: float, bbp: int,
@@ -515,6 +573,15 @@ class FlightRecorder:
             "outages": int(counts[OUTAGE]),
             "restores": int(counts[RESTORE]),
             "flash_crowds": int(counts[FLASH]),
+            "rejections": int(counts[REJECT]),
+            "sheds": int(weights[kinds == SHED].sum()),
+            "expirations": int(weights[kinds == EXPIRE].sum()),
+            "breaker_trips": int(np.count_nonzero(
+                (kinds == BREAKER)
+                & (self.decisions.col("itype") == 2))),
+            "brownouts": int(np.count_nonzero(
+                (kinds == BROWNOUT)
+                & (self.decisions.col("itype") == 1))),
         }
 
     def replay_instance_counts(self, times) -> np.ndarray:

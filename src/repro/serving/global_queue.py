@@ -320,6 +320,74 @@ class GlobalQueue:
                     best, best_seq = lane, s
         return best
 
+    # ------------------------------------------------- overload sweeping
+    def sweep_interactive(self, now: float, *, grace: float = 0.0,
+                          wait_by_model: Optional[Dict[str, float]] = None
+                          ) -> Tuple[List[Request], List[Request]]:
+        """Vectorized overload sweep over the interactive lanes; batch
+        lanes are never touched (defer, don't drop).
+
+        Returns ``(expired, shed)``: entries whose deadline (+``grace``)
+        already passed are removed as EXPIRED candidates; when
+        ``wait_by_model`` gives a per-queued-request service delay
+        (brownout mode), entries whose estimated service start
+        ``now + position * delay`` would still miss the deadline are
+        removed as SHED candidates. Interactive lane deadlines are *not*
+        monotone (several SLO classes share one per-model FIFO, and
+        front-requeues take negative stamps), so this is a masked sweep
+        over the deadline column, not a bisect. The caller owns the
+        terminal state / ledger / retry bookkeeping for what comes back.
+        """
+        expired: List[Request] = []
+        shed: List[Request] = []
+        for lane in self._ilanes.values():
+            h, t = lane.head, lane.tail
+            if t <= h:
+                continue
+            dl = lane.deadline[h:t]
+            gone = dl + grace < now
+            doomed = None
+            if wait_by_model is not None:
+                w = wait_by_model.get(lane.model, 0.0)
+                if w > 0.0:
+                    start = now + np.arange(t - h, dtype=np.float64) * w
+                    doomed = (start > dl + grace) & ~gone
+                    if not doomed.any():
+                        doomed = None
+            if doomed is None and not gone.any():
+                continue
+            gidx = np.nonzero(gone)[0]
+            expired.extend(lane.req_objs[h + int(i)] for i in gidx)
+            if doomed is not None:
+                shed.extend(lane.req_objs[h + int(i)]
+                            for i in np.nonzero(doomed)[0])
+                keep = ~(gone | doomed)
+            else:
+                keep = ~gone
+            self._compact_ilane(lane, keep)
+        return expired, shed
+
+    def _compact_ilane(self, lane: _Lane, keep: np.ndarray) -> None:
+        """Drop the masked-out entries, preserving order (and the key
+        column / payload mirror) for the survivors."""
+        h = lane.head
+        dropped = int(keep.size) - int(np.count_nonzero(keep))
+        kidx = np.nonzero(keep)[0] + h
+        k = int(kidx.size)
+        lane.seq[h:h + k] = lane.seq[kidx]
+        lane.arrival[h:h + k] = lane.arrival[kidx]
+        lane.deadline[h:h + k] = lane.deadline[kidx]
+        lane.row[h:h + k] = lane.row[kidx]
+        lane.req_objs[h:h + k] = [lane.req_objs[int(i)] for i in kidx]
+        for i in range(h + k, lane.tail):
+            # mirror-sync: ok(freed payload cells; their key cells are dead)
+            lane.req_objs[i] = None
+        if k == 0:
+            lane.head = lane.tail = 0
+        else:
+            lane.tail = h + k
+        self._icount -= dropped
+
     # ------------------------------------------------------ batch serving
     def batch_models(self) -> List[str]:
         """Models with queued batch work (lane insertion order)."""

@@ -26,6 +26,16 @@ class RequestState(enum.Enum):
     RUNNING = "running"
     PREEMPTED = "preempted"     # evicted from a mixed instance, KV on host
     FINISHED = "finished"
+    # overload-plane terminal states (never served):
+    REJECTED = "rejected"       # refused at admission (infeasible TTFT)
+    SHED = "shed"               # proactively dropped under brownout
+    EXPIRED = "expired"         # deadline passed while still queued
+
+
+# States a request can never leave (the accounting identity
+# finished + rejected + shed + expired == n holds over completed runs)
+TERMINAL_STATES = (RequestState.FINISHED, RequestState.REJECTED,
+                   RequestState.SHED, RequestState.EXPIRED)
 
 
 # The paper's production-derived SLO defaults (§6 Workloads)
@@ -71,6 +81,15 @@ class Request:
     finish_time: Optional[float] = None
     itl_samples: List[float] = field(default_factory=list)
     preemptions: int = 0
+    # client retry attempts consumed so far (overload plane): incremented
+    # when a rejected/shed request re-arrives with backoff; mirrored into
+    # the ledger ``retries`` column
+    retries: int = 0
+    # per-attempt deadline re-arm (overload plane): a retry re-arrival at
+    # ``tr`` sets this to ``tr + slo.ttft`` so the queue's deadline sweep
+    # gives each attempt its own SLO window. ``arrival_time`` stays the
+    # *first* submission — SLO attainment and goodput remain end-to-end.
+    deadline_at: Optional[float] = None
     # host-offloaded KV (real engine: actual arrays; sim: token count)
     saved_kv: Optional[object] = None
     # optional explicit prompt token ids (enables prefix caching; the
@@ -83,7 +102,10 @@ class Request:
 
     @property
     def deadline(self) -> float:
-        """TTFT-SLO-based deadline for first token."""
+        """TTFT-SLO-based deadline for first token (re-armed per client
+        retry attempt — see ``deadline_at``)."""
+        if self.deadline_at is not None:
+            return self.deadline_at
         return self.arrival_time + self.slo.ttft
 
     @property

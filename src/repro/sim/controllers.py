@@ -122,10 +122,15 @@ class BaseController:
     # flight recorder (repro.obs) attached by the engines when telemetry
     # is armed; None costs one predicted branch per control tick
     obs = None
+    # brownout mode (repro.sim.overload): while True, batch work is
+    # deferred — no batch routing or backfill — so every slot serves the
+    # interactive backlog. Set by the engines' overload plane; the False
+    # default keeps overload-free runs bit-identical.
+    brownout_active = False
 
     def route(self, cluster: SimCluster, queue: GlobalQueue, now: float) -> None:
         self.route_interactive(cluster, queue, now, use_memo=False)
-        if not queue.n_batch:
+        if not queue.n_batch or self.brownout_active:
             return
         for model in queue.batch_models():
             pools = [cluster.by_model(model, InstanceType.BATCH)]
@@ -396,6 +401,8 @@ class BaseController:
         """Fill spare capacity on ``insts`` from their models' batch lanes.
         The queue pops in service order (resume lane, then earliest
         deadline / FCFS) at O(log n) per admission — no per-pass sort."""
+        if self.brownout_active:
+            return                   # brownout: batch strictly deferred
         for inst in insts:
             if inst.itype == InstanceType.INTERACTIVE:
                 continue             # interactive pool never serves batch
@@ -429,6 +436,26 @@ class BaseController:
                     if kv + req.prompt_len > wall:
                         break
                 inst.admit(queue.pop_batch_fcfs(model), now)
+
+    def brownout_preempt_batch(self, cluster: SimCluster,
+                               queue: GlobalQueue, now: float) -> int:
+        """Brownout's aggressive arm: evict every batch request running
+        on a mixed instance back to the queue (host-saved KV lands in
+        the resume lanes, so nothing is lost) so the whole mixed pool
+        serves the interactive backlog. Returns the eviction count."""
+        n = 0
+        for inst in (cluster._active.values()
+                     if isinstance(cluster, SimCluster)
+                     else cluster.active_instances()):
+            if inst.itype != InstanceType.MIXED:
+                continue
+            while inst.n_running_batch() > 0:
+                victim = inst.evict_one_batch(now)
+                if victim is None:
+                    break
+                queue.requeue(victim)
+                n += 1
+        return n
 
     def control(self, cluster: SimCluster, queue: GlobalQueue,
                 now: float) -> None:

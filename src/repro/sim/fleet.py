@@ -46,6 +46,7 @@ from repro.serving.request import BATCH_ITL_SLO, Request
 from repro.sim.cluster import InstanceType, SimCluster
 from repro.sim.controllers import ChironController
 from repro.sim.metrics import ClusterStats
+from repro.sim.overload import BreakerConfig, CircuitBreaker
 from repro.sim.simulator import default_perf_factory
 from repro.sim.workload import DEFAULT_MODEL, theta_from_history
 
@@ -216,12 +217,56 @@ class Router:
     reference ITL, and $/Mtoken are all static per (model, origin) — so
     they are cached and invalidated by the fleet's ``residency_epoch``
     instead of re-sorted on every arrival (the per-arrival hot path of
-    ``simulate_fleet``)."""
+    ``simulate_fleet``).
+
+    ``breaker`` arms per-cluster circuit breakers on the admission
+    rejection-rate EWMA (fed by ``simulate_fleet`` when the overload
+    plane is on): routing skips clusters whose breaker is open,
+    deflecting to the next candidate at the price of the network hop;
+    after the cooldown a half-open breaker admits trial traffic and
+    closes on consecutive accepts. Transitions are stamped into the obs
+    decision ledger (state code in the row's ``itype`` slot)."""
+
+    breaker: Optional[BreakerConfig] = None
 
     def bind(self, fleet: "Fleet") -> None:
         self._fleet = fleet
         self._iorder: Dict[Tuple[str, str], Tuple[int, list]] = {}
         self._border: Dict[str, Tuple[int, list]] = {}
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        if self.breaker is not None:
+            self._breakers = {fc.name: CircuitBreaker(self.breaker)
+                              for fc in fleet.clusters}
+
+    # ------------------------------------------------- circuit breakers
+    def breaker_for(self, fc: FleetCluster) -> Optional[CircuitBreaker]:
+        return self._breakers.get(fc.name)
+
+    def note_admission(self, fc: FleetCluster, rejected: bool,
+                       now: float) -> Optional[Tuple[int, float]]:
+        """Feed one admission outcome at ``fc`` into its breaker;
+        returns ``(new_state_code, ewma)`` on a transition, else None."""
+        brk = self._breakers.get(fc.name)
+        if brk is None:
+            return None
+        new_state = brk.record(rejected, now)
+        if new_state is None:
+            return None
+        return new_state, brk.ewma
+
+    def _allowed(self, fc: FleetCluster, now: float) -> bool:
+        """May traffic route to ``fc``? Stamps the open -> half-open
+        cooldown transition when it happens here."""
+        brk = self._breakers.get(fc.name)
+        if brk is None:
+            return True
+        before = brk.state
+        ok = brk.allows(now)
+        if brk.state != before and self._fleet.obs is not None:
+            self._fleet.obs.record_breaker(now, fc.name, brk.state,
+                                           brk.ewma,
+                                           brk.cfg.open_threshold)
+        return ok
 
     def _actives_interactive(self, model: str, origin: str) -> list:
         fleet = self._fleet
@@ -272,9 +317,9 @@ class Router:
         origin = req.origin if req.origin else fleet.topology.regions[0]
         model = req.model
         if req.is_interactive:
-            fc = self._pick_interactive(model, origin)
+            fc = self._pick_interactive(model, origin, now)
         else:
-            fc = self._pick_batch(model)
+            fc = self._pick_batch(model, now)
         if fc is None:
             # cold start: nothing resident anywhere — nearest cluster with
             # budget becomes the model's discovered (floor-less) home
@@ -283,22 +328,33 @@ class Router:
                 fleet.residency_epoch += 1
         return fc
 
-    def _pick_interactive(self, model: str,
-                          origin: str) -> Optional[FleetCluster]:
-        """Lowest latency with capacity; spill farther on saturation;
-        wait at the nearest resident cluster when the fleet is full."""
+    def _pick_interactive(self, model: str, origin: str,
+                          now: float) -> Optional[FleetCluster]:
+        """Lowest latency with capacity; spill farther on saturation
+        (and around open breakers — the hop is the deflection price);
+        wait at the nearest routable cluster when the fleet is full."""
         order = self._actives_interactive(model, origin)
+        if self._breakers:
+            routable = [fc for fc in order if self._allowed(fc, now)]
+            if routable:                 # every breaker open: route anyway
+                order = routable
         for fc in order:
             if fc.interactive_headroom(model) > 0:
                 return fc
         return order[0] if order else None
 
-    def _pick_batch(self, model: str) -> Optional[FleetCluster]:
+    def _pick_batch(self, model: str,
+                    now: float) -> Optional[FleetCluster]:
         """Cheapest backpressure-positive cluster (placer's consolidation
-        target first); least-backlogged when every cluster is saturated."""
+        target first); least-backlogged when every cluster is saturated.
+        Open breakers deflect batch work like interactive."""
         order = self._actives_batch(model)
         if not order:
             return None
+        if self._breakers:
+            routable = [fc for fc in order if self._allowed(fc, now)]
+            if routable:
+                order = routable
         tname = self._fleet.placer.batch_target.get(model)
         if tname is not None:
             tfc = self._fleet.by_name.get(tname)

@@ -25,7 +25,9 @@ space always covers every request the simulator has seen.
 
 Lifecycle state is encoded as int8 (``STATE_CODES`` maps from
 :class:`~repro.serving.request.RequestState`): QUEUED=0, RUNNING=1,
-PREEMPTED=2, FINISHED=3. Unwritten float cells are NaN (never observed).
+PREEMPTED=2, FINISHED=3, plus the overload-plane terminal states
+REJECTED=4, SHED=5, EXPIRED=6. Unwritten float cells are NaN (never
+observed).
 """
 from __future__ import annotations
 
@@ -35,14 +37,22 @@ import numpy as np
 
 from repro.serving.request import Request, RequestState, RequestType
 
-# int8 lifecycle codes (stable: the ledger round-trips through files)
+# int8 lifecycle codes (stable: the ledger round-trips through files).
+# 4..6 are the overload-plane terminal states (append-only).
 QUEUED, RUNNING, PREEMPTED, FINISHED = 0, 1, 2, 3
+REJECTED, SHED, EXPIRED = 4, 5, 6
 STATE_CODES: Dict[RequestState, int] = {
     RequestState.QUEUED: QUEUED,
     RequestState.RUNNING: RUNNING,
     RequestState.PREEMPTED: PREEMPTED,
     RequestState.FINISHED: FINISHED,
+    RequestState.REJECTED: REJECTED,
+    RequestState.SHED: SHED,
+    RequestState.EXPIRED: EXPIRED,
 }
+# Terminal codes: a row in one of these states is done (accounting
+# identity: the terminal counts sum to n over a completed run)
+TERMINAL_CODES = (FINISHED, REJECTED, SHED, EXPIRED)
 
 # Mirror registry: ``Request`` attribute -> ledger outcome column written
 # at the same mutation site (``led.<col>[req.row] = ...``). The static
@@ -55,6 +65,7 @@ LEDGER_MIRRORS: Dict[str, str] = {
     "first_token_time": "first_token_time",
     "finish_time": "finish_time",
     "tokens_generated": "tokens_generated",
+    "retries": "retries",
 }
 # Derived mirror (documented for the shadow verifier, not auto-audited:
 # the object side is a list *append*, not an assignment): the event core
@@ -77,7 +88,7 @@ class RequestLedger:
                  "ttft_slo", "itl_slo", "model_idx", "origin_idx",
                  "tenant_idx", "models", "origins", "tenants",
                  "first_token_time", "finish_time",
-                 "tokens_generated", "state", "mean_itl",
+                 "tokens_generated", "state", "mean_itl", "retries",
                  "_backing", "_cap")
 
     def __init__(self, n: int, *, models: Tuple[str, ...] = (),
@@ -103,6 +114,7 @@ class RequestLedger:
         self.tokens_generated = np.zeros(n, dtype=np.int64)
         self.state = np.zeros(n, dtype=np.int8)
         self.mean_itl = np.full(n, np.nan)
+        self.retries = np.zeros(n, dtype=np.int32)
 
     # ------------------------------------------------------- construction
     @classmethod
@@ -123,6 +135,10 @@ class RequestLedger:
         tidx = getattr(trace, "tenant_idx", None)
         if tidx is not None:
             led.tenant_idx = tidx
+        att = getattr(trace, "attempt", None)
+        if att is not None:
+            # pre-consumed client retry attempts (replayed overload trace)
+            led.retries[:] = att
         return led
 
     @classmethod
@@ -167,6 +183,7 @@ class RequestLedger:
             led.itl_slo[i] = r.slo.itl
             led.state[i] = STATE_CODES[r.state]
             led.tokens_generated[i] = r.tokens_generated
+            led.retries[i] = r.retries
             if r.first_token_time is not None:
                 led.first_token_time[i] = r.first_token_time
             if r.finish_time is not None:
@@ -188,7 +205,7 @@ class RequestLedger:
         ("first_token_time", np.float64, np.nan),
         ("finish_time", np.float64, np.nan),
         ("tokens_generated", np.int64, 0), ("state", np.int8, 0),
-        ("mean_itl", np.float64, np.nan),
+        ("mean_itl", np.float64, np.nan), ("retries", np.int32, 0),
     )
 
     def _reserve(self, extra: int) -> None:
@@ -249,6 +266,9 @@ class RequestLedger:
         if tidx is None:
             tidx = np.zeros(trace.n, dtype=np.int32)
         b["tenant_idx"][base:hi] = tremap[tidx] if len(tremap) else tidx
+        att = getattr(trace, "attempt", None)
+        if att is not None:
+            b["retries"][base:hi] = att
         # outcome cells keep their fill values (nan / 0)
         self.n = hi
         self._expose()
@@ -264,6 +284,44 @@ class RequestLedger:
         setattr(self, attr, tuple(mine))
         return remap[:len(vocab)]
 
+    # ------------------------------------------------- overload lifecycle
+    # Each helper moves the object state and its ledger column together in
+    # one function — the MIR104 auditor requires exactly this pairing for
+    # every terminal write, so the engines route all overload-plane state
+    # transitions through here instead of open-coding them.
+    def mark_rejected(self, req: Request) -> None:
+        """Terminal REJECTED: refused at admission (infeasible TTFT)."""
+        req.state = RequestState.REJECTED
+        if req.row >= 0:
+            self.state[req.row] = REJECTED
+
+    def mark_shed(self, req: Request) -> None:
+        """Terminal SHED: proactively dropped from the queue (brownout)."""
+        req.state = RequestState.SHED
+        if req.row >= 0:
+            self.state[req.row] = SHED
+
+    def mark_expired(self, req: Request) -> None:
+        """Terminal EXPIRED: deadline passed while still queued."""
+        req.state = RequestState.EXPIRED
+        if req.row >= 0:
+            self.state[req.row] = EXPIRED
+
+    def mark_queued(self, req: Request) -> None:
+        """A retry attempt re-enters the lifecycle (REJECTED/SHED ->
+        QUEUED before the re-admission gate runs)."""
+        req.state = RequestState.QUEUED
+        if req.row >= 0:
+            self.state[req.row] = QUEUED
+
+    def bump_retry(self, req: Request) -> int:
+        """Consume one client retry attempt (object + column together —
+        the ``retries`` mirror is MIR101-audited like any other)."""
+        req.retries = req.retries + 1
+        if req.row >= 0:
+            self.retries[req.row] = req.retries
+        return req.retries
+
     # -------------------------------------------------------- reductions
     def class_mask(self, rtype: Optional[RequestType]) -> Optional[np.ndarray]:
         if rtype is None:
@@ -274,6 +332,30 @@ class RequestLedger:
 
     def finished_mask(self) -> np.ndarray:
         return self.state == FINISHED
+
+    def state_counts(self) -> np.ndarray:
+        """Requests per lifecycle code (one bincount; index with the
+        module constants, e.g. ``counts[REJECTED]``)."""
+        if not self.n:
+            return np.zeros(EXPIRED + 1, dtype=np.int64)
+        return np.bincount(self.state, minlength=EXPIRED + 1)
+
+    def goodput_mask(self) -> np.ndarray:
+        """Rows that finished *and* met their SLO — the overload plane's
+        currency: shed/rejected/expired rows and SLO-blown completions
+        both fall out."""
+        return self.slo_met_mask()
+
+    def goodput(self, duration: float,
+                rtype: Optional[RequestType] = None) -> float:
+        """SLO-met completions per second over ``duration``."""
+        if not duration:
+            return 0.0
+        good = self.goodput_mask()
+        mask = self.class_mask(rtype)
+        if mask is not None:
+            good = good & mask
+        return float(np.count_nonzero(good)) / duration
 
     def ttft(self) -> np.ndarray:
         """Per-row TTFT (NaN where no first token was observed)."""

@@ -15,7 +15,8 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.serving.request import Request, RequestState, RequestType
-from repro.sim.ledger import FINISHED, RequestLedger
+from repro.sim.ledger import (EXPIRED, FINISHED, REJECTED, RequestLedger,
+                              SHED)
 
 
 @dataclass
@@ -314,6 +315,43 @@ class RunResult:
         return sum(r.state == RequestState.FINISHED
                    for r in self.requests) / len(self.requests)
 
+    # -------------------------------------------------- overload currency
+    def goodput(self, rtype=None) -> float:
+        """SLO-met completions per second — the overload plane's
+        currency. Rejected/shed/expired requests and SLO-blown
+        completions all fall out of the numerator; admission control
+        earns its keep by keeping this up while the raw completion rate
+        drops."""
+        if not self.duration:
+            return 0.0
+        if self.ledger is not None:
+            return self.ledger.goodput(self.duration, rtype)
+        good = sum(1 for r in self._done(rtype)
+                   if r.state == RequestState.FINISHED and r.slo_met())
+        return good / self.duration
+
+    def outcome_rates(self) -> Dict[str, float]:
+        """Fractions of all submitted requests per terminal outcome:
+        ``reject_rate`` / ``shed_rate`` / ``expired_rate``. All three are
+        0.0 on runs without the overload plane, so the keys are stable
+        across configurations (trend tooling diffs them directly)."""
+        if self.ledger is not None and self.ledger.n:
+            counts = self.ledger.state_counts()
+            n = self.ledger.n
+            return {"reject_rate": int(counts[REJECTED]) / n,
+                    "shed_rate": int(counts[SHED]) / n,
+                    "expired_rate": int(counts[EXPIRED]) / n}
+        n = len(self.requests)
+        if not n:
+            return {"reject_rate": 0.0, "shed_rate": 0.0,
+                    "expired_rate": 0.0}
+        states = [r.state for r in self.requests]
+        return {
+            "reject_rate": states.count(RequestState.REJECTED) / n,
+            "shed_rate": states.count(RequestState.SHED) / n,
+            "expired_rate": states.count(RequestState.EXPIRED) / n,
+        }
+
     # ------------------------------------------------------------ thr/eff
     def total_tokens(self) -> int:
         if self.ledger is not None:
@@ -418,6 +456,10 @@ class RunResult:
           there* (end of the last populated bin below the band); 0.0
           when attainment never left the band, -1.0 when it has not
           recovered by end of run.
+        - ``recovered``: explicit boolean companion to the -1.0
+          sentinel — ``False`` exactly when the run ended still below
+          the recovery band, so scorecard consumers never have to
+          compare against the sentinel.
         - ``time_to_detect_s``: seconds from onset until the control
           plane visibly reacts — the first timeline sample where the
           live-instance count rises above its running minimum since
@@ -440,8 +482,12 @@ class RunResult:
         tot = np.bincount(bins, minlength=nbins)
         hit = np.bincount(bins, weights=met, minlength=nbins)
         have = tot > 0
-        att = np.ones(nbins)
-        att[have] = hit[have] / tot[have]
+        # NaN-safe division: an overload run can shed every arrival in a
+        # bin (hit=0, attainment 0.0, still populated); the guarded form
+        # also keeps any upstream NaN weight from poisoning the bin
+        with np.errstate(invalid="ignore", divide="ignore"):
+            att = np.where(have, hit / np.maximum(tot, 1), 1.0)
+        att = np.nan_to_num(att, nan=0.0)
         interactive = led.interactive.astype(bool)
         tl = self.timeline
         if isinstance(tl, Timeline) and len(tl):
@@ -453,7 +499,10 @@ class RunResult:
             tl_n = np.empty(0, dtype=np.int64)
 
         def _att(mask: np.ndarray) -> float:
-            return float(met[mask].mean()) if mask.any() else 1.0
+            if not mask.any():
+                return 1.0
+            v = float(met[mask].mean())
+            return v if np.isfinite(v) else 0.0
 
         out: List[Dict] = []
         for shock in self.shocks:
@@ -504,6 +553,7 @@ class RunResult:
                 "baseline_attainment": baseline,
                 "max_attainment_dip": max_dip,
                 "time_to_recover_s": ttr,
+                "recovered": ttr >= 0.0,
                 "time_to_detect_s": ttd,
                 "window_attainment": _att(win),
                 "window_interactive": _att(win & interactive),
@@ -518,6 +568,8 @@ class RunResult:
             "slo_interactive": self.slo_attainment(RequestType.INTERACTIVE),
             "slo_batch": self.slo_attainment(RequestType.BATCH),
             "completion_rate": self.completion_rate(),
+            "goodput": self.goodput(),
+            "goodput_interactive": self.goodput(RequestType.INTERACTIVE),
             "request_throughput": self.request_throughput(),
             "per_instance_throughput": self.per_instance_throughput(),
             "gpu_hours": self.gpu_hours(),
@@ -525,6 +577,7 @@ class RunResult:
             "hysteresis": self.hysteresis,
             "mean_itl": self.mean_itl(),
         }
+        out.update(self.outcome_rates())
         by_model = self.slo_by_model()
         if len(by_model) > 1:           # multi-model fleet: per-model SLOs
             for m, v in by_model.items():

@@ -546,6 +546,97 @@ def flash_crowd(n_requests: int, seed: int = 0, *,
                    "flash_crowds": plan}
 
 
+def _heavy_tokens(rng: np.random.Generator, n: int,
+                  prompt_med: float, output_med: float):
+    """Near-constant heavy requests (tight lognormal): the overload
+    scenarios need sustained saturation, not a lucky light-token lull."""
+    ins = np.clip(rng.lognormal(np.log(prompt_med), 0.25, n),
+                  64, 4 * MAX_TOKENS).astype(np.int64)
+    outs = np.clip(rng.lognormal(np.log(output_med), 0.25, n),
+                   16, MAX_TOKENS).astype(np.int64)
+    return ins, outs
+
+
+@register("retry_storm",
+          "sustained interactive overload far past a capped cluster: "
+          "SLO-aware admission rejects infeasible arrivals, rejected "
+          "clients re-submit with jittered exponential backoff, and the "
+          "deadline sweep sheds what still cannot make its window",
+          default_n=1200)
+def retry_storm(n_requests: int, seed: int = 0, *,
+                arrival_rate: float = 80.0,
+                ttft_slo: float = 3.0,
+                prompt_med: float = 1500.0,
+                output_med: float = 400.0,
+                max_chips: int = 4,
+                slack: float = 1.0,
+                max_retries: int = 3,
+                base_backoff: float = 2.0,
+                retry_budget: float = 45.0,
+                overload_enabled: bool = True) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.overload import OverloadConfig
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / arrival_rate, n_requests))
+    ins, outs = _heavy_tokens(rng, n_requests, prompt_med, output_med)
+    trace = make_trace(times, ins, outs,
+                       np.ones(n_requests, dtype=bool), ttft_slo=ttft_slo)
+    kw: SimKwargs = {"max_time": trace.duration + 600.0,
+                     "max_chips": max_chips}
+    if overload_enabled:
+        kw["overload"] = OverloadConfig.full(
+            slack=slack, max_retries=max_retries,
+            base_backoff=base_backoff, budget=retry_budget)
+    return trace, kw
+
+
+@register("graceful_brownout",
+          "mixed interactive+batch stream with a mid-trace overload "
+          "wave: sustained-overload hysteresis engages brownout (batch "
+          "deferred and preempted, hopeless interactive backlog shed), "
+          "then exits cleanly once the wave passes",
+          default_n=2000)
+def graceful_brownout(n_requests: int, seed: int = 0, *,
+                      base_rate: float = 10.0,
+                      storm_rate: float = 70.0,
+                      storm_frac: float = 0.4,
+                      interactive_frac: float = 0.75,
+                      ttft_slo: float = 4.0,
+                      batch_ttft_slo: float = 1800.0,
+                      prompt_med: float = 1200.0,
+                      output_med: float = 350.0,
+                      max_chips: int = 6,
+                      slack: float = 1.0,
+                      max_retries: int = 1,
+                      base_backoff: float = 3.0,
+                      retry_budget: float = 30.0,
+                      overload_enabled: bool = True) -> Tuple[Trace, SimKwargs]:
+    from repro.sim.overload import OverloadConfig
+    rng = np.random.default_rng(seed)
+    n_storm = int(n_requests * storm_frac)
+    n_base = n_requests - n_storm
+    base_t = np.cumsum(rng.exponential(1.0 / base_rate, n_base))
+    ins_b, outs_b = _heavy_tokens(rng, n_base, prompt_med, output_med)
+    cls = rng.random(n_base) < interactive_frac
+    base = make_trace(base_t, ins_b, outs_b, cls, ttft_slo=np.where(
+        cls, ttft_slo, batch_ttft_slo), sort=False)
+    # the wave lands mid-trace, all interactive, far past capacity —
+    # long enough that the brownout hysteresis confirms it is sustained
+    t0 = 0.35 * float(base_t[-1])
+    storm_t = t0 + np.cumsum(rng.exponential(1.0 / storm_rate, n_storm))
+    ins_s, outs_s = _heavy_tokens(rng, n_storm, prompt_med, output_med)
+    storm = make_trace(storm_t, ins_s, outs_s,
+                       np.ones(n_storm, dtype=bool), ttft_slo=ttft_slo,
+                       sort=False)
+    trace = Trace.concat([base, storm]).sorted_by_arrival()
+    kw: SimKwargs = {"max_time": trace.duration + 900.0,
+                     "max_chips": max_chips}
+    if overload_enabled:
+        kw["overload"] = OverloadConfig.full(
+            slack=slack, max_retries=max_retries,
+            base_backoff=base_backoff, budget=retry_budget)
+    return trace, kw
+
+
 @register("instance_failures",
           "steady interactive stream with injected instance crashes: the "
           "hierarchy must re-provision and re-queue displaced work",

@@ -63,6 +63,8 @@ from repro.sim.cluster import InstanceState, InstanceType, SimCluster
 from repro.sim.controllers import BaseController
 from repro.sim.ledger import RequestLedger
 from repro.sim.metrics import RunResult, Shock, Timeline
+from repro.sim.overload import (BrownoutState, OverloadConfig, WaitGauge,
+                                is_overloaded)
 from repro.sim.perf_model import PerfModel
 from repro.sim.workload import Trace, TraceStream
 
@@ -72,8 +74,10 @@ from repro.sim.workload import Trace, TraceStream
 # _NET (cross-region arrival) and _WARM (placement warm-up) are fleet-only.
 # _OUTAGE/_RESTORE drive correlated zone failures with staged capacity
 # return; _BURST marks a flash-crowd onset in the decision ledger.
+# _RETRY is a client re-arrival of a rejected/shed request after its
+# deterministic jittered backoff (payload: the Request itself).
 (_READY, _COMPLETION, _FAIL, _DEGRADE, _RECOVER, _NET, _WARM,
- _OUTAGE, _RESTORE, _BURST) = range(10)
+ _OUTAGE, _RESTORE, _BURST, _RETRY) = range(11)
 
 _INF = float("inf")
 
@@ -381,6 +385,7 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                     reference: bool = False,
                     shadow_verify=None,
                     telemetry=None,
+                    overload: Optional[OverloadConfig] = None,
                     phase_timers=None) -> RunResult:
     """Event-driven simulation. ``quantize > 0`` snaps every event time up
     to that grid, making the run a *sparse fixed-tick*: it touches only
@@ -406,6 +411,12 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     recorder rides on the result as ``RunResult.telemetry``; decisions
     are bit-identical either way.
 
+    ``overload`` arms the overload control plane
+    (:class:`repro.sim.overload.OverloadConfig`): SLO-aware admission,
+    deadline shedding, deterministic client retries, and brownout mode.
+    ``None`` (or an all-``None`` config) is bit-identical to the
+    pre-overload engine; requires the columnar path (``reference=False``).
+
     ``phase_timers`` (``scripts/profile_sim.py --phases``) is an injected
     accumulator with ``clock()``/``lap(name, t0)`` — the loop brackets
     its six numbered phases with it; ``None`` (the default) costs one
@@ -414,6 +425,10 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     from repro.obs.recorder import resolve as _obs_resolve
     shadow = _shadow_resolve(shadow_verify)
     rec = _obs_resolve(telemetry)
+    ov = overload if overload is not None and overload.active else None
+    if ov is not None and reference:
+        raise ValueError("overload control requires the columnar engine "
+                         "(reference=True is the pre-overload baseline)")
     queue = make_queue(reference)
     cursor = _RequestCursor(requests)
     t = 0.0
@@ -471,6 +486,32 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     use_memo = not reference
     if reference:
         cluster.vec_min = 1 << 30        # scalar catch-up only
+
+    # ---- overload control plane (all off when ov is None) ----
+    ov_adm = ov.admission if ov is not None else None
+    ov_shed = ov.shedding if ov is not None else None
+    ov_retry = ov.retry if ov is not None else None
+    ov_brown = ov.brownout if ov is not None else None
+    gauge = None
+    brownout = None
+    pending_retry = 0                # scheduled _RETRY events outstanding
+    led = cursor.ledger
+    if ov is not None:
+        gauge = WaitGauge(controller, cluster)
+        if not gauge.supported:
+            # admission/brownout need the controller's QLM estimators;
+            # shedding and retries still work without them
+            ov_adm = None
+            ov_brown = None
+        if ov_brown is not None:
+            brownout = BrownoutState()
+    if ov_adm is not None:
+        # the admission gate must see every arrival before placement —
+        # disable the zero-queuing arrival fast path (routing still
+        # drains the queue on the same event)
+        route_arrival = None
+        route_burst = None
+
     queue_push = queue.push
     heappush = heapq.heappush
     heappop = heapq.heappop
@@ -487,7 +528,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
     # state mutations — admit/evict/provision — which the micro-loop
     # reaches through the same routing calls as the full scan)
     inner_on = (route_burst is not None and route_interactive is not None
-                and shadow is None and not timing and quantize == 0)
+                and shadow is None and not timing and quantize == 0
+                and ov is None)
 
     fail_rng = None
     if failures is not None:
@@ -524,13 +566,92 @@ def simulate_events(requests: RequestSource, controller: BaseController,
         last_sample_t = now
         next_timeline = now + timeline_every
 
+    def _maybe_retry(req: Request, now: float) -> None:
+        """Schedule the client's next attempt for a rejected/shed request
+        (jittered exponential backoff, abandoned past the retry budget).
+        The object/ledger row stays terminal until the attempt lands."""
+        nonlocal pending_retry
+        if ov_retry is None:
+            return
+        attempt = req.retries + 1
+        if attempt > ov_retry.max_retries:
+            return
+        key = req.row if req.row >= 0 else req.req_id
+        when = now + ov_retry.backoff(key, attempt)
+        if when > req.arrival_time + ov_retry.budget:
+            return
+        led.bump_retry(req)
+        pending_retry += 1
+        heappush(heap, (when, _RETRY, next(ev_seq), req, 0))
+
+    def _admit(req: Request, now: float) -> bool:
+        """Admission gate (arrivals and retry re-arrivals): queue the
+        request, or refuse it as REJECTED when its estimated wait at max
+        budget already blows the TTFT SLO — no autoscaling decision could
+        save it (QLM-style infeasibility)."""
+        if req.is_interactive:
+            budget_w = ov_adm.slack * req.slo.ttft
+            wait = gauge.wait(queue, req.model)
+            if wait > budget_w:
+                led.mark_rejected(req)
+                if rec is not None:
+                    rec.record_reject(cluster, now, req.model, wait,
+                                      budget_w)
+                _maybe_retry(req, now)
+                return False
+        queue_push(req)
+        return True
+
+    def _overload_tick(now: float) -> None:
+        """Control-tick overload pass: brownout hysteresis first (an
+        entering tick sheds proactively below), then the vectorized
+        deadline sweep over the interactive lanes. Batch lanes are never
+        touched — batch work defers, it does not drop."""
+        if brownout is not None:
+            flip = brownout.update(
+                is_overloaded(cluster, queue, gauge, ov_brown), ov_brown)
+            if flip is not None:
+                controller.brownout_active = flip
+                if rec is not None:
+                    rec.record_brownout(cluster, now, flip,
+                                        queue.n_interactive,
+                                        ov_brown.queue_min)
+                if flip:
+                    controller.brownout_preempt_batch(cluster, queue, now)
+        if ov_shed is not None and queue._icount:
+            wbm = None
+            if brownout is not None and brownout.engaged \
+                    and gauge is not None and gauge.supported:
+                # brownout sheds proactively: entries that cannot reach
+                # service before their deadline at the estimated
+                # per-request drain rate are dropped now, not at expiry
+                wbm = {m: gauge.per_request_wait(m)
+                       for m in queue.interactive_models()}
+            expired, shed = queue.sweep_interactive(
+                now, grace=ov_shed.grace, wait_by_model=wbm)
+            for req in expired:
+                led.mark_expired(req)
+            for req in shed:
+                led.mark_shed(req)
+                _maybe_retry(req, now)
+            if rec is not None:
+                for reqs, hook in ((expired, rec.record_expire),
+                                   (shed, rec.record_shed)):
+                    counts: Dict[str, int] = {}
+                    for req in reqs:
+                        counts[req.model] = counts.get(req.model, 0) + 1
+                    for m in sorted(counts):
+                        hook(cluster, now, m, counts[m])
+
     t_arr = cursor.peek_time()
 
     predrain = quantize == 0
 
     while True:
-        # ---- termination: all requests arrived, none queued or running
-        if t_arr == _INF and cluster.total_running == 0 and len(queue) == 0:
+        # ---- termination: all requests arrived, none queued or running,
+        # and no client retry is still in backoff
+        if t_arr == _INF and cluster.total_running == 0 \
+                and len(queue) == 0 and pending_retry == 0:
             break
 
         # ---- stale completion estimates (superseded by a newer epoch, or
@@ -606,6 +727,11 @@ def simulate_events(requests: RequestSource, controller: BaseController,
             changed = True
             if fast and route_burst is not None:
                 route_burst(cluster, queue, cohort, t, observe_arrival)
+            elif ov_adm is not None:
+                for req in cohort:
+                    if observe_arrival is not None:
+                        observe_arrival(req, t)
+                    _admit(req, t)
             else:
                 for req in cohort:
                     if observe_arrival is not None:
@@ -738,6 +864,23 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                 if rec is not None:
                     rec.record_flash_crowd(cluster, t, inst.model)
                 changed = True
+            elif kind == _RETRY:
+                # client retry re-arrival (payload: the Request): the
+                # attempt re-enters the lifecycle with a fresh per-attempt
+                # deadline, counts as observed demand (retry storms
+                # inflate the forecast — that is the point), and faces
+                # the admission gate again
+                req = inst
+                pending_retry -= 1
+                if observe_arrival is not None:
+                    observe_arrival(req, t)
+                req.deadline_at = t + req.slo.ttft
+                led.mark_queued(req)
+                if ov_adm is not None:
+                    _admit(req, t)
+                else:
+                    queue_push(req)
+                changed = True
             elif epoch == inst._epoch and inst.state == InstanceState.ACTIVE:
                 inst.advance(t)
                 freed.append(inst)
@@ -762,6 +905,8 @@ def simulate_events(requests: RequestSource, controller: BaseController,
                 shadow.verify_cluster(cluster)
                 shadow.verify_queue(queue)
                 shadow.maybe_verify_ledger(cursor.ledger, cursor.all, t)
+            if ov is not None:
+                _overload_tick(t)
             pre = (len(cluster.instances), cluster.scale_ups,
                    cluster.scale_downs)
             controller.control(cluster, queue, t)
@@ -1066,11 +1211,12 @@ def simulate(requests: RequestSource, controller: BaseController,
              degradations: Optional[DegradationPlan] = None,
              outages=None,
              flash_crowds=None,
-             telemetry=None) -> RunResult:
+             telemetry=None,
+             overload: Optional[OverloadConfig] = None) -> RunResult:
     """Compatibility wrapper: dispatch to the event-driven core (default)
     or the fixed-tick reference (``engine="fixed"``, where ``dt`` applies;
-    failure/degradation/outage injection and flight-recorder telemetry
-    need the event core).
+    failure/degradation/outage injection, flight-recorder telemetry, and
+    the overload control plane need the event core).
     """
     if engine == "event":
         return simulate_events(requests, controller, cluster,
@@ -1079,13 +1225,15 @@ def simulate(requests: RequestSource, controller: BaseController,
                                timeline_every=timeline_every,
                                failures=failures, degradations=degradations,
                                outages=outages, flash_crowds=flash_crowds,
-                               telemetry=telemetry)
+                               telemetry=telemetry, overload=overload)
     if engine == "fixed":
         if failures is not None or degradations is not None \
                 or outages is not None or flash_crowds is not None:
             raise ValueError("failure injection requires engine='event'")
         if telemetry:
             raise ValueError("telemetry requires engine='event'")
+        if overload is not None and overload.active:
+            raise ValueError("overload control requires engine='event'")
         return simulate_fixed_tick(requests, controller, cluster, dt=dt,
                                    control_interval=control_interval,
                                    max_time=max_time, warm_start=warm_start,
@@ -1106,6 +1254,7 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                    reference: bool = False,
                    shadow_verify=None,
                    telemetry=None,
+                   overload: Optional[OverloadConfig] = None,
                    phase_timers=None) -> RunResult:
     """Multi-cluster event loop: one shared heap drives every cluster in a
     :class:`repro.sim.fleet.Fleet`, each with its own queue and Chiron
@@ -1132,16 +1281,49 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     :class:`repro.obs.FlightRecorder` spans the fleet — clusters are
     registered under their fleet names, and tier-3 placement actions
     (migrations, hand-backs, drains) land in the decision ledger
-    alongside every cluster's own Chiron actions."""
+    alongside every cluster's own Chiron actions.
+
+    ``overload`` arms the per-cluster overload plane (admission at each
+    destination queue, deadline sweeps, client retries re-routed through
+    the Router, per-cluster brownout) — and, when the fleet's Router
+    carries a :class:`repro.sim.overload.BreakerConfig`, feeds each
+    cluster's admission outcomes into its circuit breaker so routing
+    deflects around clusters whose rejection-rate EWMA tripped."""
     from repro.analysis.shadow import resolve as _shadow_resolve
     from repro.obs.recorder import resolve as _obs_resolve
     shadow = _shadow_resolve(shadow_verify)
     rec = _obs_resolve(telemetry)
+    ov = overload if overload is not None and overload.active else None
+    if ov is not None and reference:
+        raise ValueError("overload control requires the columnar engine "
+                         "(reference=True is the pre-overload baseline)")
     cursor = _RequestCursor(requests)
     clusters = list(fleet.clusters)
     by_sim = {id(fc.cluster): fc for fc in clusters}
     t = 0.0
     use_memo = not reference
+
+    # ---- overload control plane (all off when ov is None) ----
+    ov_adm = ov.admission if ov is not None else None
+    ov_shed = ov.shedding if ov is not None else None
+    ov_retry = ov.retry if ov is not None else None
+    ov_brown = ov.brownout if ov is not None else None
+    pending_retry = 0
+    led = cursor.ledger
+    gauges: Dict[int, WaitGauge] = {}
+    brownouts: Dict[int, BrownoutState] = {}
+    if ov is not None:
+        for fc in clusters:
+            g = WaitGauge(fc.controller, fc.cluster)
+            if g.supported:
+                gauges[id(fc)] = g
+        if not gauges:
+            ov_adm = None
+            ov_brown = None
+        if ov_brown is not None:
+            for fc in clusters:
+                if id(fc) in gauges:
+                    brownouts[id(fc)] = BrownoutState()
     if rec is not None:
         fleet.obs = rec
     for fc in clusters:
@@ -1207,7 +1389,41 @@ def simulate_fleet(requests: RequestSource, fleet, *,
         heappush(heap, (t + max(delay, 0.0), _WARM,
                         next(ev_seq), payload, 0))
 
+    def _maybe_retry(req: Request, now: float) -> None:
+        """Schedule the client's next attempt (fleet flavour: the retry
+        re-routes through the Router, so an open breaker deflects it)."""
+        nonlocal pending_retry
+        if ov_retry is None:
+            return
+        attempt = req.retries + 1
+        if attempt > ov_retry.max_retries:
+            return
+        key = req.row if req.row >= 0 else req.req_id
+        when = now + ov_retry.backoff(key, attempt)
+        if when > req.arrival_time + ov_retry.budget:
+            return
+        led.bump_retry(req)
+        pending_retry += 1
+        heappush(heap, (when, _RETRY, next(ev_seq), req, 0))
+
     def _enqueue(fc, req: Request, now: float) -> None:
+        if ov_adm is not None and req.is_interactive:
+            g = gauges.get(id(fc))
+            if g is not None:
+                budget_w = ov_adm.slack * req.slo.ttft
+                wait = g.wait(fc.queue, req.model)
+                rejected = wait > budget_w
+                trans = fleet.router.note_admission(fc, rejected, now)
+                if trans is not None and rec is not None:
+                    rec.record_breaker(now, fc.name, trans[0], trans[1],
+                                      fleet.router.breaker.open_threshold)
+                if rejected:
+                    led.mark_rejected(req)
+                    if rec is not None:
+                        rec.record_reject(fc.cluster, now, req.model,
+                                          wait, budget_w)
+                    _maybe_retry(req, now)
+                    return
         fc.queue.push(req)
         fc.controller.observe_arrival(req, now)
 
@@ -1220,6 +1436,44 @@ def simulate_fleet(requests: RequestSource, fleet, *,
             pending_net += 1
         else:
             _enqueue(fc, req, now)
+
+    def _overload_tick_fc(fc, now: float) -> None:
+        """Per-cluster control-tick overload pass (brownout hysteresis,
+        then the vectorized interactive deadline sweep)."""
+        g = gauges.get(id(fc))
+        bstate = brownouts.get(id(fc))
+        if bstate is not None and g is not None:
+            flip = bstate.update(
+                is_overloaded(fc.cluster, fc.queue, g, ov_brown), ov_brown)
+            if flip is not None:
+                fc.controller.brownout_active = flip
+                if rec is not None:
+                    rec.record_brownout(fc.cluster, now, flip,
+                                        fc.queue.n_interactive,
+                                        ov_brown.queue_min)
+                if flip:
+                    fc.controller.brownout_preempt_batch(fc.cluster,
+                                                         fc.queue, now)
+        if ov_shed is not None and fc.queue._icount:
+            wbm = None
+            if bstate is not None and bstate.engaged and g is not None:
+                wbm = {m: g.per_request_wait(m)
+                       for m in fc.queue.interactive_models()}
+            expired, shed = fc.queue.sweep_interactive(
+                now, grace=ov_shed.grace, wait_by_model=wbm)
+            for req in expired:
+                led.mark_expired(req)
+            for req in shed:
+                led.mark_shed(req)
+                _maybe_retry(req, now)
+            if rec is not None:
+                for reqs, hook in ((expired, rec.record_expire),
+                                   (shed, rec.record_shed)):
+                    counts: Dict[str, int] = {}
+                    for req in reqs:
+                        counts[req.model] = counts.get(req.model, 0) + 1
+                    for m in sorted(counts):
+                        hook(fc.cluster, now, m, counts[m])
 
     def _all_active():
         # merged per-cluster active registries, id-ordered (deterministic
@@ -1259,8 +1513,9 @@ def simulate_fleet(requests: RequestSource, fleet, *,
     t_arr = cursor.peek_time()
 
     while True:
-        # ---- termination: everything arrived, landed, and finished
-        if t_arr == _INF and pending_net == 0 and \
+        # ---- termination: everything arrived, landed, and finished,
+        # and no client retry is still in backoff
+        if t_arr == _INF and pending_net == 0 and pending_retry == 0 and \
                 all(len(fc.queue) == 0 and fc.cluster.total_running == 0
                     for fc in clusters):
             break
@@ -1448,6 +1703,18 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                     rec.record_flash_crowd(clusters[0].cluster, t,
                                            payload.model)
                 changed = True
+            elif kind == _RETRY:
+                # client retry re-arrival: fresh per-attempt deadline,
+                # observed as demand, re-routed through the Router (an
+                # open breaker deflects it to a healthy cluster at the
+                # price of the network hop)
+                req = payload
+                pending_retry -= 1
+                fleet.observe_arrival(req, t)
+                req.deadline_at = t + req.slo.ttft
+                led.mark_queued(req)
+                _dispatch(req, t)
+                changed = True
             else:                        # completion estimate
                 inst = payload
                 if epoch == inst._epoch \
@@ -1476,6 +1743,8 @@ def simulate_fleet(requests: RequestSource, fleet, *,
                 if shadow is not None:
                     shadow.verify_cluster(fc.cluster)
                     shadow.verify_queue(fc.queue)
+                if ov is not None:
+                    _overload_tick_fc(fc, t)
                 pre += len(fc.cluster.instances) + fc.cluster.scale_ups \
                     + fc.cluster.scale_downs
                 fc.controller.control(fc.cluster, fc.queue, t)

@@ -57,6 +57,7 @@ _ALIASES: Dict[str, Sequence[str]] = {
     "model": ("model", "model_name", "deployment"),
     "origin": ("origin", "origin_region", "region", "source_region"),
     "tenant": ("tenant", "tenant_id", "customer", "account"),
+    "attempt": ("attempt", "retries", "retry_attempt", "attempts"),
 }
 
 _INTERACTIVE_WORDS = {"1", "true", "interactive", "chat", "conversation"}
@@ -87,14 +88,21 @@ def save_trace(trace: Trace, path: str) -> None:
     models = trace.models
     origins = trace.origins
     tenants = trace.tenants
+    # retry-attempt column only when it carries information — a fresh
+    # trace round-trips to the byte-identical file it always did
+    attempt = trace.attempt
+    if attempt is not None and not attempt.any():
+        attempt = None
+    att_col = attempt.tolist() if attempt is not None \
+        else [0] * trace.n
     cols = zip(trace.arrival.tolist(), trace.prompt_len.tolist(),
                trace.output_len.tolist(), trace.interactive.tolist(),
                trace.ttft_slo.tolist(), trace.itl_slo.tolist(),
                trace.model_idx.tolist(), trace.origin_idx.tolist(),
-               trace.tenant_idx.tolist())
+               trace.tenant_idx.tolist(), att_col)
     with _open(path, "w") as f:
         if _fmt_path(path).endswith(".jsonl"):
-            for t, p, o, c, tt, il, m, g, tn in cols:
+            for t, p, o, c, tt, il, m, g, tn, a in cols:
                 row = {"arrival": t, "prompt_len": p, "output_len": o,
                        "interactive": bool(c), "ttft_slo": tt,
                        "itl_slo": il, "model": models[m]}
@@ -102,6 +110,8 @@ def save_trace(trace: Trace, path: str) -> None:
                     row["origin"] = origins[g]
                 if tenants:
                     row["tenant"] = tenants[tn]
+                if attempt is not None:
+                    row["attempt"] = a
                 f.write(json.dumps(row) + "\n")
         else:
             w = csv.writer(f, lineterminator="\n")   # RFC-4180 quoting
@@ -111,13 +121,17 @@ def save_trace(trace: Trace, path: str) -> None:
                 header.append("origin")
             if tenants:
                 header.append("tenant")
+            if attempt is not None:
+                header.append("attempt")
             w.writerow(header)
-            for t, p, o, c, tt, il, m, g, tn in cols:
+            for t, p, o, c, tt, il, m, g, tn, a in cols:
                 row = [repr(t), p, o, int(c), repr(tt), repr(il), models[m]]
                 if origins:
                     row.append(origins[g])
                 if tenants:
                     row.append(tenants[tn])
+                if attempt is not None:
+                    row.append(a)
                 w.writerow(row)
 
 
@@ -180,6 +194,13 @@ def _columns_to_trace(cols: Dict[str, List], n: int, *,
         tenant_idx = np.asarray(tenant_idx, dtype=np.int32)
     else:
         tenants, tenant_idx = (), None
+    if "attempt" in cols:
+        attempt = np.asarray(cols["attempt"],
+                             dtype=np.float64).astype(np.int32)
+        if not attempt.any():
+            attempt = None
+    else:
+        attempt = None
     # make_trace owns the class-mask SLO defaulting and the sort — one
     # rule for generated and loaded traces alike
     return make_trace(arrival, prompt, output, interactive,
@@ -187,7 +208,8 @@ def _columns_to_trace(cols: Dict[str, List], n: int, *,
                       batch_ttft_slo=batch_ttft_slo,
                       model_idx=model_idx, models=models,
                       origin_idx=origin_idx, origins=origins,
-                      tenant_idx=tenant_idx, tenants=tenants)
+                      tenant_idx=tenant_idx, tenants=tenants,
+                      attempt=attempt)
 
 
 def _read_columns(rows):

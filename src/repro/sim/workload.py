@@ -26,6 +26,10 @@ Trace schema (one row per request):
   tenant_idx   int32    index into ``tenants`` (paying tenants for
                         per-tenant attainment; empty ``tenants`` =
                         single-tenant workload)
+  attempt      int32    optional: client retry attempts already consumed
+                        before this submission (``None`` = fresh trace;
+                        replayed overload traces carry the column so the
+                        retry budget keeps counting across a round-trip)
 
 ``repro.sim.trace_io`` round-trips this schema to CSV/JSONL (including
 Azure-LLM-inference-style traces) and streams multi-day files in
@@ -78,6 +82,7 @@ class Trace:
     origins: Tuple[str, ...] = ()
     tenant_idx: Optional[np.ndarray] = None   # None/empty tenants = no column
     tenants: Tuple[str, ...] = ()
+    attempt: Optional[np.ndarray] = None      # None = no retry history
 
     def __post_init__(self):
         self.arrival = np.asarray(self.arrival, dtype=np.float64)
@@ -97,6 +102,11 @@ class Trace:
         if self.tenant_idx is None:
             self.tenant_idx = np.zeros(n, dtype=np.int32)
         self.tenant_idx = np.asarray(self.tenant_idx, dtype=np.int32)
+        if self.attempt is not None:
+            self.attempt = np.asarray(self.attempt, dtype=np.int32)
+            if self.attempt.shape != (n,):
+                raise ValueError(f"Trace column 'attempt' has shape "
+                                 f"{self.attempt.shape}, want ({n},)")
         for name in ("prompt_len", "output_len", "interactive",
                      "ttft_slo", "itl_slo", "model_idx", "origin_idx",
                      "tenant_idx"):
@@ -138,7 +148,8 @@ class Trace:
                      self.ttft_slo[idx], self.itl_slo[idx],
                      self.model_idx[idx], self.models,
                      self.origin_idx[idx], self.origins,
-                     self.tenant_idx[idx], self.tenants)
+                     self.tenant_idx[idx], self.tenants,
+                     None if self.attempt is None else self.attempt[idx])
 
     def head(self, n: int) -> "Trace":
         return self.take(slice(0, n))
@@ -172,6 +183,13 @@ class Trace:
                                   [t.tenant_idx for t in traces])
         else:
             tenants, tidx = (), [t.tenant_idx for t in traces]
+        # attempt folds in as zeros for history-less traces
+        if any(t.attempt is not None for t in traces):
+            attempt = np.concatenate(
+                [t.attempt if t.attempt is not None
+                 else np.zeros(t.n, dtype=np.int32) for t in traces])
+        else:
+            attempt = None
         return Trace(
             np.concatenate([t.arrival for t in traces]),
             np.concatenate([t.prompt_len for t in traces]),
@@ -181,7 +199,7 @@ class Trace:
             np.concatenate([t.itl_slo for t in traces]),
             np.concatenate(midx), models,
             np.concatenate(oidx), origins,
-            np.concatenate(tidx), tenants)
+            np.concatenate(tidx), tenants, attempt)
 
     # ----------------------------------------------------- materialization
     def materialize(self, lo: int = 0, hi: Optional[int] = None, *,
@@ -252,6 +270,14 @@ class Trace:
             if tenants:
                 r.__dict__["tenant"] = tenants[tn]
             append(r)
+        if self.attempt is not None:
+            # pre-consumed retry attempts (replayed overload trace):
+            # only nonzero cells need an instance entry — zero reads
+            # fall through to the class default
+            for r, a in zip(out, self.attempt[lo:hi].tolist()):
+                if a:
+                    # mirror-sync: ok(no ledger exists yet - from_trace seeds the column from this array)
+                    r.retries = a
         return out
 
     @classmethod
@@ -276,6 +302,7 @@ class Trace:
                 if tenant not in tenants:
                     tenants.append(tenant)
                 tidx[i] = tenants.index(tenant)
+        attempt = np.array([r.retries for r in reqs], dtype=np.int32)
         return cls(
             np.array([r.arrival_time for r in reqs], dtype=np.float64),
             np.array([r.prompt_len for r in reqs], dtype=np.int64),
@@ -285,7 +312,8 @@ class Trace:
             np.array([r.slo.itl for r in reqs], dtype=np.float64),
             midx, tuple(models) or (DEFAULT_MODEL,),
             oidx, tuple(origins),
-            tidx, tuple(tenants))
+            tidx, tuple(tenants),
+            attempt if attempt.any() else None)
 
 
 def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
@@ -299,6 +327,7 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
                origins: Sequence[str] = (),
                tenant_idx: Optional[np.ndarray] = None,
                tenants: Sequence[str] = (),
+               attempt: Optional[np.ndarray] = None,
                sort: bool = True) -> Trace:
     """Assemble a Trace from columns, filling SLO columns from the class
     mask (interactive -> paper defaults; batch -> ``batch_ttft_slo``)."""
@@ -317,7 +346,7 @@ def make_trace(arrival: np.ndarray, prompt_len: np.ndarray,
     tr = Trace(arrival, prompt_len, output_len, interactive,
                ttft_slo, itl_slo, model_idx, tuple(models),
                origin_idx, tuple(origins),
-               tenant_idx, tuple(tenants))
+               tenant_idx, tuple(tenants), attempt)
     return tr.sorted_by_arrival() if sort else tr
 
 

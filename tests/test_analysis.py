@@ -85,6 +85,39 @@ def test_mir102_container_write_needs_sync():
     assert not clean
 
 
+# ---------------------------------------------------------------- MIR104
+def test_mir104_terminal_write_needs_matching_terminal_column():
+    # a FINISHED column write satisfies MIR101's pairing but not MIR104's
+    # same-terminal requirement: the object says REJECTED, the column says
+    # FINISHED — the overload accounting identity would silently drift
+    findings = _analyze("""\
+        def refuse(req, led):
+            req.state = RequestState.REJECTED
+            led.state[req.row] = FINISHED
+    """)
+    assert ("MIR104", 2) in _rules(findings)
+    assert not [f for f in findings if f.rule == "MIR101"]
+
+
+def test_mir104_paired_terminal_write_is_clean():
+    for term in ("REJECTED", "SHED", "EXPIRED", "FINISHED"):
+        findings = _analyze(f"""\
+            def drop(req, led):
+                req.state = RequestState.{term}
+                led.state[req.row] = {term}
+        """)
+        assert not [f for f in findings if f.rule == "MIR104"]
+
+
+def test_mir104_suppression_comment():
+    findings = _analyze("""\
+        def refuse(req, led):
+            req.state = RequestState.SHED  # mirror-sync: ok(test)
+            led.state[req.row] = FINISHED
+    """)
+    assert not [f for f in findings if f.rule == "MIR104"]
+
+
 def test_mir_rules_scoped_to_sim_and_serving():
     code = """\
         def finish(req):
@@ -271,7 +304,9 @@ def test_rules_filter_selects_by_prefix():
             req.state = RequestState.FINISHED
     """
     only_mir = _analyze(code, rules=["MIR"])
-    assert {f.rule for f in only_mir} == {"MIR101"}
+    # the bare terminal write trips both the pairing rule (MIR101) and
+    # the same-terminal rule (MIR104)
+    assert {f.rule for f in only_mir} == {"MIR101", "MIR104"}
     only_lint = _analyze(code, rules=["LINT301"])
     assert {f.rule for f in only_lint} == {"LINT301"}
 

@@ -1,0 +1,330 @@
+"""Overload control plane: SLO-aware admission, deadline shedding vs.
+batch deferral, deterministic client retries, brownout hysteresis, fleet
+circuit breakers, goodput accounting, and the attempt column's trace-IO
+round trip. The plane is opt-in — the last tests pin the disabled path
+bit-identical to a run predating the module."""
+import numpy as np
+import pytest
+
+from repro.serving.request import RequestType
+from repro.sim.cluster import SimCluster
+from repro.sim.controllers import ChironController
+from repro.sim.fleet import ClusterSpec, Fleet, FleetTopology, Region, Router
+from repro.sim.ledger import (EXPIRED, FINISHED, REJECTED, SHED,
+                              RequestLedger)
+from repro.sim.overload import (BRK_CLOSED, BRK_HALF_OPEN, BRK_OPEN,
+                                AdmissionConfig, BreakerConfig,
+                                BrownoutConfig, BrownoutState,
+                                CircuitBreaker, OverloadConfig, RetryPolicy)
+from repro.sim.scenarios import build_trace
+from repro.sim.simulator import (default_perf_factory, simulate,
+                                 simulate_events, simulate_fleet)
+from repro.sim.trace_io import load_trace, save_trace
+from repro.sim.workload import Trace, make_trace
+
+MODEL = "llama-8b"
+
+
+def _storm_trace(n=400, rate=80.0, seed=3, *, ttft_slo=3.0):
+    """Sustained saturation: heavy near-constant tokens at an arrival
+    rate far past what 4 chips can serve within a tight TTFT SLO."""
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.uniform(0.0, n / rate, n))
+    ins = np.clip(rng.lognormal(np.log(1500.0), 0.25, n),
+                  64, 8192).astype(np.int64)
+    outs = np.clip(rng.lognormal(np.log(400.0), 0.25, n),
+                   16, 2048).astype(np.int64)
+    return make_trace(t, ins, outs, np.ones(n, dtype=bool),
+                      ttft_slo=ttft_slo)
+
+
+def _run_storm(overload, *, n=400, seed=3, telemetry=None,
+               shadow_verify=None, max_chips=4):
+    trace = _storm_trace(n=n, seed=seed)
+    cluster = SimCluster(default_perf_factory(), max_chips=max_chips)
+    return simulate_events(trace, ChironController(), cluster,
+                           max_time=trace.duration + 600.0,
+                           overload=overload, telemetry=telemetry,
+                           shadow_verify=shadow_verify)
+
+
+# ------------------------------------------------------------ retry policy
+def test_retry_backoff_deterministic_and_bounded():
+    pol = RetryPolicy(base_backoff=2.0, jitter=0.5)
+    for row in (0, 7, 123456):
+        for k in (1, 2, 3):
+            base = 2.0 * 2.0 ** (k - 1)
+            d = pol.backoff(row, k)
+            assert d == pol.backoff(row, k)          # pure counter hash
+            assert base <= d < base * 1.5
+    # different rows decorrelate: not all first-attempt delays collide
+    assert len({pol.backoff(r, 1) for r in range(16)}) > 8
+
+
+def test_retry_backoff_no_jitter_is_pure_exponential():
+    pol = RetryPolicy(base_backoff=1.0, jitter=0.0)
+    assert [pol.backoff(5, k) for k in (1, 2, 3)] == [1.0, 2.0, 4.0]
+
+
+# ------------------------------------------------------------ brownout FSM
+def test_brownout_hysteresis_enter_and_exit():
+    cfg = BrownoutConfig(enter_ticks=3, exit_ticks=2, queue_min=1)
+    st = BrownoutState()
+    assert st.update(True, cfg) is None
+    assert st.update(True, cfg) is None
+    assert st.update(True, cfg) is True           # 3rd hot tick enters
+    assert st.engaged
+    assert st.update(False, cfg) is None
+    assert st.update(True, cfg) is None           # healthy streak resets
+    assert st.update(False, cfg) is None
+    assert st.update(False, cfg) is False         # 2nd cool tick exits
+    assert not st.engaged
+
+
+def test_brownout_hot_streak_resets_on_healthy_tick():
+    cfg = BrownoutConfig(enter_ticks=3, exit_ticks=5)
+    st = BrownoutState()
+    for _ in range(10):                           # alternating never enters
+        assert st.update(True, cfg) is None
+        assert st.update(True, cfg) is None
+        assert st.update(False, cfg) is None
+    assert not st.engaged
+
+
+# -------------------------------------------------------- circuit breaker
+def test_breaker_opens_half_opens_and_closes():
+    cfg = BreakerConfig(ewma_alpha=0.5, open_threshold=0.5, cooldown=30.0,
+                        trial_successes=2, min_samples=3)
+    brk = CircuitBreaker(cfg)
+    t = 0.0
+    assert brk.record(True, t) is None            # below min_samples
+    assert brk.record(True, t) is None
+    assert brk.record(True, t) == BRK_OPEN        # EWMA 1.0 > 0.5, trips
+    assert not brk.allows(t + 10.0)               # still cooling down
+    assert brk.allows(t + 30.0)                   # cooldown -> half-open
+    assert brk.state == BRK_HALF_OPEN
+    assert brk.record(False, t + 31.0) is None    # 1st trial accept
+    assert brk.record(False, t + 32.0) == BRK_CLOSED
+    assert brk.samples == 0                       # fresh slate after close
+
+
+def test_breaker_half_open_rejection_reopens():
+    cfg = BreakerConfig(open_threshold=0.5, cooldown=10.0, min_samples=1,
+                        ewma_alpha=1.0)
+    brk = CircuitBreaker(cfg)
+    assert brk.record(True, 0.0) == BRK_OPEN
+    assert brk.allows(10.0)                       # half-open trial
+    assert brk.record(True, 10.5) == BRK_OPEN     # trial reject reopens
+    assert not brk.allows(15.0)                   # new cooldown from 10.5
+    assert brk.allows(20.5)
+
+
+def test_router_breaker_deflects_to_healthy_cluster():
+    specs = [ClusterSpec("us-a", "us", max_chips=40),
+             ClusterSpec("us-b", "us", max_chips=40)]
+    topo = FleetTopology([Region("us")])
+    router = Router(breaker=BreakerConfig(open_threshold=0.5,
+                                          min_samples=2, ewma_alpha=1.0,
+                                          cooldown=30.0))
+    fleet = Fleet(specs, topo, models=(MODEL,), router=router)
+    a, b = fleet.by_name["us-a"], fleet.by_name["us-b"]
+    assert router._pick_interactive(MODEL, "us", 0.0).name == "us-a"
+    router.note_admission(a, True, 0.0)
+    trans = router.note_admission(a, True, 0.0)
+    assert trans is not None and trans[0] == BRK_OPEN
+    # open breaker on us-a: interactive and batch both deflect to us-b
+    assert router._pick_interactive(MODEL, "us", 1.0).name == "us-b"
+    assert router._pick_batch(MODEL, 1.0).name == "us-b"
+    # every breaker open -> route anyway rather than dropping on the floor
+    router.note_admission(b, True, 1.0)
+    router.note_admission(b, True, 1.0)
+    assert router.breaker_for(b).state == BRK_OPEN
+    assert router._pick_interactive(MODEL, "us", 2.0) is not None
+    # after the cooldown us-a half-opens and takes trial traffic again
+    assert router._pick_interactive(MODEL, "us", 31.0).name == "us-a"
+    assert router.breaker_for(a).state == BRK_HALF_OPEN
+
+
+# ------------------------------------------------------------- engine gates
+def test_inert_config_and_engine_gates():
+    assert not OverloadConfig().active
+    assert OverloadConfig.full().active
+    trace = _storm_trace(n=40)
+    cluster = SimCluster(default_perf_factory(), max_chips=4)
+    with pytest.raises(ValueError, match="columnar"):
+        simulate_events(trace, ChironController(), cluster, max_time=60.0,
+                        reference=True, overload=OverloadConfig.full())
+    with pytest.raises(ValueError, match="engine='event'"):
+        simulate(trace, ChironController(), cluster, engine="fixed",
+                 max_time=60.0, overload=OverloadConfig.full())
+    trace2, kw = build_trace("multi_region", n_requests=60, seed=7)
+    with pytest.raises(ValueError, match="columnar"):
+        simulate_fleet(trace2, kw["fleet"](), max_time=kw["max_time"],
+                       reference=True, overload=OverloadConfig.full())
+
+
+# --------------------------------------------------------- storm end-to-end
+def test_storm_admission_rejects_and_accounting_identity():
+    res = _run_storm(OverloadConfig.full(slack=0.3, max_retries=3,
+                                         base_backoff=2.0, budget=30.0),
+                     n=600, telemetry=True)
+    led = res.ledger
+    counts = led.state_counts()
+    assert counts[REJECTED] > 0                   # admission refused work
+    assert counts[SHED] + counts[EXPIRED] > 0     # sweeps fired too
+    # the terminal accounting identity over a completed run
+    assert (int(counts[FINISHED]) + int(counts[REJECTED])
+            + int(counts[SHED]) + int(counts[EXPIRED])) == led.n
+    s = res.summary()
+    for key in ("goodput", "goodput_interactive", "reject_rate",
+                "shed_rate", "expired_rate"):
+        assert key in s
+    assert s["reject_rate"] > 0.0
+    assert 0.0 <= s["reject_rate"] + s["shed_rate"] + s["expired_rate"] <= 1.0
+    # every refusal is stamped into the obs decision ledger: at least one
+    # reject row per terminally-rejected request (retried attempts that
+    # were refused again add more)
+    rep = res.telemetry.replay()
+    assert rep["rejections"] >= int(counts[REJECTED]) > 0
+
+
+def test_storm_retries_reattempt_and_respect_budget():
+    res = _run_storm(OverloadConfig.full(slack=0.3, max_retries=3,
+                                         base_backoff=2.0, budget=30.0))
+    led = res.ledger
+    assert int(led.retries.sum()) > 0             # clients actually retried
+    assert int(led.retries.max()) <= 3
+    # a retried request that eventually ran counts toward throughput
+    served_after_retry = np.flatnonzero((led.retries > 0)
+                                        & (led.state == FINISHED))
+    assert served_after_retry.size >= 0           # may be zero under storm
+
+
+def test_batch_is_deferred_never_dropped():
+    trace, kw = build_trace("graceful_brownout", n_requests=600, seed=0)
+    cluster = SimCluster(default_perf_factory(),
+                         max_chips=kw["max_chips"])
+    res = simulate_events(trace, ChironController(), cluster,
+                          max_time=kw["max_time"],
+                          overload=kw["overload"])
+    led = res.ledger
+    dropped = np.isin(led.state, (REJECTED, SHED, EXPIRED))
+    assert dropped.any()                          # the plane engaged
+    batch = ~led.interactive.astype(bool)
+    assert not np.any(dropped & batch)            # batch only ever defers
+    assert np.all(led.state[batch] == FINISHED)
+
+
+def test_storm_goodput_beats_uncontrolled():
+    """The acceptance criterion: the overload plane holds interactive
+    goodput ≥20% above the control-disabled run on the same storm."""
+    trace, kw = build_trace("retry_storm", n_requests=600, seed=3)
+    cluster = SimCluster(default_perf_factory(), max_chips=kw["max_chips"])
+    on = simulate_events(trace, ChironController(), cluster,
+                         max_time=kw["max_time"], overload=kw["overload"])
+    trace2, kw2 = build_trace("retry_storm", n_requests=600, seed=3,
+                              overload_enabled=False)
+    cluster2 = SimCluster(default_perf_factory(),
+                          max_chips=kw2["max_chips"])
+    off = simulate_events(trace2, ChironController(), cluster2,
+                          max_time=kw2["max_time"])
+    gp_on = on.goodput(RequestType.INTERACTIVE)
+    gp_off = off.goodput(RequestType.INTERACTIVE)
+    assert gp_on >= gp_off * 1.2
+
+
+def test_storm_deterministic_across_observer_arms():
+    """Telemetry and shadow verification are observers: the per-request
+    outcomes must be bit-identical with them on, off, or both (compare
+    by ledger index — request ids are process-global)."""
+    def fingerprint(res):
+        led = res.ledger
+        return (led.state.tobytes(), led.retries.tobytes(),
+                led.finish_time.tobytes(),
+                led.first_token_time.tobytes())
+
+    cfg = OverloadConfig.full(slack=0.3, max_retries=3,
+                              base_backoff=2.0, budget=30.0)
+    plain = fingerprint(_run_storm(cfg, n=300))
+    again = fingerprint(_run_storm(cfg, n=300))
+    telem = fingerprint(_run_storm(cfg, n=300, telemetry=True))
+    shadow = fingerprint(_run_storm(cfg, n=300, shadow_verify=True))
+    both = fingerprint(_run_storm(cfg, n=300, telemetry=True,
+                                  shadow_verify=True))
+    assert plain == again == telem == shadow == both
+
+
+def test_disabled_plane_is_bit_identical_to_baseline():
+    """overload=None and an all-None OverloadConfig must both leave the
+    engine exactly on its pre-plane trajectory."""
+    trace, kw = build_trace("multi_region", n_requests=300, seed=7)
+    base = simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                          warm_start=1).summary()
+    inert = simulate_fleet(trace, kw["fleet"](), max_time=kw["max_time"],
+                           warm_start=1, overload=OverloadConfig()).summary()
+    assert inert == base
+    tr2 = _storm_trace(n=120, rate=10.0)
+    c1 = SimCluster(default_perf_factory(), max_chips=40)
+    c2 = SimCluster(default_perf_factory(), max_chips=40)
+    r1 = simulate_events(tr2, ChironController(), c1, max_time=300.0)
+    r2 = simulate_events(tr2, ChironController(), c2, max_time=300.0,
+                         overload=OverloadConfig())
+    assert r1.summary() == r2.summary()
+
+
+def test_goodput_counts_only_slo_met_finishes():
+    led = RequestLedger.from_trace(_storm_trace(n=4, rate=1.0))
+    # hand-mark: row 0 fast finish, row 1 slow finish, rows 2-3 dropped
+    led.state[:] = (FINISHED, FINISHED, REJECTED, EXPIRED)
+    led.first_token_time[:] = (led.arrival[0] + 0.1,
+                               led.arrival[1] + 99.0, np.nan, np.nan)
+    led.finish_time[:] = led.first_token_time + 1.0
+    assert int(led.goodput_mask().sum()) == 1
+    assert led.goodput(10.0) == pytest.approx(0.1)
+
+
+# --------------------------------------------------------- attempt column
+def _attempt_trace(n=30, seed=0):
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(0.2, n))
+    ins = np.full(n, 64, dtype=np.int64)
+    outs = np.full(n, 32, dtype=np.int64)
+    att = rng.integers(0, 3, n).astype(np.int32)
+    tidx = (rng.random(n) < 0.4).astype(np.int32)
+    return make_trace(times, ins, outs, np.ones(n, dtype=bool),
+                      attempt=att, tenant_idx=tidx,
+                      tenants=("acme", "globex"))
+
+
+@pytest.mark.parametrize("ext", ["csv", "jsonl", "csv.gz"])
+def test_attempt_and_tenant_columns_round_trip(tmp_path, ext):
+    tr = _attempt_trace()
+    path = str(tmp_path / f"t.{ext}")
+    save_trace(tr, path)
+    back = load_trace(path)
+    assert back.attempt is not None
+    np.testing.assert_array_equal(back.attempt, tr.attempt)
+    assert [back.tenants[i] for i in back.tenant_idx] \
+        == [tr.tenants[i] for i in tr.tenant_idx]
+
+
+def test_attemptless_trace_io_omits_column(tmp_path):
+    tr = make_trace(np.arange(10, dtype=np.float64),
+                    np.full(10, 64, dtype=np.int64),
+                    np.full(10, 32, dtype=np.int64),
+                    np.ones(10, dtype=bool))
+    path = str(tmp_path / "t.csv")
+    save_trace(tr, path)
+    with open(path) as f:
+        assert "attempt" not in f.readline()
+    assert load_trace(path).attempt is None
+
+
+def test_attempt_column_seeds_ledger_and_materialize():
+    tr = _attempt_trace()
+    led = RequestLedger.from_trace(tr)
+    np.testing.assert_array_equal(led.retries, tr.attempt)
+    reqs = tr.materialize()
+    assert [r.retries for r in reqs] == tr.attempt.tolist()
+    merged = Trace.concat([tr, _attempt_trace(seed=1)])
+    assert merged.attempt is not None and merged.n == 60
